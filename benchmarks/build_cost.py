@@ -1,0 +1,67 @@
+"""Paper Table 4: indexing time and index size, plus the beyond-paper
+bulk-build (wave) ablation.
+
+At container scale we report: single-threaded build time, bytes of the
+index (adjacency + weights + vectors — DEG's regularity makes this exactly
+predictable: n*(d*8 + dim*4) bytes), recall after build, and the
+wave-size trade-off quantified (DESIGN.md §2: bounded staleness vs. device
+dispatches).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.build import DEGParams, build_deg
+from repro.core.baselines.knng import build_knng
+from repro.core.baselines.nsw import NSWIndex
+from repro.core.invariants import check_invariants
+from repro.core.metrics import recall_at_k
+
+from .common import emit, make_bench_dataset
+
+
+def run(n: int = 4000, n_query: int = 200, dim: int = 32, k: int = 10,
+        degree: int = 16, seed: int = 0) -> dict:
+    ds = make_bench_dataset("synth-lowlid", n, n_query, dim, "low", k=k,
+                            seed=seed)
+    out = {}
+
+    def deg_size(idx):
+        return idx.n * (idx.builder.degree * 8 + ds.dim * 4)
+
+    for wave in (1, 16, 128):
+        t0 = time.time()
+        idx = build_deg(ds.base, DEGParams(degree=degree, k_ext=2 * degree,
+                                           eps_ext=0.2), wave_size=wave)
+        build_s = time.time() - t0
+        ok, msgs = check_invariants(idx.builder)
+        assert ok, msgs
+        res = idx.search(ds.queries, k=k, eps=0.1)
+        rec = recall_at_k(np.asarray(res.ids), ds.gt_ids)
+        emit("table4_deg", wave=wave, build_s=build_s,
+             index_bytes=deg_size(idx), recall=rec,
+             avg_nbr_dist=idx.builder.average_neighbor_distance())
+        out[f"deg_wave{wave}"] = (build_s, rec)
+
+    t0 = time.time()
+    kg = build_knng(ds.base, K=degree, iterations=6, seed=seed)
+    emit("table4_kgraph", wave=0, build_s=time.time() - t0,
+         index_bytes=int(np.asarray(kg.adjacency).nbytes
+                         + np.asarray(kg.weights).nbytes + ds.base.nbytes),
+         recall=float("nan"))
+
+    t0 = time.time()
+    nsw = NSWIndex(ds.dim, f=degree // 2, max_degree=3 * degree, capacity=n)
+    nsw.add(ds.base)
+    res = nsw.search(ds.queries, k=k, eps=0.1)
+    emit("table4_nsw", wave=0, build_s=time.time() - t0,
+         index_bytes=int(nsw.adjacency.nbytes + nsw.weights.nbytes
+                         + ds.base.nbytes),
+         recall=recall_at_k(np.asarray(res.ids), ds.gt_ids))
+    return out
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,122 @@
+"""Shared benchmark machinery.
+
+The paper's evaluation protocol (Sec. 6) at container scale: synthetic
+datasets with controlled LID (low ~ SIFT-like, high ~ GloVe-like), exact
+ground truth, and QPS <-> recall frontiers swept over the search-time
+``eps`` / ``beam_width`` knobs with a fixed index — exactly how Fig. 4/5
+curves are produced.
+
+All results are emitted as CSV rows through :func:`emit` so
+``benchmarks.run`` can tee a single machine-readable report.
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+import time
+from typing import Callable, Iterable, Optional
+
+import numpy as np
+
+from repro.core.distances import exact_knn_batched
+from repro.core.metrics import recall_at_k
+
+_ROWS: list[dict] = []
+
+
+def emit(bench: str, **fields) -> dict:
+    row = {"bench": bench, **fields}
+    _ROWS.append(row)
+    print(f"[{bench}] " + " ".join(f"{k}={_fmt(v)}" for k, v in fields.items()),
+          flush=True)
+    return row
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.5g}"
+    return v
+
+
+def rows() -> list[dict]:
+    return _ROWS
+
+
+def write_csv(path: str) -> None:
+    import csv
+
+    keys: list[str] = []
+    for r in _ROWS:
+        for k in r:
+            if k not in keys:
+                keys.append(k)
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=keys)
+        w.writeheader()
+        w.writerows(_ROWS)
+
+
+@dataclasses.dataclass
+class Dataset:
+    name: str
+    base: np.ndarray
+    queries: np.ndarray
+    gt_ids: np.ndarray        # exact top-k ids
+    lid: str                  # 'low' | 'high'
+
+    @property
+    def dim(self) -> int:
+        return self.base.shape[1]
+
+
+def make_bench_dataset(name: str, n: int, n_query: int, dim: int,
+                       lid: str = "low", k: int = 10,
+                       seed: int = 0) -> Dataset:
+    from repro.data.synthetic import make_dataset
+
+    kind = "gaussian" if lid == "low" else "manifold"
+    base, queries = make_dataset(kind, n, n_query, dim, seed=seed)
+    _, gt = exact_knn_batched(queries, base, k)
+    return Dataset(name, base, queries, gt, lid)
+
+
+def timed_search(search_fn: Callable, queries: np.ndarray,
+                 repeats: int = 1) -> tuple:
+    """Returns (result of last call, best wall seconds)."""
+    best = float("inf")
+    out = None
+    for _ in range(repeats + 1):           # first call = compile warmup
+        t0 = time.time()
+        out = search_fn(queries)
+        dt = time.time() - t0
+        best = min(best, dt)
+    return out, best
+
+
+def frontier(name: str, dataset: Dataset, search_fn: Callable, *,
+             k: int = 10,
+             eps_grid: Iterable[float] = (0.0, 0.02, 0.05, 0.1, 0.2, 0.4),
+             extra: Optional[dict] = None) -> list[dict]:
+    """Sweep search-time eps -> (recall, qps) points.
+
+    search_fn(queries, eps) -> SearchResult-like with .ids / .hops / .evals
+    """
+    pts = []
+    nq = dataset.queries.shape[0]
+    for eps in eps_grid:
+        (res), secs = timed_search(lambda q: search_fn(q, eps),
+                                   dataset.queries)
+        rec = recall_at_k(np.asarray(res.ids)[:, :k], dataset.gt_ids[:, :k])
+        row = emit(name, dataset=dataset.name, eps=eps, recall=rec,
+                   qps=nq / secs,
+                   hops=float(np.mean(np.asarray(res.hops))),
+                   evals=float(np.mean(np.asarray(res.evals))),
+                   **(extra or {}))
+        pts.append(row)
+    return pts
+
+
+def auc_above(pts: list[dict], recall_floor: float = 0.8) -> float:
+    """Scalar frontier summary: mean QPS of points with recall >= floor."""
+    good = [p["qps"] for p in pts if p["recall"] >= recall_floor]
+    return float(np.mean(good)) if good else 0.0

@@ -1,0 +1,78 @@
+"""Paper Fig. 4: QPS <-> recall@k frontier, DEG vs baselines (ANNS queries).
+
+Baselines at container scale: FAISS-style serial scan (brute force), kGraph
+(NN-descent), NSW.  The paper's claim reproduced here: DEG dominates the
+high-recall end of the frontier, and the gap grows with LID.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.baselines.brute_force import BruteForceIndex
+from repro.core.baselines.knng import build_knng
+from repro.core.baselines.nsw import NSWIndex
+from repro.core.build import DEGParams, build_deg
+from repro.core.metrics import recall_at_k
+from repro.core.search import search_graph
+
+from .common import auc_above, emit, frontier, make_bench_dataset
+
+
+def run(n: int = 6000, n_query: int = 256, dim: int = 32, k: int = 10,
+        degree: int = 16, seed: int = 0) -> dict:
+    summary = {}
+    for lid in ("low", "high"):
+        ds = make_bench_dataset(f"synth-{lid}lid", n, n_query, dim, lid,
+                                k=k, seed=seed)
+        # --- DEG (paper Table 3-style params scaled down) ---------------
+        deg = build_deg(ds.base, DEGParams(degree=degree, k_ext=2 * degree,
+                                           eps_ext=0.2, scheme="C"),
+                        wave_size=16)
+        deg.refine(300, seed=seed)
+
+        def deg_search(q, eps):
+            return deg.search(q, k=k, eps=eps)
+
+        pts = frontier("fig4_deg", ds, deg_search, k=k)
+        summary[f"deg_{lid}"] = auc_above(pts)
+
+        # --- kGraph ------------------------------------------------------
+        kg = build_knng(ds.base, K=degree, iterations=6, seed=seed)
+        import jax.numpy as jnp
+
+        vecs = jnp.asarray(ds.base)
+
+        def kg_search(q, eps):
+            return search_graph(kg, vecs, jnp.asarray(q), k=k, eps=eps,
+                                seed=0)
+
+        pts = frontier("fig4_kgraph", ds, kg_search, k=k)
+        summary[f"kgraph_{lid}"] = auc_above(pts)
+
+        # --- NSW ----------------------------------------------------------
+        nsw = NSWIndex(ds.dim, f=degree // 2, max_degree=3 * degree,
+                       capacity=n)
+        nsw.add(ds.base)
+
+        def nsw_search(q, eps):
+            return nsw.search(q, k=k, eps=eps)
+
+        pts = frontier("fig4_nsw", ds, nsw_search, k=k)
+        summary[f"nsw_{lid}"] = auc_above(pts)
+
+        # --- serial scan (reference point, recall == 1) -------------------
+        bf = BruteForceIndex(ds.base)
+        bf.search(ds.queries[:4], k)                     # warmup
+        t0 = time.time()
+        _, ids = bf.search(ds.queries, k)
+        bf_qps = n_query / (time.time() - t0)
+        emit("fig4_serialscan", dataset=ds.name, eps=0.0,
+             recall=recall_at_k(ids, ds.gt_ids), qps=bf_qps)
+        summary[f"scan_{lid}"] = bf_qps
+    return summary
+
+
+if __name__ == "__main__":
+    print(run())

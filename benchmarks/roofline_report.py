@@ -1,0 +1,70 @@
+"""§Roofline reporting: aggregates the dry-run JSON records into the
+per-(arch x shape x mesh) roofline table (assignment deliverable g).
+
+Reads ``reports/dryrun/<mesh>/<arch>__<shape>.json`` written by
+``repro.launch.dryrun``; rescales the DEG search cells' while-loops by the
+*measured* average hop count from benchmarks.scalability (the compiled loop
+bound is max_hops, a worst case).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+MESHES = ("pod16x16", "pod2x16x16")
+
+
+def load_records(root: str = "reports/dryrun") -> list[dict]:
+    recs = []
+    for mesh in MESHES:
+        for path in sorted(glob.glob(os.path.join(root, mesh, "*.json"))):
+            with open(path) as f:
+                recs.append(json.load(f))
+    return recs
+
+
+def run(root: str = "reports/dryrun", measured_deg_hops: float | None = None
+        ) -> dict:
+    recs = load_records(root)
+    if not recs:
+        emit("roofline", status="no dry-run records found", root=root)
+        return {}
+    n_ok = n_skip = n_err = 0
+    worst = None
+    most_coll = None
+    for r in recs:
+        if r["status"] == "skipped":
+            n_skip += 1
+            emit("roofline_skip", mesh=r["mesh"], arch=r["arch"],
+                 shape=r["shape"], reason=r.get("reason", "")[:60])
+            continue
+        if r["status"] != "ok":
+            n_err += 1
+            emit("roofline_error", mesh=r["mesh"], arch=r["arch"],
+                 shape=r["shape"], error=r.get("error", "")[:80])
+            continue
+        n_ok += 1
+        rl = r["roofline"]
+        emit("roofline", mesh=r["mesh"], arch=r["arch"], shape=r["shape"],
+             variant=r.get("variant", ""),
+             t_comp=rl["t_comp_s"], t_mem=rl["t_mem_s"],
+             t_coll=rl["t_coll_s"], bottleneck=rl["bottleneck"],
+             useful_ratio=rl["useful_ratio"], mfu_bound=rl["mfu_bound"])
+        if r["mesh"] == "pod16x16" and not r.get("variant"):
+            key = (r["arch"], r["shape"])
+            if worst is None or rl["mfu_bound"] < worst[1]:
+                worst = (key, rl["mfu_bound"])
+            frac = rl["t_coll_s"] / max(rl["step_time_s"], 1e-12)
+            if most_coll is None or frac > most_coll[1]:
+                most_coll = (key, frac)
+    emit("roofline_summary", ok=n_ok, skipped=n_skip, errors=n_err,
+         worst_mfu_cell=str(worst[0]) if worst else "-",
+         most_collective_cell=str(most_coll[0]) if most_coll else "-")
+    return {"ok": n_ok, "skipped": n_skip, "errors": n_err}
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,84 @@
+"""Benchmark orchestrator: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One section per paper table/figure (Sec. 6-7 + Appendix F/G), plus the
+kernel structural benchmarks and the §Roofline aggregation of the dry-run
+artifacts.  Emits a CSV (reports/bench.csv) and prints one line per
+measurement.  ``--quick`` shrinks every dataset ~4x for smoke use.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+
+SECTIONS = [
+    ("fig4_qps_recall", "qps_recall"),
+    ("fig5_exploration", "exploration"),
+    ("table4_build_cost", "build_cost"),
+    ("fig6_scalability", "scalability"),
+    ("fig7_left_edge_optimization", "edge_optimization"),
+    ("fig7_right_degree_sweep", "degree_sweep"),
+    ("table12_graph_stats", "graph_stats"),
+    ("appG_neighbor_choice", "neighbor_choice"),
+    ("kernels", "kernels"),
+    ("roofline", "roofline_report"),
+]
+
+QUICK_OVERRIDES = {
+    "qps_recall": dict(n=2000, n_query=128),
+    "exploration": dict(n=2000, n_query=128),
+    "build_cost": dict(n=1500, n_query=100),
+    "scalability": dict(sizes=(500, 1000, 2000)),
+    "edge_optimization": dict(n=1200, n_query=100,
+                              batches=(0, 300, 900)),
+    "degree_sweep": dict(n=1500, n_query=100, degrees=(8, 16)),
+    "graph_stats": dict(n=1200),
+    "neighbor_choice": dict(n=1200, n_query=100),
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module names to run")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--csv", default="reports/bench.csv")
+    args = ap.parse_args()
+
+    import importlib
+    import os
+
+    from . import common
+
+    only = set(args.only.split(",")) if args.only else None
+    failures = []
+    for title, mod_name in SECTIONS:
+        if only and mod_name not in only:
+            continue
+        print(f"\n=== {title} ({mod_name}) " + "=" * 30, flush=True)
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{mod_name}")
+            kw = QUICK_OVERRIDES.get(mod_name, {}) if args.quick else {}
+            summary = mod.run(**kw)
+            print(f"--- {mod_name} done in {time.time()-t0:.1f}s: {summary}")
+        except Exception as e:
+            failures.append((mod_name, e))
+            traceback.print_exc()
+    if args.csv:
+        os.makedirs(os.path.dirname(args.csv) or ".", exist_ok=True)
+        common.write_csv(args.csv)
+        print(f"\nwrote {len(common.rows())} rows to {args.csv}")
+    if failures:
+        print(f"\n{len(failures)} benchmark sections FAILED: "
+              f"{[m for m, _ in failures]}")
+        return 1
+    print("\nall benchmark sections passed")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

@@ -1,0 +1,61 @@
+"""Paper Fig. 6 / Sec. 7.1: empirical scalability.
+
+Search cost (hops, and wall time) and per-vertex insertion time versus index
+size n, at fixed recall target.  The paper's claim: both grow like
+``O(n^(1/m') log n^(1/m'))`` with m' ~ the intrinsic dimension — i.e.
+sub-logarithmic growth of hops in practice.  We fit hops ~ a + b*log(n) and
+report the measured hop counts so §Roofline can rescale the DEG search
+roofline by realistic trip counts.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.build import DEGParams, build_deg
+from repro.core.metrics import recall_at_k
+from repro.core.distances import exact_knn_batched
+
+from .common import emit
+
+
+def run(sizes=(1000, 2000, 4000, 8000), dim: int = 32, k: int = 10,
+        degree: int = 16, n_query: int = 200, seed: int = 0) -> dict:
+    from repro.data.synthetic import make_dataset
+
+    base_full, queries = make_dataset("gaussian", max(sizes), n_query, dim,
+                                      seed=seed)
+    hops_at_n = {}
+    for n in sizes:
+        base = base_full[:n]
+        _, gt = exact_knn_batched(queries, base, k)
+        t0 = time.time()
+        idx = build_deg(base, DEGParams(degree=degree, k_ext=2 * degree,
+                                        eps_ext=0.2), wave_size=16)
+        build_s = time.time() - t0
+        # per-vertex insertion time at this size (add 64 more)
+        extra = base_full[n: n + 64] + 1e-3
+        t0 = time.time()
+        idx.add(extra, wave_size=1)
+        insert_ms = (time.time() - t0) / 64 * 1e3
+        res = idx.search(queries, k=k, eps=0.1)
+        rec = recall_at_k(np.asarray(res.ids), gt)
+        hops = float(np.mean(np.asarray(res.hops)))
+        evals = float(np.mean(np.asarray(res.evals)))
+        emit("fig6_scaling", n=n, recall=rec, hops=hops, evals=evals,
+             insert_ms=insert_ms, build_s=build_s)
+        hops_at_n[n] = hops
+    # log-fit: hops = a + b ln n  (paper: sub-logarithmic => b small)
+    ns = np.array(sorted(hops_at_n))
+    hs = np.array([hops_at_n[x] for x in ns])
+    b, a = np.polyfit(np.log(ns), hs, 1)
+    emit("fig6_fit", a=float(a), b_per_ln_n=float(b),
+         hops_1e6_extrapolated=float(a + b * np.log(1e6)),
+         hops_16m_extrapolated=float(a + b * np.log(1 << 24)))
+    return {"hops": hops_at_n, "log_slope": float(b),
+            "hops_16m": float(a + b * np.log(1 << 24))}
+
+
+if __name__ == "__main__":
+    print(run())

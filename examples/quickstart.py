@@ -1,0 +1,49 @@
+"""Quickstart: build a Dynamic Exploration Graph, search it, explore it.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core.build import DEGParams, build_deg
+from repro.core.distances import exact_knn_batched
+from repro.core.metrics import recall_at_k
+
+
+def main():
+    rng = np.random.default_rng(0)
+    base = rng.normal(size=(5000, 32)).astype(np.float32)
+    queries = base[:100] + 0.01 * rng.normal(size=(100, 32)).astype(np.float32)
+
+    # 1. build incrementally (Alg. 3, scheme C + MRNG checks), then refine
+    #    continuously (Alg. 5) — the paper's two algorithms.
+    idx = build_deg(base, DEGParams(degree=16, k_ext=32, eps_ext=0.2),
+                    wave_size=16)
+    print(f"built DEG_16 over {idx.n} vectors; "
+          f"avg neighbor distance {idx.builder.average_neighbor_distance():.4f}")
+    idx.refine(500)
+    print(f"after 500 refinement iterations: "
+          f"{idx.builder.average_neighbor_distance():.4f}")
+
+    # 2. approximate nearest neighbor search (Alg. 1, batched)
+    res = idx.search(queries, k=10, eps=0.1)
+    _, gt = exact_knn_batched(queries, base, 10)
+    print(f"recall@10 = {recall_at_k(np.asarray(res.ids), gt):.3f}, "
+          f"avg hops {float(np.mean(np.asarray(res.hops))):.1f}")
+
+    # 3. exploration (paper Sec. 6.7): start AT an indexed vertex; the
+    #    QueryEngine session guarantees already-seen vertices never reappear
+    #    — the interactive-browsing workload the paper targets.
+    from repro.serving.engine import QueryEngine
+
+    eng = QueryEngine(idx, k=5, max_batch=4)
+    v = 42
+    for hop in range(3):
+        fut = eng.explore(v, session="demo")
+        eng.flush()
+        ids = [int(x) for x in fut["ids"] if x >= 0]
+        print(f"explore hop {hop}: from vertex {v} -> {ids}")
+        v = ids[0]
+
+
+if __name__ == "__main__":
+    main()

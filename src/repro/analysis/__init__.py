@@ -1,0 +1,1 @@
+"""Compiled-HLO analysis: FLOPs / HBM bytes / collective bytes + roofline."""

@@ -1,0 +1,187 @@
+"""Three-term roofline model for TPU v5e (DESIGN.md §7).
+
+    T_comp = FLOPs/device   / PEAK_FLOPS
+    T_mem  = bytes/device   / HBM_BW
+    T_coll = Σ_axis collective_bytes/device / ICI_BW   (ring (n-1)/n applied
+             by GSPMD already being per-device operand bytes)
+
+MODEL_FLOPS (the analytic 6·N·D / 6·N_active·D useful-work count) is
+reported next to the HLO count so remat/dispatch waste is visible.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+# TPU v5e, per chip (assignment-provided constants)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+
+@dataclasses.dataclass
+class Roofline:
+    t_comp: float
+    t_mem: float
+    t_coll: float
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    model_flops: float = 0.0
+    devices: int = 1
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_comp, "memory": self.t_mem,
+                 "collective": self.t_coll}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Lower-bound step time: perfectly-overlapped terms."""
+        return max(self.t_comp, self.t_mem, self.t_coll)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO FLOPs (global): remat/dispatch waste detector."""
+        total = self.flops * self.devices
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Best-case MFU at the roofline: useful flops / (peak x step_time)."""
+        t = self.step_time
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (self.devices * PEAK_FLOPS * t)
+
+    def as_dict(self) -> dict:
+        return {
+            "t_comp_s": self.t_comp, "t_mem_s": self.t_mem,
+            "t_coll_s": self.t_coll, "bottleneck": self.bottleneck,
+            "flops_per_dev": self.flops, "hbm_bytes_per_dev": self.hbm_bytes,
+            "collective_bytes_per_dev": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "mfu_bound": self.mfu_bound,
+            "step_time_s": self.step_time,
+        }
+
+
+def from_costs(flops: float, hbm_bytes: float, collective_bytes: float,
+               *, model_flops: float = 0.0, devices: int = 1) -> Roofline:
+    return Roofline(
+        t_comp=flops / PEAK_FLOPS,
+        t_mem=hbm_bytes / HBM_BW,
+        t_coll=collective_bytes / ICI_BW,
+        flops=flops, hbm_bytes=hbm_bytes,
+        collective_bytes=collective_bytes,
+        model_flops=model_flops, devices=devices)
+
+
+# ---------------------------------------------------------------------------
+# analytic MODEL_FLOPS per cell family (useful work, not compiled work)
+# ---------------------------------------------------------------------------
+def _tower_flops(sizes) -> float:
+    return float(sum(2.0 * a * b for a, b in zip(sizes[:-1], sizes[1:])))
+
+
+def lm_model_flops(cfg, kind: str, batch: int, seq: int) -> float:
+    """6·N_active·tokens (+ attention) for train, 2·N_active·tokens for
+    inference; attention term uses per-layer effective context."""
+    n_active = cfg.active_param_count
+    L, Hq, Dh = cfg.n_layers, cfg.n_heads, cfg.head_dim
+    glob = cfg.is_global_layer()
+
+    def attn(tok_s, ctx, causal):
+        tot = 0.0
+        for i in range(L):
+            eff = ctx if glob[i] else min(ctx, cfg.sliding_window or ctx)
+            f = 4.0 * batch * tok_s * eff * Hq * Dh
+            tot += f / 2 if causal else f
+        return tot
+
+    if kind == "train":
+        return 6.0 * n_active * batch * seq + 3.0 * attn(seq, seq, True)
+    if kind == "prefill":
+        return 2.0 * n_active * batch * seq + attn(seq, seq, True)
+    # decode/long_decode: one token against a seq-length cache
+    return 2.0 * n_active * batch + attn(1, seq, False)
+
+
+def egnn_model_flops(cfg, n_nodes: int, n_edges: int, train: bool = True,
+                     batch: int = 1) -> float:
+    h = cfg.d_hidden
+    per_layer = (
+        n_edges * _tower_flops([2 * h + 1 + cfg.d_edge, h, h])      # phi_e
+        + n_edges * _tower_flops([h, h, 1])                         # phi_x
+        + n_nodes * _tower_flops([2 * h, h, h])                     # phi_h
+    )
+    total = (cfg.n_layers * per_layer
+             + n_nodes * 2.0 * cfg.d_feat * h                       # encoder
+             + n_nodes * _tower_flops([h, h, cfg.n_classes]))       # decoder
+    total *= batch
+    return 3.0 * total if train else total
+
+
+def recsys_model_flops(cfg, kind: str, batch: int,
+                       n_candidates: int = 0) -> float:
+    E, F = cfg.embed_dim, cfg.n_sparse
+    f = 0.0
+    if cfg.kind == "dlrm":
+        f += _tower_flops([cfg.n_dense, *cfg.bot_mlp])
+        n_int = F + 1
+        f += 2.0 * n_int * n_int * E                  # dot interactions
+        f += _tower_flops([E + n_int * (n_int - 1) // 2, *cfg.mlp])
+    elif cfg.kind == "dcn-v2":
+        d = cfg.x0_dim
+        f += cfg.n_cross * 2.0 * d * d
+        f += _tower_flops([d, *cfg.mlp, 1])
+    elif cfg.kind == "deepfm":
+        f += 4.0 * F * E
+        f += _tower_flops([cfg.x0_dim, *cfg.mlp, 1])
+    elif cfg.kind == "din":
+        f += cfg.seq_len * _tower_flops([4 * E, *cfg.attn_mlp, 1])
+        f += _tower_flops([cfg.x0_dim, *cfg.mlp, 1])
+    per_ex = f
+    if kind == "retrieval":
+        return batch * (per_ex + 2.0 * n_candidates * E)
+    mult = 3.0 if kind == "recsys_train" else 1.0
+    return mult * batch * per_ex
+
+
+def deg_model_flops(meta: dict, avg_hops: float) -> float:
+    """Per-query useful work: hops x (d neighbor distances) + seed + merge.
+    One distance = 2m flops (paper's SIMD L2 analogue)."""
+    d, m, B = meta["degree"], meta["dim"], meta["batch"]
+    per_hop = d * 2.0 * m
+    return B * meta["n_shards"] * avg_hops * per_hop
+
+
+def model_flops_for(meta: dict, kind: str, cell_dims: dict,
+                    avg_hops: float = 48.0) -> float:
+    fam = meta.get("family")
+    cfg = meta.get("cfg")
+    if fam == "lm":
+        if kind == "train":
+            return lm_model_flops(cfg, "train", cell_dims["global_batch"],
+                                  cell_dims["seq_len"])
+        if kind == "prefill":
+            return lm_model_flops(cfg, "prefill", cell_dims["global_batch"],
+                                  cell_dims["seq_len"])
+        return lm_model_flops(cfg, "decode", cell_dims["global_batch"],
+                              cell_dims["seq_len"])
+    if fam == "gnn":
+        if kind == "molecule":
+            return egnn_model_flops(cfg, cell_dims["n_nodes"],
+                                    cell_dims["n_edges"], True,
+                                    cell_dims["batch"])
+        return egnn_model_flops(cfg, meta["n_nodes"], meta["n_edges"], True)
+    if fam == "recsys":
+        return recsys_model_flops(cfg, kind, cell_dims["batch"],
+                                  cell_dims.get("n_candidates", 0))
+    if fam == "deg":
+        return deg_model_flops(meta, meta.get("est_hops", avg_hops))
+    return 0.0

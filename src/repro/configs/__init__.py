@@ -1,0 +1,41 @@
+"""Architecture registry: ``--arch <id>`` resolves here."""
+from __future__ import annotations
+
+from .base import ArchSpec, ShapeCell
+from .deg import DEG_PAPER_CONFIGS
+from .gnn_archs import EGNN
+from .lm_archs import (GEMMA3_12B, GRANITE_3_2B, MIXTRAL_8X22B, PHI3_MINI,
+                       QWEN3_MOE)
+from .recsys_archs import DCN_V2, DEEPFM, DIN, DLRM_MLPERF
+
+_ARCHS = {
+    s.name: s for s in (
+        PHI3_MINI, GRANITE_3_2B, GEMMA3_12B, QWEN3_MOE, MIXTRAL_8X22B,
+        EGNN, DCN_V2, DEEPFM, DIN, DLRM_MLPERF,
+    )
+}
+
+
+def get_arch(name: str) -> ArchSpec:
+    try:
+        return _ARCHS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown arch {name!r}; available: {sorted(_ARCHS)}") from None
+
+
+def list_archs() -> list[str]:
+    return sorted(_ARCHS)
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """All 40 (arch, shape) dry-run cells."""
+    out = []
+    for name in list_archs():
+        for cell in _ARCHS[name].shapes:
+            out.append((name, cell.name))
+    return out
+
+
+__all__ = ["ArchSpec", "ShapeCell", "get_arch", "list_archs", "all_cells",
+           "DEG_PAPER_CONFIGS"]

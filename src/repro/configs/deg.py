@@ -1,0 +1,20 @@
+"""DEG hyperparameters from the paper (Table 3) keyed by dataset analogue,
+plus the defaults used by the offline benchmarks."""
+from __future__ import annotations
+
+from repro.core.build import DEGParams
+
+# paper Table 3 (d, k_ext, eps_ext, k_opt, eps_opt, i_opt)
+DEG_PAPER_CONFIGS = {
+    "audio": DEGParams(degree=20, k_ext=40, eps_ext=0.3, k_opt=20,
+                       eps_opt=0.001, i_opt=5),
+    "enron": DEGParams(degree=30, k_ext=60, eps_ext=0.3, k_opt=30,
+                       eps_opt=0.001, i_opt=5),
+    "sift1m": DEGParams(degree=30, k_ext=60, eps_ext=0.2, k_opt=30,
+                        eps_opt=0.001, i_opt=5),
+    "glove": DEGParams(degree=30, k_ext=30, eps_ext=0.2, k_opt=30,
+                       eps_opt=0.001, i_opt=5),
+    # CPU-scale default for the offline benchmarks in this container
+    "bench-small": DEGParams(degree=16, k_ext=32, eps_ext=0.3, k_opt=16,
+                             eps_opt=0.001, i_opt=5),
+}

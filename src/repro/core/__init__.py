@@ -1,0 +1,16 @@
+"""Core DEG library: the paper's contribution as composable JAX modules."""
+from .build import DEGIndex, DEGParams, build_deg
+from .distances import exact_knn, exact_knn_batched, get_metric
+from .graph import DEGraph, GraphBuilder, INVALID, complete_graph
+from .metrics import average_neighbor_distance, graph_quality, recall_at_k
+from .optimize import dynamic_edge_optimization, optimize_edge
+from .search import SearchResult, medoid_seed, range_search, search_graph
+
+__all__ = [
+    "DEGIndex", "DEGParams", "build_deg",
+    "exact_knn", "exact_knn_batched", "get_metric",
+    "DEGraph", "GraphBuilder", "INVALID", "complete_graph",
+    "average_neighbor_distance", "graph_quality", "recall_at_k",
+    "dynamic_edge_optimization", "optimize_edge",
+    "SearchResult", "medoid_seed", "range_search", "search_graph",
+]

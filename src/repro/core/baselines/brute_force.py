@@ -1,0 +1,33 @@
+"""Exact serial-scan baseline (paper uses FAISS serial scan, Sec. 6.3).
+
+Ground truth for every recall computation, and the reference the ``l2_topk``
+Pallas kernel is validated against.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..distances import exact_knn, exact_knn_batched
+
+
+class BruteForceIndex:
+    def __init__(self, vectors: np.ndarray, metric: str = "l2"):
+        self.vectors = np.asarray(vectors, dtype=np.float32)
+        self.metric = metric
+
+    @property
+    def n(self) -> int:
+        return self.vectors.shape[0]
+
+    def search(self, queries: np.ndarray, k: int, tile: int = 8192,
+               backend: str = "jnp"):
+        queries = np.atleast_2d(np.asarray(queries, np.float32))
+        if backend == "pallas" and self.metric == "l2":
+            from repro.kernels.l2_topk import ops as l2_ops
+
+            d, i = l2_ops.l2_topk(queries, self.vectors, k)
+            return np.asarray(d), np.asarray(i)
+        if self.n <= tile:
+            d, i = exact_knn(queries, self.vectors, k, self.metric)
+            return np.asarray(d), np.asarray(i)
+        return exact_knn_batched(queries, self.vectors, k, self.metric, tile)

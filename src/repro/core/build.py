@@ -1,0 +1,351 @@
+"""Incremental DEG construction (paper Algorithm 3 + Sec. 5.2).
+
+`DEGIndex` is the user-facing object: it owns the host-side mutable graph
+(`GraphBuilder`), a host mirror of the vectors, and a device-resident vector
+buffer kept in sync with donated in-place row updates.  Construction is
+host-orchestrated (graph surgery is inherently sequential, paper Sec. 5.2)
+around *jitted, batched* range searches — the compute-heavy part.
+
+Two build modes:
+
+* ``wave_size=1`` — paper-faithful sequential insertion;
+* ``wave_size=W`` — beyond-paper bulk build: the candidate searches of W
+  pending vertices run as ONE batched device call against the pre-wave graph,
+  then the W integrations are applied sequentially on the host.  Later wave
+  members cannot select earlier ones as neighbors (their searches predate
+  them) — a bounded staleness that trades a small recall delta for ~W× fewer
+  device dispatches; quantified in benchmarks/build_cost.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .distances import get_metric
+from .graph import DEGraph, GraphBuilder, INVALID, complete_graph
+from .mrng import check_mrng_candidate
+from .search import SearchResult, medoid_seed, range_search
+
+
+# ---------------------------------------------------------------------------
+# host-side metric helpers (small vectors; avoids device dispatch overhead)
+# ---------------------------------------------------------------------------
+def np_pair_dist(metric: str, x: np.ndarray, ys: np.ndarray) -> np.ndarray:
+    x = np.asarray(x, dtype=np.float32)
+    ys = np.asarray(ys, dtype=np.float32)
+    if ys.ndim == 1:
+        ys = ys[None, :]
+    if metric in ("l2", "sqeuclidean"):
+        d = ys - x[None, :]
+        sq = np.maximum(np.einsum("ij,ij->i", d, d), 0.0)
+        return sq if metric == "sqeuclidean" else np.sqrt(sq)
+    if metric == "ip":
+        return -(ys @ x)
+    if metric == "cos":
+        xn = x / max(np.linalg.norm(x), 1e-12)
+        yn = ys / np.maximum(np.linalg.norm(ys, axis=1, keepdims=True), 1e-12)
+        return 1.0 - yn @ xn
+    raise ValueError(metric)
+
+
+@dataclasses.dataclass
+class DEGParams:
+    """Paper Table 3 hyperparameters."""
+
+    degree: int = 20          # d
+    k_ext: int = 40
+    eps_ext: float = 0.3
+    k_opt: int = 20
+    eps_opt: float = 0.001
+    i_opt: int = 5
+    scheme: str = "C"         # paper default: C for extension
+    rng_checks: bool = True   # Algorithm 2 during extension
+    # Alg. 3 line 17 — marked *optional* in the paper.  Under our batched-beam
+    # search, insert-time optimization of the new vertex's far edges degraded
+    # the QPS<->recall frontier, while post-build continuous refinement
+    # (Alg. 5 via DEGIndex.refine) improves it (see EXPERIMENTS.md, "Edge
+    # optimization").  Default off; the faithful knob remains available.
+    optimize_new: bool = False
+    metric: str = "l2"
+
+    def __post_init__(self):
+        if self.k_ext < self.degree:
+            raise ValueError("k_ext must be >= degree (paper Sec. 5.2)")
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _write_rows(buf: jax.Array, rows: jax.Array, start: jax.Array) -> jax.Array:
+    return jax.lax.dynamic_update_slice(buf, rows, (start, jnp.int32(0)))
+
+
+class DEGIndex:
+    """A Dynamic Exploration Graph over a growing set of vectors."""
+
+    def __init__(self, dim: int, params: DEGParams | None = None,
+                 capacity: int = 1024):
+        self.params = params or DEGParams()
+        self.dim = dim
+        capacity = max(capacity, self.params.degree + 1)
+        self.vectors = np.zeros((capacity, dim), dtype=np.float32)
+        self._dev_vectors = jnp.zeros((capacity, dim), dtype=jnp.float32)
+        self.builder: Optional[GraphBuilder] = None
+        self._pending: list[np.ndarray] = []   # points before K_{d+1} exists
+        self._rng = np.random.default_rng(0)
+
+    # -- sizes -------------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return 0 if self.builder is None else self.builder.n
+
+    @property
+    def capacity(self) -> int:
+        return self.vectors.shape[0]
+
+    def grow(self, new_capacity: int) -> None:
+        if new_capacity <= self.capacity:
+            return
+        vecs = np.zeros((new_capacity, self.dim), dtype=np.float32)
+        vecs[: self.capacity] = self.vectors
+        self.vectors = vecs
+        self._dev_vectors = jnp.asarray(vecs)
+        if self.builder is not None:
+            self.builder.grow(new_capacity)
+
+    # -- device sync ---------------------------------------------------------
+    def _put_rows(self, rows: np.ndarray, start: int) -> None:
+        self._dev_vectors = _write_rows(
+            self._dev_vectors, jnp.asarray(rows, dtype=jnp.float32),
+            jnp.asarray(start, dtype=jnp.int32))
+
+    def frozen(self) -> DEGraph:
+        return self.builder.freeze()
+
+    # -- insertion -----------------------------------------------------------
+    def add(self, points: np.ndarray, wave_size: int = 1) -> None:
+        """Insert points (Alg. 3). ``wave_size>1`` enables bulk build."""
+        points = np.asarray(points, dtype=np.float32)
+        if points.ndim == 1:
+            points = points[None]
+        if self.n + len(self._pending) + points.shape[0] > self.capacity:
+            self.grow(max(2 * self.capacity,
+                          self.n + len(self._pending) + points.shape[0]))
+        d = self.params.degree
+        i = 0
+        # bootstrap: K_{d+1} complete graph (Sec. 5.1)
+        if self.builder is None:
+            need = d + 1 - len(self._pending)
+            take = min(need, points.shape[0])
+            self._pending.extend(points[:take])
+            i = take
+            if len(self._pending) == d + 1:
+                init = np.stack(self._pending)
+                self.vectors[: d + 1] = init
+                self._put_rows(init, 0)
+                self.builder = complete_graph(
+                    init, d, self.capacity, self.params.metric)
+                self._pending = []
+            if i >= points.shape[0]:
+                return
+        while i < points.shape[0]:
+            w = min(wave_size, points.shape[0] - i)
+            self._insert_wave(points[i : i + w])
+            i += w
+
+    def _insert_wave(self, pts: np.ndarray) -> None:
+        W = pts.shape[0]
+        start = self.builder.n
+        self.vectors[start : start + W] = pts
+        self._put_rows(pts, start)
+        # one batched candidate search for the whole wave (pre-wave graph)
+        graph = self.frozen()
+        seeds = jnp.full((W, 1), self._entry_vertex(), dtype=jnp.int32)
+        res = range_search(
+            graph, self._dev_vectors, jnp.asarray(pts), seeds,
+            k=self.params.k_ext, eps=self.params.eps_ext,
+            metric=self.params.metric)
+        ids = np.asarray(res.ids)
+        dists = np.asarray(res.dists)
+        for j in range(W):
+            v = self.builder.add_vertex()
+            assert v == start + j
+            new_edges = self._extend_vertex(v, pts[j], ids[j], dists[j])
+            if self.params.optimize_new:
+                from .optimize import optimize_edge
+
+                in_s = set(int(x) for x in ids[j] if x != INVALID)
+                for u in new_edges:
+                    if u not in in_s and self.builder.has_edge(v, u):
+                        # Alg. 3 line 17: replace the far neighbors of the new
+                        # vertex.  Alg. 4's search finds a new neighbor for its
+                        # *second* argument, so the new vertex goes second
+                        # (the paper's prose reading; measured better than the
+                        # literal (v, u) order — see EXPERIMENTS.md).
+                        optimize_edge(self, u, v,
+                                      i_opt=self.params.i_opt,
+                                      k_opt=self.params.k_opt,
+                                      eps_opt=self.params.eps_opt)
+
+    def _entry_vertex(self) -> int:
+        return int(self._rng.integers(0, max(self.builder.n, 1)))
+
+    # -- Alg. 3 core: select d/2 (b, n) pairs -------------------------------
+    def _extend_vertex(self, v: int, vec: np.ndarray, cand_ids: np.ndarray,
+                       cand_dists: np.ndarray) -> list[int]:
+        b = self.builder
+        d = b.degree
+        metric = self.params.metric
+        cands: list[tuple[int, float]] = [
+            (int(c), float(x)) for c, x in zip(cand_ids, cand_dists)
+            if c != INVALID and c < v
+        ]
+        U: list[int] = []
+        U_d: list[float] = []
+
+        def select_n(bb: int, b_dist: float) -> Optional[tuple[int, float]]:
+            nbrs = [int(x) for x in b.neighbors(bb) if int(x) not in U]
+            if not nbrs:
+                return None
+            ws = np.array([b.edge_weight(bb, x) for x in nbrs])
+            scheme = self.params.scheme
+            if scheme == "C":
+                j = int(np.argmax(ws))
+            elif scheme == "B":
+                j = int(np.argmin(ws))
+            else:
+                nd = np_pair_dist(metric, vec, self.vectors[nbrs])
+                if scheme == "A":
+                    j = int(np.argmin(nd))
+                elif scheme == "D":
+                    j = int(np.argmin(nd - ws))
+                else:
+                    raise ValueError(self.params.scheme)
+            n_sel = nbrs[j]
+            n_dist = float(np_pair_dist(metric, vec, self.vectors[n_sel])[0])
+            return n_sel, n_dist
+
+        skip_rng = not self.params.rng_checks
+        exhausted_fallbacks = 0
+        while len(U) < d:
+            progressed = False
+            for bb, bd in cands:
+                if len(U) >= d:
+                    break
+                if bb in U:
+                    continue
+                if not skip_rng and not check_mrng_candidate(b, bb, bd, U, U_d):
+                    continue
+                sel = select_n(bb, bd)
+                if sel is None:
+                    continue
+                n_sel, n_dist = sel
+                b.remove_edge(bb, n_sel)
+                U.extend((bb, n_sel))
+                U_d.extend((bd, n_dist))
+                progressed = True
+            if len(U) >= d:
+                break
+            if not skip_rng:
+                skip_rng = True      # phase 2 (Alg. 3 line 14)
+                continue
+            if not progressed:
+                # candidate list exhausted — widen with exact nearest actives
+                exhausted_fallbacks += 1
+                if exhausted_fallbacks > 3:
+                    raise RuntimeError(
+                        f"cannot complete neighborhood for vertex {v}")
+                cands = self._exact_candidates(vec, exclude=set(U) | {v})
+        for u, w in zip(U, U_d):
+            b.add_edge(v, u, w)
+        return U
+
+    def _exact_candidates(self, vec, exclude):
+        n = self.builder.n - 1  # the vertex being inserted is already counted
+        ds = np_pair_dist(self.params.metric, vec, self.vectors[:n])
+        order = np.argsort(ds)
+        return [(int(i), float(ds[i])) for i in order if int(i) not in exclude]
+
+    # -- deletion (beyond-paper: completes "fully dynamic", Table 1) --------
+    def remove(self, ids, refine_after: int = 0) -> int:
+        """Delete vertices preserving regularity/connectivity (no
+        tombstones); see core/delete.py. Returns the number deleted.
+        NOTE: deletion compacts slots — the last vertex moves into the freed
+        slot, so external id maps must be updated via the return protocol of
+        delete_vertices."""
+        from .delete import delete_vertices
+
+        return delete_vertices(self, ids if hasattr(ids, "__iter__")
+                               else [ids], refine_after=refine_after)
+
+    # -- continuous refinement (Alg. 5 driver) -------------------------------
+    def refine(self, iterations: int, seed: Optional[int] = None) -> int:
+        from .optimize import dynamic_edge_optimization
+
+        rng = np.random.default_rng(seed)
+        improved = 0
+        for _ in range(iterations):
+            improved += int(dynamic_edge_optimization(
+                self, rng,
+                i_opt=self.params.i_opt, k_opt=self.params.k_opt,
+                eps_opt=self.params.eps_opt))
+        return improved
+
+    # -- queries --------------------------------------------------------------
+    def search(self, queries: np.ndarray, k: int, eps: float = 0.1,
+               beam_width: Optional[int] = None, seed: Optional[int] = None,
+               backend: str = "jnp") -> SearchResult:
+        graph = self.frozen()
+        q = jnp.asarray(np.atleast_2d(np.asarray(queries, np.float32)))
+        if seed is None:
+            seed = medoid_seed(self._dev_vectors, self.n)
+        seeds = jnp.full((q.shape[0], 1), seed, dtype=jnp.int32)
+        return range_search(graph, self._dev_vectors, q, seeds, k=k, eps=eps,
+                            beam_width=beam_width, metric=self.params.metric,
+                            backend=backend)
+
+    def explore(self, seed_vertices: Sequence[int], k: int, eps: float = 0.1,
+                exclude: Optional[np.ndarray] = None,
+                beam_width: Optional[int] = None) -> SearchResult:
+        """Exploration queries (paper Sec. 6.7): seed == query vertex; the
+        seed (and optionally already-seen vertices) are excluded from results."""
+        sv = np.asarray(seed_vertices, dtype=np.int32).reshape(-1)
+        q = jnp.asarray(self.vectors[sv])
+        seeds = jnp.asarray(sv[:, None])
+        if exclude is None:
+            excl = sv[:, None]
+        else:
+            excl = np.concatenate([sv[:, None], np.asarray(exclude, np.int32)],
+                                  axis=1)
+        return range_search(self.frozen(), self._dev_vectors, q, seeds,
+                            k=k, eps=eps, beam_width=beam_width,
+                            metric=self.params.metric,
+                            exclude=jnp.asarray(excl))
+
+    # -- internal search used by optimize.py ----------------------------------
+    def _search_from(self, query_vec: np.ndarray, seed_ids: Sequence[int],
+                     k: int, eps: float) -> tuple[np.ndarray, np.ndarray]:
+        q = jnp.asarray(np.asarray(query_vec, np.float32)[None, :])
+        s = np.full((1, 2), INVALID, dtype=np.int32)
+        for j, sid in enumerate(list(seed_ids)[:2]):
+            s[0, j] = sid
+        res = range_search(self.frozen(), self._dev_vectors, q,
+                           jnp.asarray(s), k=k, eps=eps,
+                           metric=self.params.metric)
+        return np.asarray(res.ids)[0], np.asarray(res.dists)[0]
+
+
+def build_deg(vectors: np.ndarray, params: DEGParams | None = None,
+              wave_size: int = 1, refine_iterations: int = 0,
+              capacity: Optional[int] = None) -> DEGIndex:
+    """One-shot construction of a DEG over ``vectors``."""
+    vectors = np.asarray(vectors, dtype=np.float32)
+    idx = DEGIndex(vectors.shape[1], params,
+                   capacity=capacity or vectors.shape[0])
+    idx.add(vectors, wave_size=wave_size)
+    if refine_iterations:
+        idx.refine(refine_iterations)
+    return idx

@@ -1,0 +1,199 @@
+"""Graph containers for the Dynamic Exploration Graph.
+
+Two layers:
+
+* :class:`DEGraph` — an immutable JAX pytree used on device (search, serving,
+  dry-run).  The even-regularity of DEG (paper Sec. 5.1) means the *entire*
+  graph is one dense ``(capacity, d) int32`` adjacency array plus a matching
+  ``float32`` weight array.  This is the core of the TPU adaptation: every
+  search hop is a fixed-shape gather, there is no raggedness and no hubs by
+  construction.
+
+* :class:`GraphBuilder` — a mutable host-side (numpy) twin used by the
+  incremental construction (Alg. 3) and edge optimization (Alg. 4/5), which
+  are graph-surgery procedures.  ``freeze()`` converts to a :class:`DEGraph`.
+
+Slots that are transiently unused hold ``INVALID`` (= -1).  A *valid* DEG has
+no ``INVALID`` entries among its first ``n`` rows.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INVALID = -1
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DEGraph:
+    """Immutable device-side even-regular graph."""
+
+    adjacency: jax.Array          # (capacity, d) int32, INVALID-padded
+    weights: jax.Array            # (capacity, d) float32
+    n: jax.Array                  # () int32 — number of active vertices
+
+    @property
+    def capacity(self) -> int:
+        return self.adjacency.shape[0]
+
+    @property
+    def degree(self) -> int:
+        return self.adjacency.shape[1]
+
+    def to_builder(self) -> "GraphBuilder":
+        b = GraphBuilder.__new__(GraphBuilder)
+        b.adjacency = np.asarray(self.adjacency).copy()
+        b.weights = np.asarray(self.weights).copy()
+        b.n = int(self.n)
+        return b
+
+
+class GraphBuilder:
+    """Mutable host-side graph for construction / refinement."""
+
+    def __init__(self, capacity: int, degree: int):
+        if degree < 4 or degree % 2 != 0:
+            raise ValueError(f"DEG degree must be even and >= 4, got {degree}")
+        if capacity < degree + 1:
+            raise ValueError("capacity must be at least degree + 1")
+        self.adjacency = np.full((capacity, degree), INVALID, dtype=np.int32)
+        self.weights = np.zeros((capacity, degree), dtype=np.float32)
+        self.n = 0
+
+    # -- basic accessors -------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return self.adjacency.shape[0]
+
+    @property
+    def degree(self) -> int:
+        return self.adjacency.shape[1]
+
+    def neighbors(self, v: int) -> np.ndarray:
+        row = self.adjacency[v]
+        return row[row != INVALID]
+
+    def neighbor_weights(self, v: int) -> np.ndarray:
+        row = self.adjacency[v]
+        return self.weights[v][row != INVALID]
+
+    def vertex_degree(self, v: int) -> int:
+        return int((self.adjacency[v] != INVALID).sum())
+
+    def has_edge(self, u: int, v: int) -> bool:
+        return bool((self.adjacency[u] == v).any())
+
+    def edge_weight(self, u: int, v: int) -> float:
+        slots = np.nonzero(self.adjacency[u] == v)[0]
+        if slots.size == 0:
+            raise KeyError(f"no edge ({u}, {v})")
+        return float(self.weights[u, slots[0]])
+
+    # -- mutation --------------------------------------------------------
+    def _free_slot(self, v: int) -> int:
+        slots = np.nonzero(self.adjacency[v] == INVALID)[0]
+        if slots.size == 0:
+            raise RuntimeError(f"vertex {v} already has degree {self.degree}")
+        return int(slots[0])
+
+    def add_edge(self, u: int, v: int, w: float) -> None:
+        if u == v:
+            raise ValueError(f"self loop at {u}")
+        if self.has_edge(u, v):
+            raise ValueError(f"duplicate edge ({u}, {v})")
+        su, sv = self._free_slot(u), self._free_slot(v)
+        self.adjacency[u, su] = v
+        self.weights[u, su] = w
+        self.adjacency[v, sv] = u
+        self.weights[v, sv] = w
+
+    def remove_edge(self, u: int, v: int) -> float:
+        w = None
+        for a, b in ((u, v), (v, u)):
+            slots = np.nonzero(self.adjacency[a] == b)[0]
+            if slots.size == 0:
+                raise KeyError(f"no edge ({a}, {b})")
+            w = float(self.weights[a, slots[0]])
+            self.adjacency[a, slots[0]] = INVALID
+            self.weights[a, slots[0]] = 0.0
+        return w
+
+    def add_vertex(self) -> int:
+        if self.n >= self.capacity:
+            raise RuntimeError("capacity exhausted; grow() first")
+        v = self.n
+        self.n += 1
+        return v
+
+    def grow(self, new_capacity: int) -> None:
+        if new_capacity <= self.capacity:
+            return
+        d = self.degree
+        adj = np.full((new_capacity, d), INVALID, dtype=np.int32)
+        w = np.zeros((new_capacity, d), dtype=np.float32)
+        adj[: self.capacity] = self.adjacency
+        w[: self.capacity] = self.weights
+        self.adjacency, self.weights = adj, w
+
+    # -- snapshot / rollback (Alg. 4 step 6 "revert all changes") --------
+    def snapshot(self, vertices: Iterable[int]) -> dict:
+        vs = sorted(set(int(v) for v in vertices))
+        return {
+            "vs": vs,
+            "adj": self.adjacency[vs].copy(),
+            "w": self.weights[vs].copy(),
+        }
+
+    def restore(self, snap: dict) -> None:
+        self.adjacency[snap["vs"]] = snap["adj"]
+        self.weights[snap["vs"]] = snap["w"]
+
+    # -- conversion ------------------------------------------------------
+    def freeze(self) -> DEGraph:
+        return DEGraph(
+            adjacency=jnp.asarray(self.adjacency),
+            weights=jnp.asarray(self.weights),
+            n=jnp.asarray(self.n, dtype=jnp.int32),
+        )
+
+    # -- stats used by Alg. 5 / benchmarks -------------------------------
+    def longest_edge_slot(self, v: int) -> int:
+        row = self.adjacency[v]
+        w = np.where(row != INVALID, self.weights[v], -np.inf)
+        return int(np.argmax(w))
+
+    def average_neighbor_distance(self) -> float:
+        """Eq. (4) over the whole graph (active vertices only)."""
+        if self.n == 0:
+            return 0.0
+        adj = self.adjacency[: self.n]
+        w = self.weights[: self.n]
+        valid = adj != INVALID
+        denom = np.maximum(valid.sum(axis=1), 1)
+        per_vertex = (w * valid).sum(axis=1) / denom
+        return float(per_vertex.mean())
+
+
+def complete_graph(vectors: np.ndarray, degree: int, capacity: int,
+                   metric_name: str = "l2") -> GraphBuilder:
+    """The smallest possible DEG_d: the complete graph K_{d+1} (Sec. 5.1)."""
+    from .distances import get_metric
+
+    metric = get_metric(metric_name)
+    k = degree + 1
+    if vectors.shape[0] < k:
+        raise ValueError(f"need at least {k} vectors for DEG_{degree}")
+    b = GraphBuilder(capacity, degree)
+    pts = jnp.asarray(vectors[:k])
+    dmat = np.asarray(metric.cross(pts, pts))
+    for _ in range(k):
+        b.add_vertex()
+    for i in range(k):
+        for j in range(i + 1, k):
+            b.add_edge(i, j, float(dmat[i, j]))
+    return b

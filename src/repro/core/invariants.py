@@ -1,0 +1,116 @@
+"""Structural invariants of DEG (paper Table 1 / Sec. 5.1).
+
+These are *hard guarantees* of the data structure, so the test suite asserts
+them after every construction / optimization operation:
+
+* even regularity: every active vertex has exactly ``d`` valid neighbors;
+* undirectedness: ``v in N(u)  <=>  u in N(v)`` with equal weights;
+* no self loops, no duplicate edges;
+* connectivity: a single connected component (Euler-cycle argument, Sec. 5.1).
+"""
+from __future__ import annotations
+
+from collections import deque
+
+import numpy as np
+
+from .graph import GraphBuilder, DEGraph, INVALID
+
+
+def _as_builder(g) -> GraphBuilder:
+    return g.to_builder() if isinstance(g, DEGraph) else g
+
+
+def check_regular(g, *, allow_partial: bool = False) -> bool:
+    b = _as_builder(g)
+    if b.n == 0:
+        return True
+    adj = b.adjacency[: b.n]
+    degs = (adj != INVALID).sum(axis=1)
+    if allow_partial:
+        return bool((degs <= b.degree).all())
+    return bool((degs == b.degree).all())
+
+
+def check_undirected(g) -> bool:
+    b = _as_builder(g)
+    for u in range(b.n):
+        for s, v in enumerate(b.adjacency[u]):
+            if v == INVALID:
+                continue
+            v = int(v)
+            back = np.nonzero(b.adjacency[v] == u)[0]
+            if back.size != 1:
+                return False
+            if not np.isclose(b.weights[v, back[0]], b.weights[u, s], rtol=1e-5,
+                              atol=1e-6):
+                return False
+    return True
+
+
+def check_no_self_loops(g) -> bool:
+    b = _as_builder(g)
+    for u in range(b.n):
+        if (b.adjacency[u] == u).any():
+            return False
+    return True
+
+
+def check_no_duplicate_edges(g) -> bool:
+    b = _as_builder(g)
+    for u in range(b.n):
+        row = [int(v) for v in b.adjacency[u] if v != INVALID]
+        if len(row) != len(set(row)):
+            return False
+    return True
+
+
+def connected_components(g) -> int:
+    b = _as_builder(g)
+    if b.n == 0:
+        return 0
+    seen = np.zeros(b.n, dtype=bool)
+    comps = 0
+    for start in range(b.n):
+        if seen[start]:
+            continue
+        comps += 1
+        q = deque([start])
+        seen[start] = True
+        while q:
+            u = q.popleft()
+            for v in b.adjacency[u]:
+                if v != INVALID and not seen[v]:
+                    seen[int(v)] = True
+                    q.append(int(v))
+    return comps
+
+
+def check_connected(g) -> bool:
+    return connected_components(g) <= 1
+
+
+def assert_valid_deg(g, *, context: str = "") -> None:
+    """Assert all DEG invariants; raise AssertionError with a diagnosis."""
+    b = _as_builder(g)
+    assert check_no_self_loops(b), f"self loop {context}"
+    assert check_no_duplicate_edges(b), f"duplicate edge {context}"
+    assert check_undirected(b), f"asymmetric adjacency {context}"
+    assert check_regular(b), f"not {b.degree}-regular {context}"
+    assert check_connected(b), f"disconnected {context}"
+
+
+def check_invariants(g) -> tuple[bool, list]:
+    """All Table-1 invariants at once: returns (ok, failure messages)."""
+    msgs = []
+    if not check_regular(g):
+        msgs.append("not even-regular")
+    if not check_undirected(g):
+        msgs.append("not undirected")
+    if not check_no_self_loops(g):
+        msgs.append("self loops present")
+    if not check_no_duplicate_edges(g):
+        msgs.append("duplicate edges present")
+    if not check_connected(g):
+        msgs.append(f"{connected_components(g)} connected components")
+    return (not msgs), msgs

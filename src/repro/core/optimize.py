@@ -1,0 +1,162 @@
+"""Dynamic edge optimization (paper Algorithms 4 and 5, Sec. 5.3).
+
+``optimize_edge`` tries to replace one edge (v1, v2) with a better edge
+constellation.  All mutations are recorded in a change log and rolled back if
+no configuration with positive *gain* (reduction in total edge weight, i.e.
+in the average neighbor distance, Eq. 4) is found — so the graph invariants
+(regularity, connectivity) hold after every call, success or not.
+
+Note on Alg. 4 line 30: the paper's pseudocode says ``add (v1,v5),(v1,v3)``
+which contradicts the prose of step (4a) ("the edge (vE,vF) is replaced with
+the two edges (vA,vE) and (vA,vF)"); we follow the prose — add (v1,v5) and
+(v1,v6), remove (v5,v6) — which is the only degree-conserving reading.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from .build import DEGIndex, np_pair_dist
+from .graph import INVALID
+from .mrng import check_mrng, mrng_conform_mask
+
+
+class ChangeLog:
+    """Invertible edit log over a GraphBuilder."""
+
+    def __init__(self, builder):
+        self.builder = builder
+        self.ops: list[tuple[str, int, int, float]] = []
+
+    def add_edge(self, u: int, v: int, w: float) -> None:
+        self.builder.add_edge(u, v, w)
+        self.ops.append(("add", u, v, w))
+
+    def remove_edge(self, u: int, v: int) -> float:
+        w = self.builder.remove_edge(u, v)
+        self.ops.append(("remove", u, v, w))
+        return w
+
+    def revert(self) -> None:
+        for op, u, v, w in reversed(self.ops):
+            if op == "add":
+                self.builder.remove_edge(u, v)
+            else:
+                self.builder.add_edge(u, v, w)
+        self.ops.clear()
+
+    def __len__(self) -> int:
+        return len(self.ops)
+
+
+def _search(index: DEGIndex, query_vertex: int, seeds, k: int, eps: float):
+    ids, dists = index._search_from(index.vectors[query_vertex], seeds, k, eps)
+    keep = ids != INVALID
+    return ids[keep], dists[keep]
+
+
+def optimize_edge(index: DEGIndex, v1: int, v2: int, *, i_opt: int = 5,
+                  k_opt: int = 20, eps_opt: float = 0.001) -> bool:
+    """Algorithm 4. Returns True iff the graph was improved (changes kept)."""
+    b = index.builder
+    metric = index.params.metric
+    vecs = index.vectors
+
+    def dist(u: int, v: int) -> float:
+        return float(np_pair_dist(metric, vecs[u], vecs[v])[0])
+
+    if not b.has_edge(v1, v2):
+        return False
+    log = ChangeLog(b)
+    gain = log.remove_edge(v1, v2)
+    v3, v4 = v1, v1
+
+    for _ in range(max(i_opt, 1)):
+        # ---- step (2): find (v3', v4') maximizing the running gain --------
+        ids, dists = _search(index, v2, (v3, v4), k_opt, eps_opt)
+        best, found = gain, None
+        for s, ds in zip(ids.tolist(), dists.tolist()):
+            if s in (v1, v2) or b.has_edge(v2, s):
+                continue
+            for n in b.neighbors(int(s)).tolist():
+                if n == v2:
+                    continue
+                cand = gain - ds + b.edge_weight(int(s), int(n))
+                if cand > best:
+                    best, found = cand, (int(s), int(n), float(ds))
+        if found is None:           # Alg. 4 lines 14-15
+            break
+        s, n, ds = found
+        gain = best
+        # step (3): replace (vC, vD) with (vB, vC).  The paper's pseudocode
+        # adds before removing (transient degree d+1); we remove first — same
+        # end state, keeps the degree-cap invariant checkable at all times.
+        log.remove_edge(s, n)
+        log.add_edge(v2, s, ds)
+        v3, v4 = s, n
+
+        if v4 == v1:
+            # ---- step (4a): v1 is missing two edges -----------------------
+            ids1, dists1 = _search(index, v1, (v2, v3), k_opt, eps_opt)
+            best2, found2 = 0.0, None
+            for s2, ds2 in zip(ids1.tolist(), dists1.tolist()):
+                s2 = int(s2)
+                if s2 == v1 or b.has_edge(v1, s2):
+                    continue
+                for n2 in b.neighbors(s2).tolist():
+                    n2 = int(n2)
+                    if n2 == v1 or b.has_edge(v1, n2):
+                        continue
+                    cand = (gain + b.edge_weight(s2, n2)
+                            - ds2 - dist(v1, n2))
+                    if cand > best2:
+                        best2, found2 = cand, (s2, n2, float(ds2))
+            if found2 is not None:
+                s2, n2, ds2 = found2
+                log.remove_edge(s2, n2)
+                log.add_edge(v1, s2, ds2)
+                log.add_edge(v1, n2, dist(v1, n2))
+                return True
+        else:
+            # ---- step (4b): connect the two deficient vertices v1, v4 -----
+            d14 = dist(v1, v4)
+            if (not b.has_edge(v1, v4)) and gain - d14 > 0:
+                ids1, _ = _search(index, v1, (v2, v3), k_opt, eps_opt)
+                ids4, _ = _search(index, v4, (v2, v3), k_opt, eps_opt)
+                if v1 in set(ids1.tolist()) or v4 in set(ids4.tolist()):
+                    log.add_edge(v1, v4, d14)
+                    return True
+        # ---- step (5): rotate labels, keep searching -----------------------
+        v2, v3, v4 = v4, v2, v3
+
+    log.revert()                    # step (6)
+    return False
+
+
+def dynamic_edge_optimization(index: DEGIndex, rng: np.random.Generator, *,
+                              i_opt: int = 5, k_opt: int = 20,
+                              eps_opt: float = 0.001,
+                              vertex: Optional[int] = None) -> bool:
+    """Algorithm 5: improve the edges of one (random) vertex."""
+    b = index.builder
+    if b is None or b.n <= b.degree + 1:
+        return False
+    v1 = int(rng.integers(0, b.n)) if vertex is None else vertex
+    improved = False
+    conform = mrng_conform_mask(b, v1)
+    nbrs = b.adjacency[v1].copy()
+    for slot, v2 in enumerate(nbrs):
+        if v2 == INVALID or conform[slot]:
+            continue
+        if b.has_edge(v1, int(v2)):        # may have been removed by a swap
+            improved |= optimize_edge(index, v1, int(v2), i_opt=i_opt,
+                                      k_opt=k_opt, eps_opt=eps_opt)
+    # ... and the longest remaining edge (Alg. 5 lines 6-7)
+    if b.vertex_degree(v1):
+        slot = b.longest_edge_slot(v1)
+        v2 = int(b.adjacency[v1, slot])
+        if v2 != INVALID and b.has_edge(v1, v2):
+            improved |= optimize_edge(index, v1, v2, i_opt=i_opt, k_opt=k_opt,
+                                      eps_opt=eps_opt)
+    return improved

@@ -1,0 +1,3 @@
+from .synthetic import make_dataset, gaussian_mixture, planted_manifold
+
+__all__ = ["make_dataset", "gaussian_mixture", "planted_manifold"]

@@ -1,0 +1,173 @@
+"""Graph data: CSR containers, synthetic generators, and a real neighbor
+sampler (GraphSAGE-style fanout sampling) for the `minibatch_lg` shape.
+
+The sampler is jittable: uniform-with-replacement sampling from CSR rows via
+``row_ptr[v] + randint(deg[v])``; isolated nodes fall back to self-loops.
+Output subgraphs have *static* shapes: ``B*(1+f1+f1*f2)`` nodes and
+``B*(f1+f1*f2)`` child->parent edges, ready for ``egnn_forward``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class CSRGraph:
+    row_ptr: np.ndarray      # (N+1,) int64
+    col_idx: np.ndarray      # (E,) int32
+    n_nodes: int
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.col_idx.shape[0])
+
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.row_ptr)
+
+
+def random_power_law_graph(n: int, avg_degree: int, seed: int = 0,
+                           alpha: float = 1.6) -> CSRGraph:
+    """Synthetic power-law graph (reddit/ogb stand-in for smoke tests)."""
+    rng = np.random.default_rng(seed)
+    w = rng.pareto(alpha, size=n) + 1.0
+    p = w / w.sum()
+    n_edges = n * avg_degree
+    src = rng.choice(n, size=n_edges, p=p)
+    dst = rng.integers(0, n, size=n_edges)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    order = np.argsort(src, kind="stable")
+    src, dst = src[order], dst[order]
+    row_ptr = np.zeros(n + 1, dtype=np.int64)
+    np.add.at(row_ptr[1:], src, 1)
+    row_ptr = np.cumsum(row_ptr)
+    return CSRGraph(row_ptr=row_ptr, col_idx=dst.astype(np.int32), n_nodes=n)
+
+
+def random_geometric_graph(n: int, k: int, dim: int = 3, seed: int = 0):
+    """kNN graph over random coordinates (cora/molecule stand-in).
+    Returns (CSRGraph, coords (n, dim))."""
+    from repro.core.distances import exact_knn_batched
+
+    rng = np.random.default_rng(seed)
+    coords = rng.normal(size=(n, dim)).astype(np.float32)
+    _, ids = exact_knn_batched(coords, coords, k + 1, tile=4096)
+    dst = ids[:, 1:].reshape(-1).astype(np.int32)
+    row_ptr = np.arange(0, n * k + 1, k, dtype=np.int64)
+    return CSRGraph(row_ptr=row_ptr, col_idx=dst, n_nodes=n), coords
+
+
+@functools.partial(jax.jit, static_argnames=("fanouts",))
+def sample_neighbors(row_ptr: Array, col_idx: Array, deg: Array,
+                     seeds: Array, rng_key: Array,
+                     fanouts: tuple[int, ...]):
+    """Fanout sampling. seeds (B,) -> (nodes (n_sub,), edges (2, n_edge)).
+
+    Layout: nodes = [seeds | hop1 | hop2 | ...]; every sampled neighbor adds
+    one edge (child -> parent index *within the subgraph*).
+    """
+    B = seeds.shape[0]
+    frontier = seeds
+    frontier_off = 0
+    nodes = [seeds]
+    edges_src: list = []
+    edges_dst: list = []
+    total = B
+    for f in fanouts:
+        key, rng_key = jax.random.split(rng_key)
+        nf = frontier.shape[0]
+        d = jnp.maximum(deg[frontier], 1)
+        r = jax.random.randint(key, (nf, f), 0, 1 << 30)
+        off = (r % d[:, None]).astype(row_ptr.dtype)
+        gather_at = row_ptr[frontier][:, None] + off            # (nf, f)
+        nbr = jnp.take(col_idx, gather_at.reshape(-1), axis=0)
+        isolated = (deg[frontier] == 0)[:, None]
+        nbr = jnp.where(jnp.broadcast_to(isolated, (nf, f)).reshape(-1),
+                        jnp.repeat(frontier, f), nbr)
+        child_pos = total + jnp.arange(nf * f, dtype=jnp.int32)
+        parent_pos = jnp.repeat(
+            frontier_off + jnp.arange(nf, dtype=jnp.int32), f)
+        nodes.append(nbr.astype(jnp.int32))
+        edges_src.append(child_pos)
+        edges_dst.append(parent_pos)
+        frontier_off = total
+        total += nf * f
+        frontier = nbr
+    nodes = jnp.concatenate(nodes)
+    edges = jnp.stack([jnp.concatenate(edges_src),
+                       jnp.concatenate(edges_dst)])
+    return nodes, edges
+
+
+def subgraph_batch(graph: CSRGraph, feats: np.ndarray, labels: np.ndarray,
+                   seeds: np.ndarray, rng_key, fanouts: Sequence[int],
+                   coords: np.ndarray | None = None) -> dict:
+    """Assemble an EGNN-ready batch from a sampled subgraph."""
+    deg = jnp.asarray(graph.degrees().astype(np.int32))
+    nodes, edges = sample_neighbors(
+        jnp.asarray(graph.row_ptr), jnp.asarray(graph.col_idx), deg,
+        jnp.asarray(seeds, jnp.int32), rng_key, tuple(fanouts))
+    nodes_np = np.asarray(nodes)
+    f = feats[nodes_np]
+    if coords is None:
+        rng = np.random.default_rng(0)
+        coords_all = rng.normal(size=(graph.n_nodes, 3)).astype(np.float32)
+        c = coords_all[nodes_np]
+    else:
+        c = coords[nodes_np]
+    lab = np.full(nodes_np.shape[0], -1, dtype=np.int32)
+    lab[: seeds.shape[0]] = labels[seeds]        # supervise seeds only
+    return {
+        "feats": jnp.asarray(f),
+        "coords": jnp.asarray(c),
+        "edges": edges,
+        "labels": jnp.asarray(lab),
+    }
+
+
+def partition_edges_by_dst(edges: np.ndarray, n_nodes_pad: int,
+                           n_shards: int,
+                           edge_valid: np.ndarray | None = None):
+    """Reorder edges so shard ``s`` holds exactly the edges whose dst lies in
+    its node range [s*Nl, (s+1)*Nl) — the data-layout contract of
+    ``models.egnn.make_sharded_loss``.  Per-shard blocks are padded to equal
+    size with invalid self-edges.  Returns (edges (2, E_pad), valid (E_pad,)).
+    """
+    edges = np.asarray(edges)
+    if edge_valid is None:
+        edge_valid = np.ones(edges.shape[1], bool)
+    Nl = n_nodes_pad // n_shards
+    owner = edges[1] // Nl
+    blocks = []
+    max_e = 0
+    for s in range(n_shards):
+        sel = np.nonzero((owner == s) & edge_valid)[0]
+        blocks.append(edges[:, sel])
+        max_e = max(max_e, sel.size)
+    out = np.zeros((2, n_shards * max_e), dtype=np.int32)
+    valid = np.zeros(n_shards * max_e, bool)
+    for s, blk in enumerate(blocks):
+        lo = s * max_e
+        out[:, lo: lo + blk.shape[1]] = blk
+        # padding edges: self-loop on the shard's first node, masked out
+        out[:, lo + blk.shape[1]: lo + max_e] = s * Nl
+        valid[lo: lo + blk.shape[1]] = True
+    return out, valid
+
+
+def subgraph_shapes(batch_nodes: int, fanouts: Sequence[int]) -> tuple[int, int]:
+    """Static (n_sub_nodes, n_sub_edges) for given batch/fanouts."""
+    total, frontier, n_edges = batch_nodes, batch_nodes, 0
+    for f in fanouts:
+        n_edges += frontier * f
+        frontier *= f
+        total += frontier
+    return total, n_edges

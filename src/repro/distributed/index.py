@@ -1,0 +1,177 @@
+"""Sharded Dynamic Exploration Graph (DESIGN.md §4).
+
+The DB of N vectors is partitioned **round-robin** into S sub-DEGs, one per
+``"model"``-axis shard (global id g lives on shard ``g % S`` at local row
+``g // S``).  Each sub-DEG is an independent even-regular DEG built and
+refined incrementally — DEG's incrementality is what makes per-shard
+growth/rebalancing cheap at this scale.  Queries are sharded along the DP
+axes (throughput) and replicated along ``"model"``; one search step is:
+
+    local in-shard beam search  ->  all_gather(k best per shard, "model")
+                                ->  exact top-k merge
+
+Collective volume per query: ``S * k * 8`` bytes — independent of N.  Pods
+replicate the index, so losing a pod degrades throughput, not recall; losing
+one model shard degrades recall by ~1/S while the other shards keep serving
+(fault-tolerance posture; simulated in tests/test_distributed.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.build import DEGIndex, DEGParams
+from repro.core.graph import INVALID
+from repro.core.search import medoid_seed, range_search
+
+from .collectives import topk_merge_allgather
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# the pure, lowerable search step
+# ---------------------------------------------------------------------------
+def make_sharded_search(mesh: Mesh, *, k: int, eps: float = 0.1,
+                        beam_width: Optional[int] = None,
+                        metric: str = "l2", shard_axis: str = "model",
+                        batch_axes="data", exclude_width: int = 0) -> Callable:
+    """Build the jit-able sharded search step.
+
+    f(adjacency (S, Ns, d) i32, vectors (S, Ns, m) f32, n (S,) i32,
+      seeds (S,) i32, queries (B, m) f32[, exclude (B, X) i32])
+      -> (ids (B, k) global i32, dists (B, k) f32)
+    """
+    n_shards = int(mesh.shape[shard_axis])
+
+    def local(adj, vecs, n, seed, queries, exclude):
+        adj, vecs = adj[0], vecs[0]              # strip leading shard dim
+        from repro.core.graph import DEGraph
+
+        g = DEGraph(adjacency=adj, weights=jnp.zeros_like(adj, jnp.float32),
+                    n=n[0])
+        B = queries.shape[0]
+        shard = jax.lax.axis_index(shard_axis)
+        if exclude is None:
+            seeds = jnp.broadcast_to(seed[0], (B, 1)).astype(jnp.int32)
+            excl_local = None
+        else:
+            # exploration: global seed/exclude ids -> local rows where owned
+            own = (exclude % n_shards) == shard
+            local_rows = jnp.where(own, exclude // n_shards, INVALID)
+            seeds = jnp.concatenate(
+                [local_rows[:, :1],
+                 jnp.broadcast_to(seed[0], (B, 1)).astype(jnp.int32)], axis=1)
+            excl_local = local_rows
+        res = range_search(g, vecs, queries, seeds, k=k, eps=eps,
+                           beam_width=beam_width, metric=metric,
+                           exclude=excl_local)
+        gids = jnp.where(res.ids == INVALID, INVALID,
+                         res.ids * n_shards + shard)
+        dists, ids = topk_merge_allgather(res.dists, gids, k, shard_axis)
+        return ids, dists
+
+    bspec = P(batch_axes, None)
+    shspec3 = P(shard_axis, None, None)
+    shspec1 = P(shard_axis)
+
+    if exclude_width > 0:
+        def f(adj, vecs, n, seeds, queries, exclude):
+            return shard_map(
+                functools.partial(local),
+                mesh=mesh,
+                in_specs=(shspec3, shspec3, shspec1, shspec1, bspec,
+                          P(batch_axes, None)),
+                out_specs=(bspec, bspec), check_vma=False,
+            )(adj, vecs, n, seeds, queries, exclude)
+        return f
+
+    def f(adj, vecs, n, seeds, queries):
+        return shard_map(
+            lambda a, v, nn, s, q: local(a, v, nn, s, q, None),
+            mesh=mesh,
+            in_specs=(shspec3, shspec3, shspec1, shspec1, bspec),
+            out_specs=(bspec, bspec), check_vma=False,
+        )(adj, vecs, n, seeds, queries)
+
+    return f
+
+
+# ---------------------------------------------------------------------------
+# host-side container
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ShardedDEG:
+    """S independently built sub-DEGs + the stacked device arrays."""
+
+    shards: list                     # list[DEGIndex]
+    adjacency: Array                 # (S, Ns, d)
+    vectors: Array                   # (S, Ns, m)
+    n: Array                         # (S,)
+    seeds: Array                     # (S,) per-shard medoid
+    params: DEGParams
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def n_total(self) -> int:
+        return int(np.asarray(self.n).sum())
+
+    def search(self, mesh: Mesh, queries: np.ndarray, k: int,
+               eps: float = 0.1, batch_axes="data") -> tuple:
+        f = make_sharded_search(mesh, k=k, eps=eps,
+                                metric=self.params.metric,
+                                batch_axes=batch_axes)
+        with jax.set_mesh(mesh):
+            ids, dists = jax.jit(f)(self.adjacency, self.vectors, self.n,
+                                    self.seeds, jnp.asarray(queries))
+        return np.asarray(ids), np.asarray(dists)
+
+    def drop_shard(self, idx: int) -> "ShardedDEG":
+        """Simulate losing one model shard: its sub-DEG serves nothing.
+        (n=0 disables every vertex: recall degrades by ~1/S, service
+        continues — the preemption-tolerance posture of DESIGN.md §4.)"""
+        n = np.asarray(self.n).copy()
+        n[idx] = 0
+        return dataclasses.replace(self, n=jnp.asarray(n))
+
+
+def build_sharded_deg(vectors: np.ndarray, n_shards: int,
+                      params: Optional[DEGParams] = None,
+                      wave_size: int = 8,
+                      refine_iterations: int = 0) -> ShardedDEG:
+    """Round-robin partition + per-shard incremental DEG build."""
+    params = params or DEGParams()
+    vectors = np.asarray(vectors, dtype=np.float32)
+    N, m = vectors.shape
+    shards, id_rows = [], []
+    for s in range(n_shards):
+        rows = vectors[s::n_shards]
+        idx = DEGIndex(m, params, capacity=rows.shape[0])
+        idx.add(rows, wave_size=wave_size)
+        if refine_iterations:
+            idx.refine(refine_iterations)
+        shards.append(idx)
+    ns = max(sh.n for sh in shards)
+    d = params.degree
+    adj = np.full((n_shards, ns, d), INVALID, dtype=np.int32)
+    vecs = np.zeros((n_shards, ns, m), dtype=np.float32)
+    seeds = np.zeros((n_shards,), dtype=np.int32)
+    n_arr = np.zeros((n_shards,), dtype=np.int32)
+    for s, sh in enumerate(shards):
+        adj[s, : sh.n] = sh.builder.adjacency[: sh.n]
+        vecs[s, : sh.n] = sh.vectors[: sh.n]
+        n_arr[s] = sh.n
+        seeds[s] = medoid_seed(jnp.asarray(sh.vectors), sh.n)
+    return ShardedDEG(shards=shards, adjacency=jnp.asarray(adj),
+                      vectors=jnp.asarray(vecs), n=jnp.asarray(n_arr),
+                      seeds=jnp.asarray(seeds), params=params)

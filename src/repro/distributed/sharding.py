@@ -1,0 +1,219 @@
+"""Per-architecture parameter / activation PartitionSpec rules.
+
+Layout summary (DESIGN.md §4) for the production mesh
+``("pod",) + ("data", "model")``:
+
+* **LM transformers** — batch over the DP axes ``("pod","data")``; params
+  FSDP-sharded over ``"data"`` on the d_model axis and tensor-parallel over
+  ``"model"`` on heads / FFN-hidden / vocab.  MoE experts use *expert-TP*:
+  every device holds all experts but a 1/TP slice of each expert's hidden
+  dim, so dispatch stays device-local and the only collective matches the
+  dense MLP's psum.
+* **KV caches (decode)** — cache length sharded over ``"model"``
+  (flash-decode style sequence parallelism: each model shard holds 1/TP of
+  the context, computes partial attention, GSPMD inserts the softmax
+  all-reduce), batch over the DP axes.
+* **EGNN** — params replicated (tiny); edge arrays sharded over
+  ``("data","model")`` and node arrays over ``"data"``.
+* **RecSys** — embedding-table rows sharded over ``"model"`` (lookup =
+  mask + psum inside shard_map, see models/embedding_bag.py), dense towers
+  replicated, batch over DP axes.  (The reduce-scatter/all-to-all row layout
+  over all axes is the §Perf iteration.)
+
+All functions return *pytrees of PartitionSpec* with the exact structure of
+the matching ``abstract_params``/input trees, ready to wrap in
+``NamedSharding``.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> Any:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _divisible(n: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return True
+    names = (axis,) if isinstance(axis, str) else tuple(axis)
+    size = int(np.prod([mesh.shape[a] for a in names]))
+    return n % size == 0
+
+
+def _maybe(n: int, mesh: Mesh, axis):
+    """Shard axis only if the dim divides evenly (GSPMD supports uneven but
+    padding wastes memory and muddies the roofline numbers)."""
+    return axis if _divisible(n, mesh, axis) else None
+
+
+# ---------------------------------------------------------------------------
+# LM transformer
+# ---------------------------------------------------------------------------
+def lm_param_specs(cfg, mesh: Mesh) -> dict:
+    """PartitionSpec tree matching models.transformer.abstract_params(cfg)."""
+    D, Dh = cfg.d_model, cfg.head_dim
+    Hq, Hkv = cfg.n_heads * Dh, cfg.n_kv_heads * Dh
+    fsdp = "data" if "data" in mesh.axis_names else None
+
+    def mat(rows: int, cols: int, row_ax, col_ax):
+        return P(None, _maybe(rows, mesh, row_ax), _maybe(cols, mesh, col_ax))
+
+    layers = {
+        "attn_norm": P(None, None),
+        "mlp_norm": P(None, None),
+        "wq": mat(D, Hq, fsdp, "model"),
+        "wk": mat(D, Hkv, fsdp, "model"),
+        "wv": mat(D, Hkv, fsdp, "model"),
+        "wo": mat(Hq, D, "model", fsdp),
+    }
+    if cfg.moe is None:
+        layers |= {
+            "w_gate": mat(D, cfg.d_ff, fsdp, "model"),
+            "w_up": mat(D, cfg.d_ff, fsdp, "model"),
+            "w_down": mat(cfg.d_ff, D, "model", fsdp),
+        }
+    else:
+        F = cfg.moe.d_ff_expert
+        layers |= {
+            "router": P(None, _maybe(D, mesh, fsdp), None),
+            "we_gate": P(None, None, _maybe(D, mesh, fsdp),
+                         _maybe(F, mesh, "model")),
+            "we_up": P(None, None, _maybe(D, mesh, fsdp),
+                       _maybe(F, mesh, "model")),
+            "we_down": P(None, None, _maybe(F, mesh, "model"),
+                         _maybe(D, mesh, fsdp)),
+        }
+    p = {
+        "embed": P(_maybe(cfg.vocab, mesh, "model"), None),
+        "final_norm": P(None),
+        "layers": layers,
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = P(None, _maybe(cfg.vocab, mesh, "model"))
+    return p
+
+
+def lm_batch_specs(mesh: Mesh) -> dict:
+    b = dp_axes(mesh)
+    return {"tokens": P(b, None), "labels": P(b, None)}
+
+
+def lm_cache_specs(cfg, mesh: Mesh, batch: int) -> dict:
+    """KV-cache specs matching transformer.abstract_cache.
+
+    Cache length over "model" (sequence-parallel decode); batch over DP axes
+    when it divides, else replicated (long_500k has batch 1).
+    """
+    b = _maybe(batch, mesh, dp_axes(mesh))
+    ks, vs = [], []
+    for i in range(cfg.n_layers):
+        w = cfg.layer_window(i)
+        # ring caches (sliding-window layers) are small; shard only full ones
+        seq_ax = "model" if w is None else None
+        ks.append(P(b, seq_ax, None, None))
+        vs.append(P(b, seq_ax, None, None))
+    return {"k": ks, "v": vs, "pos": P()}
+
+
+# ---------------------------------------------------------------------------
+# EGNN
+# ---------------------------------------------------------------------------
+def egnn_param_specs(params_tree) -> Any:
+    return jax.tree.map(lambda _: P(), params_tree)
+
+
+def egnn_batch_specs(mesh: Mesh, kind: str, dims: dict) -> dict:
+    all_ax = tuple(mesh.axis_names)  # edges spread over every device
+    if kind == "molecule":
+        b = dp_axes(mesh)
+        return {"feats": P(b, None, None), "coords": P(b, None, None),
+                "edges": P(b, None, None), "labels": P(b, None)}
+    edge_ax = all_ax if dims["n_edges"] % int(
+        np.prod(mesh.devices.shape)) == 0 else None
+    return {
+        "feats": P(None, None),          # node arrays replicated (psum'd agg)
+        "coords": P(None, None),
+        "edges": P(None, edge_ax),
+        "labels": P(None),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RecSys
+# ---------------------------------------------------------------------------
+def recsys_param_specs(cfg, mesh: Mesh) -> dict:
+    """Row-shard the stacked embedding table over "model"; small towers
+    replicated."""
+    from repro.models import recsys as R
+
+    tree = R.abstract_params(cfg)
+
+    def spec(path, leaf):
+        name = path[0].key if hasattr(path[0], "key") else str(path[0])
+        if name == "table":
+            return P(_maybe(leaf.shape[0], mesh, "model"), None)
+        if name == "fm_w":
+            return P(_maybe(leaf.shape[0], mesh, "model"))
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree_util.tree_map_with_path(spec, tree)
+
+
+def recsys_batch_specs(cfg, mesh: Mesh, batch: int) -> dict:
+    b = _maybe(batch, mesh, dp_axes(mesh))
+    s = {"sparse": P(b, None), "label": P(b)}
+    if cfg.n_dense:
+        s["dense"] = P(b, None)
+    if cfg.kind == "din":
+        s["hist"] = P(b, None)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# generic helpers
+# ---------------------------------------------------------------------------
+def named(mesh: Mesh, spec_tree) -> Any:
+    """PartitionSpec tree -> NamedSharding tree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def _prune_to(specs, tree) -> Any:
+    """Select from the full param-spec tree the leaves present in ``tree``
+    (which may be a masked subtree with None nodes — see
+    train.optimizer.partitioned)."""
+    spec_map = dict(jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=_is_spec)[0])
+    return jax.tree_util.tree_map_with_path(
+        lambda path, _: spec_map[path], tree)
+
+
+def opt_state_specs(param_specs, opt_state_tree) -> Any:
+    """Optimizer-state specs: moment leaves inherit the matching param spec;
+    counts/scalars replicate.  Handles adamw/sgd/partitioned state dicts."""
+
+    def build(st):
+        if isinstance(st, dict):
+            out = {}
+            for k, v in st.items():
+                if k in ("mu", "nu", "mom"):
+                    out[k] = _prune_to(param_specs, v)
+                elif isinstance(v, dict):
+                    out[k] = build(v)
+                else:
+                    out[k] = jax.tree.map(lambda _: P(), v)
+            return out
+        return jax.tree.map(lambda _: P(), st)
+
+    return build(opt_state_tree)

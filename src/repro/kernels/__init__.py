@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the compute hot spots of the ANN system.
+
+Each kernel package contains:
+
+* ``<name>.py`` — the ``pl.pallas_call`` kernel with explicit BlockSpec VMEM
+  tiling (TPU is the *target*; on this CPU container they run with
+  ``interpret=True``, which executes the kernel body in Python);
+* ``ops.py``    — the jit'd public wrapper (padding, alignment, dispatch);
+* ``ref.py``    — the pure-jnp oracle used by tests and benchmarks.
+
+Kernels:
+
+* ``l2_topk``     — tiled query x base L2 distance matrix fused with a
+                    streaming top-k (the brute-force scorer / re-ranker and
+                    the `retrieval_cand` scorer for the recsys archs);
+* ``gather_dist`` — scalar-prefetched neighbor-row gather fused with the
+                    per-hop distance computation of the graph search;
+* ``bag_lookup``  — embedding-bag gather-reduce (recsys embedding tables).
+"""

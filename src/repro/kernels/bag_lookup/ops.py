@@ -1,0 +1,33 @@
+"""Public wrapper for the embedding-bag kernel: INVALID (-1) ids get weight
+zero (ragged bags are padded to the fixed field count), embedding dim padded
+to the 128-lane boundary."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .bag_lookup import bag_lookup_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bag_lookup(table: jax.Array, ids: jax.Array,
+               weights: jax.Array | None = None, *,
+               interpret: bool | None = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    V, E = table.shape
+    B, F = ids.shape
+    if weights is None:
+        weights = jnp.ones((B, F), jnp.float32)
+    weights = jnp.where(ids < 0, 0.0, weights.astype(jnp.float32))
+    safe_ids = jnp.clip(ids, 0, V - 1).astype(jnp.int32)
+    pad_e = (-E) % 128
+    t = jnp.pad(table.astype(jnp.float32), ((0, 0), (0, pad_e)))
+    out = bag_lookup_pallas(t, safe_ids, weights, interpret=interpret)
+    return out[:, :E]

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the embedding-bag kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def bag_lookup_ref(table: jax.Array, ids: jax.Array, weights: jax.Array):
+    rows = table[ids].astype(jnp.float32)               # (B, F, E)
+    return jnp.sum(rows * weights[..., None].astype(jnp.float32), axis=1)

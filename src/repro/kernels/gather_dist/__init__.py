@@ -1,0 +1,4 @@
+from .ops import gather_dist
+from .ref import gather_dist_ref
+
+__all__ = ["gather_dist", "gather_dist_ref"]

@@ -1,0 +1,33 @@
+"""Public wrapper for the gather+distance kernel: clamps out-of-range ids
+(INVALID = -1 slots are masked by the caller), pads the feature dim to the
+128-lane boundary."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .gather_dist import gather_dist_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("squared", "interpret"))
+def gather_dist(vectors: jax.Array, ids: jax.Array, queries: jax.Array, *,
+                squared: bool = False, interpret: bool | None = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    N, m = vectors.shape
+    pad_m = (-m) % 128
+    # bf16 vectors stay bf16 on the HBM->VMEM path (halves the gather
+    # traffic that dominates the DEG search roofline — §Perf DEG it. 2);
+    # the kernel accumulates distances in f32 regardless.
+    dt = vectors.dtype if vectors.dtype == jnp.bfloat16 else jnp.float32
+    v = jnp.pad(vectors.astype(dt), ((0, 0), (0, pad_m)))
+    q = jnp.pad(queries.astype(dt), ((0, 0), (0, pad_m)))
+    safe_ids = jnp.clip(ids, 0, N - 1).astype(jnp.int32)
+    return gather_dist_pallas(v, safe_ids, q, squared=squared,
+                              interpret=interpret)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the gather+distance kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("squared",))
+def gather_dist_ref(vectors: jax.Array, ids: jax.Array, queries: jax.Array,
+                    squared: bool = False):
+    g = vectors[ids].astype(jnp.float32)              # (B, d, m)
+    diff = g - queries.astype(jnp.float32)[:, None, :]
+    d2 = jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0)
+    return d2 if squared else jnp.sqrt(d2)

@@ -1,0 +1,52 @@
+"""Public jit'd wrapper for the fused L2 + top-k kernel: pads to tile
+boundaries, dispatches to the Pallas kernel, slices back."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .l2_topk import l2_topk_pallas
+
+_PAD_VAL = 1.0e19  # distance to padded base rows overflows to ~inf after square
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tb", "tn", "squared",
+                                             "interpret"))
+def l2_topk(queries: jax.Array, base: jax.Array, k: int, *, tb: int = 8,
+            tn: int = 512, squared: bool = False,
+            interpret: bool | None = None):
+    """Top-k nearest rows of ``base`` for each query, fused in one kernel.
+
+    queries (B, m), base (N, m) -> (dists (B, k), ids (B, k)); padded rows
+    can never appear in results because their distance is ~inf.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    B, m = queries.shape
+    N, _ = base.shape
+    if k > N:
+        raise ValueError(f"k={k} > N={N}")
+    tn = min(tn, _round_up(N, 128))
+    pad_b = _round_up(B, tb) - B
+    pad_n = _round_up(N, tn) - N
+    pad_m = _round_up(m, 128) - m
+    q = jnp.pad(queries.astype(jnp.float32), ((0, pad_b), (0, pad_m)))
+    x = jnp.pad(base.astype(jnp.float32), ((0, pad_n), (0, pad_m)),
+                constant_values=0.0)
+    if pad_n:
+        # push padded rows to +inf distance
+        mask = jnp.arange(x.shape[0]) >= N
+        x = jnp.where(mask[:, None], _PAD_VAL, x)
+    d, i = l2_topk_pallas(q, x, k, tb=tb, tn=tn, squared=squared,
+                          interpret=interpret)
+    return d[:B], i[:B]
+
+
+def _round_up(v: int, mult: int) -> int:
+    return (v + mult - 1) // mult * mult

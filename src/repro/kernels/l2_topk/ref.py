@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the fused L2 + top-k kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("k", "squared"))
+def l2_topk_ref(queries: jax.Array, base: jax.Array, k: int,
+                squared: bool = False):
+    q = queries.astype(jnp.float32)
+    x = base.astype(jnp.float32)
+    qn = jnp.sum(q * q, axis=1, keepdims=True)
+    xn = jnp.sum(x * x, axis=1)
+    d2 = jnp.maximum(qn - 2.0 * (q @ x.T) + xn[None, :], 0.0)
+    d = d2 if squared else jnp.sqrt(d2)
+    neg, ids = jax.lax.top_k(-d, k)
+    return -neg, ids.astype(jnp.int32)

@@ -1,0 +1,184 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines, before any other import: jax locks the
+#   device count on first init, and the production meshes need 512
+#   placeholder host devices (16x16 single-pod uses 256 of them).
+
+"""Multi-pod dry-run (assignment deliverable e).
+
+For every (architecture x input shape) cell — the 40 assigned cells plus the
+DEG production-search cells — lower + compile the step function on the
+production mesh, and record:
+
+* ``compiled.memory_analysis()``  — proves the cell fits per-device HBM;
+* ``compiled.cost_analysis()``    — XLA's own FLOPs/bytes (loop bodies x1);
+* the trip-count-scaled FLOPs / HBM bytes / collective bytes from
+  ``repro.analysis.hlo`` — the numbers §Roofline consumes.
+
+Usage:
+    python -m repro.launch.dryrun --arch phi3-mini-3.8b --shape train_4k
+    python -m repro.launch.dryrun --arch all [--multi-pod] [--out reports/]
+    python -m repro.launch.dryrun --list
+
+Each cell writes ``<out>/<mesh>/<arch>__<shape>.json``.  Use ``--hlo`` to
+also dump the optimized HLO text next to it (input of the perf iterations).
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def _cells_for(arch: str) -> list:
+    from repro.configs import all_cells
+    from repro.launch.cells import DEG_CELLS
+
+    cells = []
+    if arch in ("all", "deg-ann"):
+        cells += [("deg-ann", s) for s in DEG_CELLS]
+    if arch == "all":
+        cells += all_cells()
+    elif arch != "deg-ann":
+        cells += [(a, s) for a, s in all_cells() if a == arch]
+    return cells
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
+             dump_hlo: bool = False, variant: str = "") -> dict:
+    import jax
+    from repro.analysis import hlo as H
+    from repro.analysis import roofline as R
+    from repro.configs import get_arch
+    from repro.launch.cells import SkippedCell, build_cell
+    from repro.launch.mesh import make_production_mesh, mesh_devices
+
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec: dict = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                 "variant": variant}
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        prog = build_cell(arch, shape, mesh, variant=variant)
+        lowered = prog.lower(mesh)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+        rec["devices"] = mesh_devices(mesh)
+
+        # ---- memory analysis (proves it fits) -------------------------
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory_analysis"] = {
+                k: int(getattr(ma, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes",
+                          "alias_size_in_bytes")
+                if hasattr(ma, k)}
+        except Exception as e:  # CPU backend may not support it
+            rec["memory_analysis"] = {"error": str(e)}
+
+        # ---- XLA cost analysis (loop bodies counted once) --------------
+        try:
+            ca = compiled.cost_analysis()
+            ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+            rec["xla_cost"] = {k: float(v) for k, v in ca.items()
+                               if isinstance(v, (int, float))
+                               and k in ("flops", "bytes accessed",
+                                         "optimal_seconds")}
+        except Exception as e:
+            rec["xla_cost"] = {"error": str(e)}
+
+        # ---- trip-scaled HLO cost + roofline ---------------------------
+        text = compiled.as_text()
+        rec["hlo_bytes"] = len(text)
+        cost = H.analyze_text(text)
+        est_hops = prog.meta.get("est_hops")
+        if est_hops and cost["while_detail"]:
+            # DEG search: the loop bound is max_hops (worst case); rescale
+            # the dominant while with the measured expected hop count.
+            main_body = max(cost["while_detail"], key=lambda w: w["hbm"])
+            cost = H.analyze_text(
+                text, trip_overrides={main_body["body"]: int(est_hops)})
+            rec["trip_override"] = {main_body["body"]: int(est_hops)}
+        rec["hlo_cost"] = {k: cost[k] for k in
+                           ("flops", "hbm_bytes", "collective_bytes")}
+        rec["per_collective"] = cost["per_collective"]
+        rec["while_detail"] = cost["while_detail"][:12]
+
+        kind = prog.kind
+        dims = dict(prog.meta)
+        cfg = dims.pop("cfg", None)
+        cell_dims = (get_arch(arch).cell(shape).dims
+                     if arch != "deg-ann" else prog.meta)
+        mf = R.model_flops_for(prog.meta, kind, cell_dims)
+        roof = R.from_costs(cost["flops"], cost["hbm_bytes"],
+                            cost["collective_bytes"], model_flops=mf,
+                            devices=rec["devices"])
+        rec["roofline"] = roof.as_dict()
+        rec["status"] = "ok"
+        if dump_hlo:
+            suffix = f".{variant}" if variant else ""
+            hp = os.path.join(out_dir, mesh_name,
+                              f"{arch}__{shape}{suffix}.hlo.txt")
+            os.makedirs(os.path.dirname(hp), exist_ok=True)
+            with open(hp, "w") as f:
+                f.write(text)
+    except SkippedCell as e:
+        rec["status"] = "skipped"
+        rec["reason"] = str(e)
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+
+    suffix = f".{variant}" if variant else ""
+    path = os.path.join(out_dir, mesh_name, f"{arch}__{shape}{suffix}.json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="reports/dryrun")
+    ap.add_argument("--hlo", action="store_true", help="dump optimized HLO")
+    ap.add_argument("--variant", default="", help="suffix for perf variants")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    cells = _cells_for(args.arch)
+    if args.shape:
+        cells = [(a, s) for a, s in cells if s == args.shape]
+    if args.list:
+        for a, s in cells:
+            print(f"{a:24s} {s}")
+        return 0
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = 0
+    for mp in meshes:
+        for arch, shape in cells:
+            rec = run_cell(arch, shape, mp, args.out, dump_hlo=args.hlo,
+                           variant=args.variant)
+            roof = rec.get("roofline", {})
+            print(f"[{rec['mesh']}] {arch}/{shape}: {rec['status']} "
+                  f"lower={rec.get('lower_s', '-')}s "
+                  f"compile={rec.get('compile_s', '-')}s "
+                  f"bottleneck={roof.get('bottleneck', '-')}",
+                  flush=True)
+            if rec["status"] == "error":
+                failures += 1
+                print(rec.get("error"), file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

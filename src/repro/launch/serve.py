@@ -1,0 +1,105 @@
+"""Serving launcher: ``python -m repro.launch.serve``.
+
+Loads (or builds) a DEG index, then drives the batched QueryEngine through a
+synthetic request trace mixing fresh ANN queries, exploration sessions, and
+online inserts — the interactive-browsing workload the paper targets
+(§1, §6.7).  Reports QPS and recall.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--index", default=None, help=".npz from build_index.py")
+    ap.add_argument("--n", type=int, default=8000)
+    ap.add_argument("--dim", type=int, default=32)
+    ap.add_argument("--degree", type=int, default=16)
+    ap.add_argument("--queries", type=int, default=512)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--explore-sessions", type=int, default=8)
+    ap.add_argument("--insert-every", type=int, default=0,
+                    help="insert one new vector every N queries")
+    ap.add_argument("--refine-budget", type=int, default=0)
+    ap.add_argument("--build-refine", type=int, default=500,
+                    help="refinement iterations after build (paper Alg. 5; "
+                    "without it recall plateaus — see EXPERIMENTS.md)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.core.build import DEGIndex, DEGParams, build_deg
+    from repro.core.distances import exact_knn_batched
+    from repro.core.metrics import recall_at_k
+    from repro.data.synthetic import make_dataset
+    from repro.serving.engine import QueryEngine
+
+    if args.index:
+        z = np.load(args.index)
+        params = DEGParams(degree=int(z["degree"]),
+                           k_ext=max(2 * int(z["degree"]), 20))
+        idx = DEGIndex(z["vectors"].shape[1], params,
+                       capacity=z["vectors"].shape[0] + 1024)
+        idx.vectors[: z["vectors"].shape[0]] = z["vectors"]
+        idx._put_rows(z["vectors"], 0)
+        from repro.core.graph import GraphBuilder
+
+        b = GraphBuilder(idx.capacity, int(z["degree"]))
+        b.adjacency[: z["adjacency"].shape[0]] = z["adjacency"]
+        b.weights[: z["weights"].shape[0]] = z["weights"]
+        b.n = z["adjacency"].shape[0]
+        idx.builder = b
+        base = z["vectors"]
+        rng = np.random.default_rng(args.seed)
+        queries = base[rng.integers(0, base.shape[0], args.queries)] + \
+            0.01 * rng.normal(size=(args.queries, base.shape[1])
+                              ).astype(np.float32)
+    else:
+        base, queries = make_dataset("gaussian", args.n, args.queries,
+                                     args.dim, seed=args.seed)
+        idx = build_deg(base, DEGParams(degree=args.degree,
+                                        k_ext=2 * args.degree),
+                        wave_size=16,
+                        refine_iterations=args.build_refine)
+    engine = QueryEngine(idx, k=args.k, max_batch=args.batch,
+                         refine_budget=args.refine_budget)
+
+    futs = []
+    t0 = time.time()
+    for i, q in enumerate(queries):
+        futs.append(engine.submit(q))
+        if args.insert_every and i % args.insert_every == args.insert_every - 1:
+            engine.insert(q + 0.05 * np.random.default_rng(i).normal(
+                size=q.shape).astype(np.float32))
+    engine.flush()
+    wall = time.time() - t0
+    found = np.stack([f["ids"] for f in futs])
+    _, gt = exact_knn_batched(queries, base, args.k)
+    rec = recall_at_k(found, gt)
+    print(f"served {len(futs)} queries in {wall:.2f}s "
+          f"({engine.stats.qps:.0f} qps device-time), recall@{args.k}={rec:.4f}, "
+          f"{engine.stats.inserts} inserts, "
+          f"{engine.stats.refine_iterations} refine iterations")
+
+    # exploration sessions (paper §6.7): 4 hops each, no repeats
+    for s in range(args.explore_sessions):
+        v = int(np.random.default_rng(s).integers(0, idx.n))
+        seen: set = set()
+        for _ in range(4):
+            fut = engine.explore(v, session=f"s{s}")
+            engine.flush()
+            ids = [int(x) for x in fut["ids"] if x >= 0]
+            assert not (set(ids) & seen), "session exclusion violated"
+            seen.update(ids)
+            if ids:
+                v = ids[0]
+    print(f"ran {args.explore_sessions} exploration sessions "
+          f"(4 hops each, exclusion verified)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Model substrate: the assigned architectures as pure-JAX pytree models.
+
+Nothing here depends on the ANN core; the integration point is that these
+models *produce embeddings* that DEG indexes (see DESIGN.md §5).
+"""

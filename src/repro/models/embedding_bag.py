@@ -1,0 +1,95 @@
+"""EmbeddingBag built from JAX primitives (no native op exists).
+
+Two layouts:
+
+* ``embedding_bag_fixed``  — fixed fields (B, F): gather + (weighted) sum.
+  This is the DLRM/DCN layout; the Pallas kernel ``kernels/bag_lookup`` is
+  the fused version and is tested against this function.
+* ``embedding_bag_ragged`` — ragged bags flattened to (total_ids,) with
+  ``segment_ids``: ``jnp.take`` + ``jax.ops.segment_sum`` exactly as the
+  assignment prescribes.
+
+``sharded_embedding_lookup`` is the row-sharded distributed variant used
+inside ``shard_map``: each shard owns a contiguous row range of the (stacked)
+table, resolves local hits, and the partial results are psum'd over the
+sharding axes.  See distributed/sharding.py for the axis layout and
+EXPERIMENTS.md §Perf for the reduce-scatter optimization of this collective.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def embedding_bag_fixed(table: Array, ids: Array,
+                        weights: Optional[Array] = None,
+                        combiner: str = "sum") -> Array:
+    """table (V, E), ids (B, F) -> (B, E). INVALID (<0) ids contribute 0."""
+    V = table.shape[0]
+    valid = ids >= 0
+    safe = jnp.clip(ids, 0, V - 1)
+    rows = jnp.take(table, safe, axis=0)                 # (B, F, E)
+    w = valid.astype(rows.dtype)
+    if weights is not None:
+        w = w * weights.astype(rows.dtype)
+    out = jnp.sum(rows * w[..., None], axis=1)
+    if combiner == "mean":
+        out = out / jnp.maximum(w.sum(axis=1, keepdims=True), 1.0)
+    elif combiner != "sum":
+        raise ValueError(combiner)
+    return out
+
+
+def embedding_bag_ragged(table: Array, flat_ids: Array, segment_ids: Array,
+                         num_bags: int,
+                         weights: Optional[Array] = None,
+                         combiner: str = "sum") -> Array:
+    """Ragged bags: flat_ids (N,), segment_ids (N,) -> (num_bags, E)."""
+    rows = jnp.take(table, flat_ids, axis=0)             # (N, E)
+    if weights is not None:
+        rows = rows * weights[:, None].astype(rows.dtype)
+    out = jax.ops.segment_sum(rows, segment_ids, num_segments=num_bags)
+    if combiner == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones_like(flat_ids, rows.dtype),
+                                  segment_ids, num_segments=num_bags)
+        out = out / jnp.maximum(cnt[:, None], 1.0)
+    return out
+
+
+def embedding_bag_max(table: Array, flat_ids: Array, segment_ids: Array,
+                      num_bags: int) -> Array:
+    rows = jnp.take(table, flat_ids, axis=0)
+    return jax.ops.segment_max(rows, segment_ids, num_segments=num_bags)
+
+
+def sharded_embedding_lookup(local_table: Array, ids: Array, row_offset: Array,
+                             axis_names: Sequence[str]) -> Array:
+    """Row-sharded lookup inside shard_map.
+
+    local_table (V_local, E): this shard's row range [row_offset,
+    row_offset + V_local); ids (B, F) are *global* row indices.  Returns the
+    full (B, F, E) gather, psum'd over ``axis_names``.
+    """
+    V_local = local_table.shape[0]
+    local = ids - row_offset
+    valid = (local >= 0) & (local < V_local)
+    safe = jnp.clip(local, 0, V_local - 1)
+    rows = jnp.take(local_table, safe, axis=0)           # (B, F, E)
+    rows = jnp.where(valid[..., None], rows, 0.0)
+    return jax.lax.psum(rows, axis_names)
+
+
+def stack_vocab_offsets(vocab_sizes: Sequence[int]) -> tuple[int, jnp.ndarray]:
+    """Stack per-field tables into one big table: returns (V_total, offsets)."""
+    import numpy as np
+
+    off = np.zeros(len(vocab_sizes), dtype=np.int32)
+    total = 0
+    for i, v in enumerate(vocab_sizes):
+        off[i] = total
+        total += int(v)
+    return total, jnp.asarray(off)

@@ -1,0 +1,199 @@
+"""Shared neural layers (pure JAX, pytree params, no framework deps).
+
+Conventions:
+* params are nested dicts of fp32 arrays; compute casts to ``cfg.dtype``
+  (bf16 by default) with fp32 logits/softmax/norm statistics;
+* every ``init_*`` has a matching ``abs_*`` twin returning
+  ``jax.ShapeDtypeStruct`` so the dry-run can build the full-size parameter
+  tree without allocating memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+def dense_init(key, shape, scale: Optional[float] = None, dtype=jnp.float32):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape)
+            ).astype(dtype)
+
+
+def abs_p(*shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: Array, scale: Array, bias: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings
+# --------------------------------------------------------------------------
+def rope_frequencies(d_head: int, theta: float = 10000.0) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32)
+                            / d_head))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """x (..., S, H, Dh), positions (..., S) -> rotated x (pairwise halves)."""
+    d_head = x.shape[-1]
+    inv = rope_frequencies(d_head, theta)                    # (Dh/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., S, Dh/2)
+    cos = jnp.cos(ang)[..., None, :]                         # (..., S, 1, Dh/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention (GQA + causal + optional sliding window + query chunking)
+# --------------------------------------------------------------------------
+_NEG = -1e30   # large finite mask value: softmax of an all-masked row is
+               # uniform, never NaN (matters under remat'd backward)
+
+
+def _mask_bias(q_pos: Array, k_pos: Array, window: Optional[int],
+               k_valid: Optional[Array] = None) -> Array:
+    """additive fp32 bias (Sq, Sk): 0 where attendable, -1e30 otherwise.
+
+    Positions are **1-D** — they are identical across the batch, so the bias
+    must not carry a batch dim (a (B, Sq, Sk) fp32 bias is a replicated
+    multi-GB buffer under SPMD; found via the dry-run HLO, see EXPERIMENTS.md
+    §Perf)."""
+    causal = k_pos[None, :] <= q_pos[:, None]
+    ok = causal
+    if window is not None:  # may be a traced per-layer scalar (scan body)
+        w = jnp.asarray(window, jnp.int32)
+        ok &= (q_pos[:, None] - k_pos[None, :]) < w
+    if k_valid is not None:
+        ok &= k_valid[None, :]
+    return jnp.where(ok, 0.0, _NEG).astype(jnp.float32)
+
+
+def gqa_attention(q: Array, k: Array, v: Array, q_pos: Array, k_pos: Array,
+                  *, window: Optional[int] = None,
+                  k_valid: Optional[Array] = None,
+                  q_chunk: Optional[int] = None,
+                  softmax_scale: Optional[float] = None) -> Array:
+    """q (B, Sq, Hq, Dh), k/v (B, Sk, Hkv, Dh) -> (B, Sq, Hq, Dh).
+
+    ``q_pos`` (Sq,) / ``k_pos`` (Sk,) are 1-D position ids shared by every
+    batch lane.  ``q_chunk`` bounds the materialized score tile to
+    (B, H, q_chunk, Sk) — the pure-JAX flash-style path for long prefill.
+    ``k_valid`` (Sk,) masks cache slots (decode).
+    """
+    B, Sq, Hq, Dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    rep = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / np.sqrt(Dh)
+    if rep > 1:
+        # Expand KV groups to full query heads (Megatron-style replication).
+        # Keeping the grouped (Hkv, rep) einsum pins the shardable head dim
+        # to Hkv, which is smaller than the "model" axis for every assigned
+        # GQA config — the expanded form lets TP shard all Hq heads and
+        # keeps the fp32 score tile fully partitioned (dry-run finding,
+        # EXPERIMENTS.md §Perf).
+        k = jnp.broadcast_to(k[:, :, :, None, :],
+                             (B, Sk, Hkv, rep, Dh)).reshape(B, Sk, Hq, Dh)
+        v = jnp.broadcast_to(v[:, :, :, None, :],
+                             (B, Sk, Hkv, rep, Dh)).reshape(B, Sk, Hq, Dh)
+
+    def attend(qc: Array, qp: Array) -> Array:
+        # qc (B, Sc, Hq, Dh) -> (B, Sc, Hq, Dh); bf16 MXU, fp32 accumulate
+        logits = jnp.einsum("bqhd,bkhd->bhqk", qc, k,
+                            preferred_element_type=jnp.float32) * scale
+        bias = _mask_bias(qp, k_pos, window, k_valid)        # (Sc, Sk)
+        logits = logits + bias[None, None, :, :]
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(q.dtype), v,
+                         preferred_element_type=jnp.float32)
+        return out.astype(q.dtype)
+
+    if q_chunk is None or q_chunk >= Sq:
+        return attend(q, q_pos)
+    n_chunks = (Sq + q_chunk - 1) // q_chunk
+    pad = n_chunks * q_chunk - Sq
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    pp = jnp.pad(q_pos, (0, pad), constant_values=-1)
+    qs = qp.reshape(B, n_chunks, q_chunk, Hq, Dh).swapaxes(0, 1)
+    ps = pp.reshape(n_chunks, q_chunk)
+    out = jax.lax.map(lambda t: attend(*t), (qs, ps))
+    out = out.swapaxes(0, 1).reshape(B, n_chunks * q_chunk, Hq, Dh)
+    return out[:, :Sq]
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+def swiglu(x: Array, w_gate: Array, w_up: Array, w_down: Array) -> Array:
+    dt = x.dtype
+    g = jax.nn.silu(x @ w_gate.astype(dt))
+    u = x @ w_up.astype(dt)
+    return ((g * u) @ w_down.astype(dt))
+
+
+def gelu_mlp(x: Array, w_up: Array, b_up: Array, w_down: Array,
+             b_down: Array) -> Array:
+    dt = x.dtype
+    h = jax.nn.gelu(x @ w_up.astype(dt) + b_up.astype(dt))
+    return h @ w_down.astype(dt) + b_down.astype(dt)
+
+
+def mlp_tower(key, sizes: list[int], dtype=jnp.float32) -> dict:
+    """Plain MLP parameter stack: sizes [in, h1, ..., out]."""
+    keys = jax.random.split(key, len(sizes) - 1)
+    return {
+        f"w{i}": dense_init(keys[i], (sizes[i], sizes[i + 1]), dtype=dtype)
+        for i in range(len(sizes) - 1)
+    } | {
+        f"b{i}": jnp.zeros((sizes[i + 1],), dtype) for i in range(len(sizes) - 1)
+    }
+
+
+def abs_mlp_tower(sizes: list[int], dtype=jnp.float32) -> dict:
+    return {f"w{i}": abs_p(sizes[i], sizes[i + 1], dtype=dtype)
+            for i in range(len(sizes) - 1)} | {
+        f"b{i}": abs_p(sizes[i + 1], dtype=dtype)
+        for i in range(len(sizes) - 1)}
+
+
+def apply_mlp_tower(params: dict, x: Array, act=jax.nn.relu,
+                    final_act=None) -> Array:
+    n = len([k for k in params if k.startswith("w")])
+    dt = x.dtype
+    for i in range(n):
+        x = x @ params[f"w{i}"].astype(dt) + params[f"b{i}"].astype(dt)
+        if i < n - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x

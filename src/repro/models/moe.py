@@ -1,0 +1,126 @@
+"""Mixture-of-Experts FFN with sort-free scatter dispatch.
+
+Design notes (see DESIGN.md §4):
+
+* **Dispatch** is linear-cost: top-k routing -> position-in-expert via a
+  cumsum over one-hot assignments -> scatter into a static ``(E, C, D)``
+  buffer (capacity ``C = ceil(T*k*cf/E)``, overflow tokens *dropped* like
+  GShard/Switch) -> 3 batched expert GEMMs -> gather-combine weighted by the
+  (renormalized) router probabilities.  No quadratic one-hot einsum.
+* **Sharding**: expert-TP — every device holds all experts but a 1/TP slice
+  of each expert's hidden dim (``we_* sharded on the F_e axis``).  Dispatch
+  stays local to the device's tokens; the only collective is the standard
+  row-parallel psum after ``we_down`` — identical schedule to the dense MLP,
+  robust under GSPMD.  (Expert-parallel all-to-all is the alternative; noted
+  as a perf iteration.)
+* Aux load-balance loss (Switch-style): ``E * sum_e f_e * p_e``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .layers import abs_p, dense_init
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    # SPMD: constrain the expert-hidden activations to P(..., "model") so
+    # GSPMD gathers the (small) FSDP-sharded expert weights instead of
+    # partial-contracting d_model and ALL-REDUCING the (huge) expert
+    # activations.  Only meaningful under a mesh; see transformer._ffn_block.
+    shard_hidden: bool = False
+
+
+def _capacity(T: int, moe: MoEConfig) -> int:
+    c = int(T * moe.top_k * moe.capacity_factor / moe.n_experts) + 1
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def abs_moe_layer(L: int, d_model: int, moe: MoEConfig) -> dict:
+    E, F = moe.n_experts, moe.d_ff_expert
+    return {
+        "router": abs_p(L, d_model, E),
+        "we_gate": abs_p(L, E, d_model, F),
+        "we_up": abs_p(L, E, d_model, F),
+        "we_down": abs_p(L, E, F, d_model),
+    }
+
+
+def init_moe_layer(key, L: int, d_model: int, moe: MoEConfig) -> dict:
+    E, F = moe.n_experts, moe.d_ff_expert
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "router": dense_init(k1, (L, d_model, E)),
+        "we_gate": dense_init(k2, (L, E, d_model, F)),
+        "we_up": dense_init(k3, (L, E, d_model, F)),
+        "we_down": dense_init(k4, (L, E, F, d_model)),
+    }
+
+
+def moe_ffn(x: Array, lp: dict, moe: MoEConfig) -> tuple[Array, Array]:
+    """x (T, D) -> (y (T, D), aux_loss scalar)."""
+    T, D = x.shape
+    E, K = moe.n_experts, moe.top_k
+    dt = x.dtype
+    C = _capacity(T, moe)
+
+    logits = (x @ lp["router"].astype(dt)).astype(jnp.float32)   # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_ids = jax.lax.top_k(probs, K)                     # (T, K)
+    top_w = (top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+             ).astype(jnp.float32)
+
+    flat_e = top_ids.reshape(-1)                                 # (T*K,)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+    flat_w = top_w.reshape(-1)
+
+    # position of each assignment inside its expert's buffer
+    oh = (flat_e[:, None] == jnp.arange(E, dtype=jnp.int32)[None, :]
+          ).astype(jnp.int32)                                    # (T*K, E)
+    pos_all = jnp.cumsum(oh, axis=0) - 1
+    my_pos = jnp.take_along_axis(pos_all, flat_e[:, None], axis=1)[:, 0]
+    keep = my_pos < C
+    safe_e = jnp.where(keep, flat_e, E)                          # E = dump row
+    safe_p = jnp.where(keep, my_pos, 0)
+
+    buf = jnp.zeros((E + 1, C, D), dt)
+    buf = buf.at[safe_e, safe_p].set(x[flat_t])
+    xb = buf[:E]                                                 # (E, C, D)
+
+    def wsc(t, spec):
+        if not moe.shard_hidden:
+            return t
+        return jax.lax.with_sharding_constraint(
+            t, jax.sharding.PartitionSpec(*spec))
+
+    xb = wsc(xb, (None, None, None))
+    g = jax.nn.silu(wsc(jnp.einsum("ecd,edf->ecf", xb,
+                                   lp["we_gate"].astype(dt)),
+                        (None, None, "model")))
+    u = wsc(jnp.einsum("ecd,edf->ecf", xb, lp["we_up"].astype(dt)),
+            (None, None, "model"))
+    # yb left unconstrained: pinning it replicated forces the row-parallel
+    # all-reduce at the (E, C, D) capacity buffer; unpinned, GSPMD may defer
+    # the reduction to after the per-token gather (T < E*C rows).
+    yb = jnp.einsum("ecf,efd->ecd", g * u, lp["we_down"].astype(dt))
+
+    yb = jnp.concatenate([yb, jnp.zeros((1, C, D), dt)], axis=0)
+    contrib = yb[safe_e, safe_p] * (flat_w * keep)[:, None].astype(dt)
+    y = jax.ops.segment_sum(contrib, flat_t, num_segments=T)
+
+    # Switch-style load-balance loss
+    frac_tokens = jnp.mean(
+        (top_ids[..., None] == jnp.arange(E)).any(axis=1).astype(jnp.float32),
+        axis=0)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac_tokens * mean_prob)
+    return y.astype(dt), aux

@@ -1,0 +1,273 @@
+"""RecSys architectures: DLRM (MLPerf), DCN-v2, DeepFM, DIN.
+
+Common skeleton: huge sparse embedding tables (stacked per-field into ONE
+(V_total, E) table with static row offsets) -> a feature-interaction op
+(dot / cross / FM / target-attention) -> a small MLP tower -> 1 logit.
+
+The embedding lookup is the hot path.  Models take a ``lookup_fn`` so the
+same forward runs (a) single-host with a plain gather, (b) under the
+production mesh with the row-sharded shard_map lookup from
+``models.embedding_bag.sharded_embedding_lookup``, or (c) through the
+``bag_lookup`` Pallas kernel.
+
+`retrieval_cand` serving (1 query x 1M candidates) uses ``user_embedding``
+against the item-embedding rows — scored either brute-force via the
+``l2_topk`` kernel or through a DEG index built over the item vectors (the
+paper's technique serving the retrieval stage; see examples/).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .embedding_bag import stack_vocab_offsets
+from .layers import abs_mlp_tower, abs_p, apply_mlp_tower, dense_init, mlp_tower
+
+Array = jax.Array
+
+# Criteo-Kaggle categorical cardinalities (widely published)
+CRITEO_KAGGLE_VOCABS = (
+    1460, 583, 10131227, 2202608, 305, 24, 12517, 633, 3, 93145, 5683,
+    8351593, 3194, 27, 14992, 5461306, 10, 5652, 2173, 4, 7046547, 18, 15,
+    286181, 105, 142572)
+# Criteo-Terabyte cardinalities used by MLPerf DLRM (day 0-23 counts)
+CRITEO_TB_VOCABS = (
+    45833188, 36746, 17245, 7413, 20243, 3, 7114, 1441, 62, 29275261,
+    1572176, 345138, 10, 2209, 11267, 128, 4, 974, 14, 48937457, 11316796,
+    40094537, 452104, 12606, 104, 35)
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    kind: str                       # 'dlrm' | 'dcn-v2' | 'deepfm' | 'din'
+    n_dense: int
+    n_sparse: int
+    embed_dim: int
+    vocab_sizes: tuple
+    mlp: tuple                      # top tower hidden sizes
+    bot_mlp: tuple = ()             # dlrm bottom tower
+    n_cross: int = 0                # dcn-v2
+    attn_mlp: tuple = ()            # din
+    seq_len: int = 0                # din history length
+    item_field: int = 0             # din: which field is the target item
+    dtype: object = jnp.float32
+    # stacked-table row padding: round total_rows up to a multiple, so the
+    # row-sharded shard_map lookup divides evenly (distributed/collectives).
+    # Padded rows are never addressed by real ids.
+    table_pad_to: int = 1
+
+    def __post_init__(self):
+        assert len(self.vocab_sizes) == self.n_sparse, (
+            len(self.vocab_sizes), self.n_sparse)
+
+    @property
+    def total_rows(self) -> int:
+        n = int(sum(self.vocab_sizes))
+        p = max(self.table_pad_to, 1)
+        return -(-n // p) * p
+
+    @property
+    def x0_dim(self) -> int:
+        """Input width of the interaction stage."""
+        if self.kind == "dlrm":
+            return self.embed_dim          # bottom-mlp output
+        if self.kind == "dcn-v2":
+            return self.n_dense + self.n_sparse * self.embed_dim
+        if self.kind == "deepfm":
+            return self.n_sparse * self.embed_dim
+        if self.kind == "din":
+            # target item + attention-pooled history + profile fields
+            return (self.n_sparse + 1) * self.embed_dim
+        raise ValueError(self.kind)
+
+
+# --------------------------------------------------------------------------
+# parameters
+# --------------------------------------------------------------------------
+def abstract_params(cfg: RecsysConfig) -> dict:
+    E = cfg.embed_dim
+    p: dict = {"table": abs_p(cfg.total_rows, E)}
+    if cfg.kind == "dlrm":
+        p["bot_mlp"] = abs_mlp_tower([cfg.n_dense, *cfg.bot_mlp])
+        n_int = cfg.n_sparse + 1
+        top_in = E + n_int * (n_int - 1) // 2
+        p["top_mlp"] = abs_mlp_tower([top_in, *cfg.mlp])
+    elif cfg.kind == "dcn-v2":
+        d = cfg.x0_dim
+        p["cross_w"] = abs_p(cfg.n_cross, d, d)
+        p["cross_b"] = abs_p(cfg.n_cross, d)
+        p["top_mlp"] = abs_mlp_tower([d, *cfg.mlp, 1])
+    elif cfg.kind == "deepfm":
+        p["fm_w"] = abs_p(cfg.total_rows)      # first-order weights
+        p["fm_b"] = abs_p()
+        p["top_mlp"] = abs_mlp_tower([cfg.x0_dim, *cfg.mlp, 1])
+    elif cfg.kind == "din":
+        E4 = 4 * E
+        p["attn_mlp"] = abs_mlp_tower([E4, *cfg.attn_mlp, 1])
+        p["top_mlp"] = abs_mlp_tower([cfg.x0_dim, *cfg.mlp, 1])
+    return p
+
+
+def init_params(key: jax.Array, cfg: RecsysConfig) -> dict:
+    E = cfg.embed_dim
+    ks = iter(jax.random.split(key, 16))
+    p: dict = {"table": dense_init(next(ks), (cfg.total_rows, E), scale=0.01)}
+    if cfg.kind == "dlrm":
+        p["bot_mlp"] = mlp_tower(next(ks), [cfg.n_dense, *cfg.bot_mlp])
+        n_int = cfg.n_sparse + 1
+        top_in = E + n_int * (n_int - 1) // 2
+        p["top_mlp"] = mlp_tower(next(ks), [top_in, *cfg.mlp])
+    elif cfg.kind == "dcn-v2":
+        d = cfg.x0_dim
+        p["cross_w"] = dense_init(next(ks), (cfg.n_cross, d, d), scale=0.01)
+        p["cross_b"] = jnp.zeros((cfg.n_cross, d), jnp.float32)
+        p["top_mlp"] = mlp_tower(next(ks), [d, *cfg.mlp, 1])
+    elif cfg.kind == "deepfm":
+        p["fm_w"] = dense_init(next(ks), (cfg.total_rows,), scale=0.01)
+        p["fm_b"] = jnp.zeros((), jnp.float32)
+        p["top_mlp"] = mlp_tower(next(ks), [cfg.x0_dim, *cfg.mlp, 1])
+    elif cfg.kind == "din":
+        p["attn_mlp"] = mlp_tower(next(ks), [4 * E, *cfg.attn_mlp, 1])
+        p["top_mlp"] = mlp_tower(next(ks), [cfg.x0_dim, *cfg.mlp, 1])
+    return p
+
+
+# --------------------------------------------------------------------------
+# lookup plumbing
+# --------------------------------------------------------------------------
+def default_lookup(table: Array, flat_ids: Array) -> Array:
+    """Plain gather: flat_ids (...,) global row ids -> (..., E)."""
+    return jnp.take(table, flat_ids, axis=0)
+
+
+def global_ids(cfg: RecsysConfig, sparse: Array) -> Array:
+    """Per-field ids (B, F) -> global stacked-table rows (B, F)."""
+    _, offsets = stack_vocab_offsets(cfg.vocab_sizes)
+    return sparse + offsets[None, :]
+
+
+# --------------------------------------------------------------------------
+# forwards
+# --------------------------------------------------------------------------
+def _dlrm_interact(emb: Array, bot: Array) -> Array:
+    """emb (B, F, E), bot (B, E) -> (B, E + F+1 choose 2) dot interactions."""
+    z = jnp.concatenate([bot[:, None, :], emb], axis=1)    # (B, F+1, E)
+    zz = jnp.einsum("bie,bje->bij", z, z)
+    n = z.shape[1]
+    iu = jnp.triu_indices(n, k=1)
+    flat = zz[:, iu[0], iu[1]]                             # (B, n(n-1)/2)
+    return jnp.concatenate([bot, flat], axis=1)
+
+
+def forward(params: dict, batch: dict, cfg: RecsysConfig,
+            lookup_fn: Callable = default_lookup) -> Array:
+    """Returns logits (B,)."""
+    dt = cfg.dtype
+    if cfg.kind == "din":
+        return _din_forward(params, batch, cfg, lookup_fn)
+    gids = global_ids(cfg, batch["sparse"])
+    emb = lookup_fn(params["table"], gids).astype(dt)      # (B, F, E)
+    if cfg.kind == "dlrm":
+        dense = jnp.log1p(jnp.maximum(batch["dense"].astype(dt), 0.0))
+        bot = apply_mlp_tower(params["bot_mlp"], dense, act=jax.nn.relu,
+                              final_act=jax.nn.relu)
+        x = _dlrm_interact(emb, bot)
+        out = apply_mlp_tower(params["top_mlp"], x, act=jax.nn.relu)
+        return out[:, 0].astype(jnp.float32)
+    if cfg.kind == "dcn-v2":
+        dense = jnp.log1p(jnp.maximum(batch["dense"].astype(dt), 0.0))
+        x0 = jnp.concatenate([dense, emb.reshape(emb.shape[0], -1)], axis=1)
+        x = x0
+        for i in range(cfg.n_cross):
+            w = params["cross_w"][i].astype(dt)
+            b = params["cross_b"][i].astype(dt)
+            x = x0 * (x @ w + b) + x                       # DCN-v2 cross
+        out = apply_mlp_tower(params["top_mlp"], x, act=jax.nn.relu)
+        return out[:, 0].astype(jnp.float32)
+    if cfg.kind == "deepfm":
+        # FM second order: 0.5 * ((sum v)^2 - sum v^2), summed over E
+        s = jnp.sum(emb, axis=1)
+        s2 = jnp.sum(emb * emb, axis=1)
+        fm2 = 0.5 * jnp.sum(s * s - s2, axis=1)
+        fm1 = jnp.sum(jnp.take(params["fm_w"], gids, axis=0), axis=1)
+        deep = apply_mlp_tower(params["top_mlp"],
+                               emb.reshape(emb.shape[0], -1),
+                               act=jax.nn.relu)[:, 0]
+        return (fm1 + fm2 + deep + params["fm_b"]).astype(jnp.float32)
+    raise ValueError(cfg.kind)
+
+
+def _din_forward(params, batch, cfg, lookup_fn) -> Array:
+    dt = cfg.dtype
+    gids = global_ids(cfg, batch["sparse"])
+    emb = lookup_fn(params["table"], gids).astype(dt)      # (B, F, E)
+    target = emb[:, cfg.item_field]                        # (B, E)
+    _, offsets = stack_vocab_offsets(cfg.vocab_sizes)
+    hist_gids = batch["hist"] + offsets[cfg.item_field]
+    hist = lookup_fn(params["table"], hist_gids).astype(dt)  # (B, S, E)
+    valid = (batch["hist"] >= 0)[..., None].astype(dt)
+    hist = hist * valid
+    t = jnp.broadcast_to(target[:, None, :], hist.shape)
+    af = jnp.concatenate([hist, t, hist - t, hist * t], axis=-1)
+    scores = apply_mlp_tower(params["attn_mlp"], af, act=jax.nn.sigmoid)
+    scores = jnp.where(valid > 0, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=1)                     # (B, S, 1)
+    interest = jnp.sum(w * hist, axis=1)                   # (B, E)
+    x = jnp.concatenate([emb.reshape(emb.shape[0], -1), interest], axis=1)
+    out = apply_mlp_tower(params["top_mlp"], x, act=jax.nn.relu)
+    return out[:, 0].astype(jnp.float32)
+
+
+def loss_fn(params: dict, batch: dict, cfg: RecsysConfig,
+            lookup_fn: Callable = default_lookup):
+    logits = forward(params, batch, cfg, lookup_fn)
+    y = batch["label"].astype(jnp.float32)
+    loss = jnp.mean(jnp.maximum(logits, 0) - logits * y
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    return loss, {"bce": loss}
+
+
+# --------------------------------------------------------------------------
+# retrieval serving (the DEG integration point)
+# --------------------------------------------------------------------------
+def user_embedding(params: dict, batch: dict, cfg: RecsysConfig,
+                   lookup_fn: Callable = default_lookup) -> Array:
+    """A query-side vector in item-embedding space."""
+    dt = cfg.dtype
+    if cfg.kind == "din":
+        gids = global_ids(cfg, batch["sparse"])
+        emb = lookup_fn(params["table"], gids).astype(dt)
+        _, offsets = stack_vocab_offsets(cfg.vocab_sizes)
+        hist = lookup_fn(params["table"],
+                         batch["hist"] + offsets[cfg.item_field]).astype(dt)
+        valid = (batch["hist"] >= 0)[..., None].astype(dt)
+        pooled = jnp.sum(hist * valid, 1) / jnp.maximum(valid.sum(1), 1.0)
+        return pooled.astype(jnp.float32)
+    gids = global_ids(cfg, batch["sparse"])
+    emb = lookup_fn(params["table"], gids).astype(dt)
+    return jnp.mean(emb, axis=1).astype(jnp.float32)
+
+
+def serve_retrieval(params: dict, batch: dict, candidates: Array,
+                    cfg: RecsysConfig, k: int = 100,
+                    lookup_fn: Callable = default_lookup):
+    """Score ``candidates`` (N, E) for each query; exact top-k (the
+    brute-force path; the DEG path lives in serving/engine.py)."""
+    u = user_embedding(params, batch, cfg, lookup_fn)      # (B, E)
+    scores = u @ candidates.T.astype(u.dtype)              # (B, N)
+    top, ids = jax.lax.top_k(scores, k)
+    return top, ids
+
+
+def item_vectors(params: dict, cfg: RecsysConfig, field: int,
+                 n_items: Optional[int] = None) -> Array:
+    """Rows of one field's embedding table = the candidate corpus."""
+    _, offsets = stack_vocab_offsets(cfg.vocab_sizes)
+    start = int(np.asarray(offsets)[field])
+    n = n_items or int(cfg.vocab_sizes[field])
+    return jax.lax.dynamic_slice_in_dim(params["table"], start, n, axis=0)

@@ -1,0 +1,433 @@
+"""Decoder-only transformer covering the five assigned LM architectures.
+
+One parameterized implementation: RMSNorm + RoPE + GQA + SwiGLU, optional
+sliding-window layers (Mixtral: all layers; Gemma-3: 5 local : 1 global) and
+optional MoE FFN (Qwen3-MoE, Mixtral).  Parameters are a pytree of fp32
+arrays; per-layer weights carry a leading ``L`` dim and the *training*
+forward runs ``jax.lax.scan`` over layers (compact HLO, fast multi-pod
+compiles) with ``jax.checkpoint`` remat.  The *serving* path (prefill +
+decode) runs a Python loop over layers so each layer can own a cache of its
+natural size — sliding-window layers keep a ring buffer of ``window`` slots
+instead of the full context (the reason gemma3 decode_32k fits on a v5e).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import (abs_p, apply_rope, dense_init, gqa_attention, rms_norm,
+                     swiglu)
+from .moe import MoEConfig, abs_moe_layer, init_moe_layer, moe_ffn
+
+Array = jax.Array
+
+
+def _wsc(x: Array, cfg: "TransformerConfig") -> Array:
+    """Constrain (B, S, D) activations to the configured layout."""
+    if cfg.act_batch_axes is None and cfg.act_seq_axis is None:
+        return x
+    spec = jax.sharding.PartitionSpec(cfg.act_batch_axes, cfg.act_seq_axis,
+                                      None)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: Optional[int] = None
+    rope_theta: float = 10000.0
+    # sliding window: None = all layers full causal;
+    # set + pattern None = every layer windowed (Mixtral SWA);
+    # set + pattern p   = p local layers then 1 global, repeating (Gemma-3).
+    sliding_window: Optional[int] = None
+    local_global_pattern: Optional[int] = None
+    moe: Optional[MoEConfig] = None
+    tie_embeddings: bool = True
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    q_chunk: int = 1024          # query chunking for long prefill
+    # MoE SPMD dispatch grouping: tokens are reshaped to (G, T/G) and
+    # dispatched per group (vmapped), G = number of data shards.  This keeps
+    # the capacity scatter *local to a shard* — the global-cumsum formulation
+    # would make GSPMD materialize a cross-shard scatter (DESIGN.md §4).
+    moe_groups: int = 1
+    moe_shard_axes: Optional[tuple] = None  # mesh axes to pin groups to
+    # Activation sharding constraint (mesh axis names for the batch dim of
+    # (B, S, D) activations).  Without it the GSPMD solver is free to pick a
+    # batch-replicated layout (observed on the 16x16 dry-run: bf16[256,4096,
+    # 128] activations = batch all-gathered, d_model sharded -> 16x wasted
+    # compute).  None = leave unconstrained (single-device tests).
+    act_batch_axes: Optional[tuple] = None
+    # Optional sequence-sharding axis for stored activations (sequence
+    # parallelism, a §Perf iteration): shards the S dim of layer-boundary
+    # activations; GSPMD inserts all-gather before attention and
+    # reduce-scatter after the FFN.
+    act_seq_axis: Optional[str] = None
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    def is_global_layer(self) -> np.ndarray:
+        """(L,) bool — which layers attend globally."""
+        L = self.n_layers
+        if self.sliding_window is None:
+            return np.ones(L, bool)
+        p = self.local_global_pattern
+        if p is None:
+            return np.zeros(L, bool)
+        return np.array([(i + 1) % (p + 1) == 0 for i in range(L)])
+
+    def layer_window(self, i: int) -> Optional[int]:
+        return None if self.is_global_layer()[i] else self.sliding_window
+
+    @property
+    def param_count(self) -> int:
+        return sum(int(np.prod(x.shape)) for x in
+                   jax.tree.leaves(abstract_params(self)))
+
+    @property
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only top_k experts)."""
+        total = self.param_count
+        if self.moe is None:
+            return total
+        e, k = self.moe.n_experts, self.moe.top_k
+        expert_p = 3 * self.d_model * self.moe.d_ff_expert * self.n_layers * e
+        return total - expert_p + expert_p * k // e
+
+
+# --------------------------------------------------------------------------
+# parameters
+# --------------------------------------------------------------------------
+def _layer_shapes(cfg: TransformerConfig) -> dict[str, tuple]:
+    D, Dh = cfg.d_model, cfg.head_dim
+    s = {
+        "attn_norm": (cfg.n_layers, D),
+        "mlp_norm": (cfg.n_layers, D),
+        "wq": (cfg.n_layers, D, cfg.n_heads * Dh),
+        "wk": (cfg.n_layers, D, cfg.n_kv_heads * Dh),
+        "wv": (cfg.n_layers, D, cfg.n_kv_heads * Dh),
+        "wo": (cfg.n_layers, cfg.n_heads * Dh, D),
+    }
+    if cfg.moe is None:
+        s |= {
+            "w_gate": (cfg.n_layers, D, cfg.d_ff),
+            "w_up": (cfg.n_layers, D, cfg.d_ff),
+            "w_down": (cfg.n_layers, cfg.d_ff, D),
+        }
+    return s
+
+
+def abstract_params(cfg: TransformerConfig) -> dict:
+    layers = {k: abs_p(*v) for k, v in _layer_shapes(cfg).items()}
+    if cfg.moe is not None:
+        layers |= abs_moe_layer(cfg.n_layers, cfg.d_model, cfg.moe)
+    p = {
+        "embed": abs_p(cfg.vocab, cfg.d_model),
+        "final_norm": abs_p(cfg.d_model),
+        "layers": layers,
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = abs_p(cfg.d_model, cfg.vocab)
+    return p
+
+
+def init_params(key: jax.Array, cfg: TransformerConfig) -> dict:
+    ks = iter(jax.random.split(key, 64))
+    layers = {}
+    for name, shape in _layer_shapes(cfg).items():
+        if "norm" in name:
+            layers[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            layers[name] = dense_init(next(ks), shape)
+    if cfg.moe is not None:
+        layers |= init_moe_layer(next(ks), cfg.n_layers, cfg.d_model, cfg.moe)
+    p = {
+        "embed": dense_init(next(ks), (cfg.vocab, cfg.d_model), scale=0.02),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        "layers": layers,
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(next(ks), (cfg.d_model, cfg.vocab))
+    return p
+
+
+# --------------------------------------------------------------------------
+# blocks
+# --------------------------------------------------------------------------
+def _attention_block(lp: dict, x: Array, q_pos: Array, cfg: TransformerConfig,
+                     window_flag: Array, *, k_override=None, v_override=None,
+                     k_pos=None, k_valid=None, q_chunk=None) -> Array:
+    """One attention sub-block. window_flag: scalar bool (True = windowed).
+
+    For the scanned train path the window decision must be a traced per-layer
+    value, so the mask always computes both and selects — the windowed mask is
+    an AND with the causal one, so we pass an *effective window* of either
+    ``cfg.sliding_window`` or ``>= S`` (no-op).
+    """
+    B, S, D = x.shape
+    dt = x.dtype
+    Dh, Hq, Hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = (x @ lp["wq"].astype(dt)).reshape(B, S, Hq, Dh)
+    k = (x @ lp["wk"].astype(dt)).reshape(B, S, Hkv, Dh)
+    v = (x @ lp["wv"].astype(dt)).reshape(B, S, Hkv, Dh)
+    q = apply_rope(q, q_pos, cfg.rope_theta)
+    k = apply_rope(k, q_pos, cfg.rope_theta)
+    if k_override is not None:
+        k, v = k_override, v_override
+    else:
+        k_pos = q_pos
+    if cfg.sliding_window is None:
+        window = None
+    else:
+        # traced select: big window == unrestricted
+        big = jnp.int32(1 << 30)
+        window = jnp.where(window_flag, jnp.int32(cfg.sliding_window), big)
+    out = gqa_attention(q, k, v, q_pos, k_pos, window=window,
+                        k_valid=k_valid, q_chunk=q_chunk)
+    return out.reshape(B, S, Hq * Dh) @ lp["wo"].astype(dt)
+
+
+def _ffn_block(lp: dict, x: Array, cfg: TransformerConfig):
+    """Returns (out, aux_loss)."""
+    if cfg.moe is None:
+        return swiglu(x, lp["w_gate"], lp["w_up"], lp["w_down"]), 0.0
+    B, S, D = x.shape
+    T = B * S
+    G = cfg.moe_groups if T % max(cfg.moe_groups, 1) == 0 else 1
+    if G <= 1:
+        y, aux = moe_ffn(x.reshape(T, D), lp, cfg.moe)
+        return y.reshape(B, S, D), aux
+    xg = x.reshape(G, T // G, D)
+    if cfg.moe_shard_axes is not None:
+        xg = jax.lax.with_sharding_constraint(
+            xg, jax.sharding.PartitionSpec(cfg.moe_shard_axes, None, None))
+    # spmd_axis_name pins every vmapped intermediate (dispatch buffers,
+    # expert activations) to the DP axes on the group dim — without it GSPMD
+    # partial-contracts the FSDP-sharded d_model dim of the expert weights
+    # and ALL-REDUCES the (E, G, C, F) expert activations (observed: 43 GB
+    # per layer on mixtral train_4k; see EXPERIMENTS.md §Perf iteration 2).
+    yg, auxg = jax.vmap(lambda t: moe_ffn(t, lp, cfg.moe),
+                        spmd_axis_name=cfg.moe_shard_axes)(xg)
+    return yg.reshape(B, S, D), jnp.mean(auxg)
+
+
+def _layer(lp: dict, x: Array, q_pos: Array, cfg: TransformerConfig,
+           windowed: Array, q_chunk=None, **attn_kw):
+    x = _wsc(x, cfg)
+    h = rms_norm(x, lp["attn_norm"])
+    x = x + _attention_block(lp, h, q_pos, cfg, windowed, q_chunk=q_chunk,
+                             **attn_kw)
+    h = rms_norm(x, lp["mlp_norm"])
+    f, aux = _ffn_block(lp, h, cfg)
+    return x + f, aux
+
+
+# --------------------------------------------------------------------------
+# training forward + loss
+# --------------------------------------------------------------------------
+def forward_train(params: dict, tokens: Array, cfg: TransformerConfig) -> tuple:
+    """tokens (B, S) -> (logits (B, S, V) fp32, aux_loss scalar)."""
+    B, S = tokens.shape
+    dt = cfg.dtype
+    x = params["embed"].astype(dt)[tokens]
+    q_pos = jnp.arange(S, dtype=jnp.int32)
+    windowed = jnp.asarray(~cfg.is_global_layer())
+
+    def body(x, scanned):
+        lp, wflag = scanned
+        fn = _layer
+        if cfg.remat:
+            fn = jax.checkpoint(_layer, static_argnums=(3, 5))
+        x, aux = fn(lp, x, q_pos, cfg, wflag,
+                    cfg.q_chunk if S > cfg.q_chunk else None)
+        return x, aux
+
+    x = _wsc(x, cfg)
+    x, auxes = jax.lax.scan(body, x, (params["layers"], windowed))
+    x = _wsc(x, cfg)
+    x = rms_norm(x, params["final_norm"])
+    head = params.get("head", None)
+    if head is None:
+        head = params["embed"].T
+    logits = (x @ head.astype(dt)).astype(jnp.float32)
+    if cfg.act_batch_axes is not None:
+        logits = jax.lax.with_sharding_constraint(
+            logits, jax.sharding.PartitionSpec(cfg.act_batch_axes, None,
+                                               "model"))
+    return logits, jnp.sum(auxes)
+
+
+def loss_fn(params: dict, batch: dict, cfg: TransformerConfig) -> tuple:
+    logits, aux = forward_train(params, batch["tokens"], cfg)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    true = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    nll = jnp.sum((lse - true) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    loss = nll + 0.01 * aux
+    return loss, {"nll": nll, "aux": aux}
+
+
+# --------------------------------------------------------------------------
+# serving: per-layer KV caches (ring buffers on sliding-window layers)
+# --------------------------------------------------------------------------
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int) -> dict:
+    ks, vs = [], []
+    Hkv, Dh = cfg.n_kv_heads, cfg.head_dim
+    for i in range(cfg.n_layers):
+        w = cfg.layer_window(i)
+        s = max_len if w is None else min(w, max_len)
+        ks.append(jnp.zeros((batch, s, Hkv, Dh), cfg.dtype))
+        vs.append(jnp.zeros((batch, s, Hkv, Dh), cfg.dtype))
+    return {"k": ks, "v": vs, "pos": jnp.zeros((), jnp.int32)}
+
+
+def abstract_cache(cfg: TransformerConfig, batch: int, max_len: int) -> dict:
+    c = init_cache(cfg, batch, 0)  # cheap: zero-length, just for structure
+    ks, vs = [], []
+    for i in range(cfg.n_layers):
+        w = cfg.layer_window(i)
+        s = max_len if w is None else min(w, max_len)
+        ks.append(abs_p(batch, s, cfg.n_kv_heads, cfg.head_dim,
+                        dtype=cfg.dtype))
+        vs.append(abs_p(batch, s, cfg.n_kv_heads, cfg.head_dim,
+                        dtype=cfg.dtype))
+    return {"k": ks, "v": vs, "pos": abs_p(dtype=jnp.int32)}
+
+
+def _ring_slot_positions(cache_len: int, pos_next: Array) -> Array:
+    """Absolute token position stored in each ring slot once ``pos_next``
+    tokens have been written; slots not yet written get -1."""
+    j = jnp.arange(cache_len, dtype=jnp.int32)
+    last = pos_next - 1
+    p = last - ((last - j) % cache_len)
+    return jnp.where((p >= 0) & (p <= last), p, -1)
+
+
+def serve_prefill(params: dict, tokens: Array, cfg: TransformerConfig,
+                  max_len: Optional[int] = None) -> tuple:
+    """Full forward over the prompt; returns (last-token logits (B, V), cache)."""
+    B, S = tokens.shape
+    max_len = max_len or S
+    dt = cfg.dtype
+    x = params["embed"].astype(dt)[tokens]
+    q_pos = jnp.arange(S, dtype=jnp.int32)
+    cache = init_cache(cfg, B, max_len)
+    q_chunk = cfg.q_chunk if S > cfg.q_chunk else None
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[i], params["layers"])
+        w = cfg.layer_window(i)
+
+        def run_layer(lp, x):
+            h = rms_norm(x, lp["attn_norm"])
+            a = _attention_block(lp, h, q_pos, cfg,
+                                 jnp.asarray(w is not None), q_chunk=q_chunk)
+            x = x + a
+            h = rms_norm(x, lp["mlp_norm"])
+            f, _ = _ffn_block(lp, h, cfg)
+            return x + f, h  # h unused; recompute kv below
+
+        # kv for the cache (recomputed cheaply from the pre-attn norm)
+        x = _wsc(x, cfg)
+        h = rms_norm(x, lp["attn_norm"])
+        k = (h @ lp["wk"].astype(dt)).reshape(B, S, cfg.n_kv_heads,
+                                              cfg.head_dim)
+        v = (h @ lp["wv"].astype(dt)).reshape(B, S, cfg.n_kv_heads,
+                                              cfg.head_dim)
+        k = apply_rope(k, q_pos, cfg.rope_theta)
+        cl = cache["k"][i].shape[1]
+        if w is None:
+            cache["k"][i] = jax.lax.dynamic_update_slice(
+                cache["k"][i], k[:, :cl], (0, 0, 0, 0))
+            cache["v"][i] = jax.lax.dynamic_update_slice(
+                cache["v"][i], v[:, :cl], (0, 0, 0, 0))
+        else:
+            take = min(cl, S)
+            tail_k, tail_v = k[:, S - take:], v[:, S - take:]
+            slots = (jnp.arange(S - take, S, dtype=jnp.int32)) % cl
+            cache["k"][i] = cache["k"][i].at[:, slots].set(tail_k)
+            cache["v"][i] = cache["v"][i].at[:, slots].set(tail_v)
+        fn = jax.checkpoint(run_layer) if cfg.remat else run_layer
+        x, _ = fn(lp, x)
+    x = rms_norm(x, params["final_norm"])
+    head = params.get("head", params["embed"].T if cfg.tie_embeddings else None)
+    logits = (x[:, -1] @ head.astype(dt)).astype(jnp.float32)
+    cache["pos"] = jnp.asarray(S, jnp.int32)
+    return logits, cache
+
+
+def serve_decode_step(params: dict, cache: dict, token: Array,
+                      cfg: TransformerConfig) -> tuple:
+    """One decode step. token (B, 1) int32 -> (logits (B, V) fp32, cache)."""
+    B = token.shape[0]
+    dt = cfg.dtype
+    pos = cache["pos"]
+    x = params["embed"].astype(dt)[token]                   # (B, 1, D)
+    q_pos = pos[None].astype(jnp.int32)                     # (1,)
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[i], params["layers"])
+        w = cfg.layer_window(i)
+        cl = cache["k"][i].shape[1]
+        x = _wsc(x, cfg)
+        h = rms_norm(x, lp["attn_norm"])
+        k_new = (h @ lp["wk"].astype(dt)).reshape(B, 1, cfg.n_kv_heads,
+                                                  cfg.head_dim)
+        v_new = (h @ lp["wv"].astype(dt)).reshape(B, 1, cfg.n_kv_heads,
+                                                  cfg.head_dim)
+        k_new = apply_rope(k_new, q_pos, cfg.rope_theta)
+        slot = pos % cl if w is not None else pos
+        ck = jax.lax.dynamic_update_slice(cache["k"][i], k_new,
+                                          (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"][i], v_new,
+                                          (0, slot, 0, 0))
+        cache["k"][i], cache["v"][i] = ck, cv
+        if w is None:
+            k_pos = jnp.arange(cl, dtype=jnp.int32)
+            k_valid = k_pos <= pos
+        else:
+            k_pos = _ring_slot_positions(cl, pos + 1)
+            k_valid = k_pos >= 0
+        a = _attention_block(
+            lp, h, q_pos, cfg, jnp.asarray(w is not None),
+            k_override=ck, v_override=cv, k_pos=k_pos, k_valid=k_valid)
+        x = x + a
+        h = rms_norm(x, lp["mlp_norm"])
+        f, _ = _ffn_block(lp, h, cfg)
+        x = x + f
+    x = rms_norm(x, params["final_norm"])
+    head = params.get("head", params["embed"].T if cfg.tie_embeddings else None)
+    logits = (x[:, 0] @ head.astype(dt)).astype(jnp.float32)
+    cache["pos"] = pos + 1
+    return logits, cache
+
+
+def embed_sequences(params: dict, tokens: Array, cfg: TransformerConfig):
+    """Mean-pooled final hidden states — the embedding DEG indexes
+    (kNN-LM-style retrieval examples)."""
+    B, S = tokens.shape
+    dt = cfg.dtype
+    x = params["embed"].astype(dt)[tokens]
+    q_pos = jnp.arange(S, dtype=jnp.int32)
+    windowed = jnp.asarray(~cfg.is_global_layer())
+
+    def body(x, scanned):
+        lp, wflag = scanned
+        x, _ = _layer(lp, x, q_pos, cfg, wflag)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, (params["layers"], windowed))
+    x = rms_norm(x, params["final_norm"])
+    return jnp.mean(x.astype(jnp.float32), axis=1)

@@ -1,0 +1,1 @@
+"""Serving: batched ANN query engine over (sharded) DEG indexes."""

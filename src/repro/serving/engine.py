@@ -1,0 +1,142 @@
+"""Batched ANN query engine (the production face of the paper's system).
+
+``QueryEngine`` fronts a :class:`repro.core.build.DEGIndex` (single host) or
+a :class:`repro.distributed.index.ShardedDEG` (mesh) with:
+
+* **request batching**: incoming queries are buffered and flushed as one
+  fixed-shape device call (lane padding keeps the jit cache to one entry);
+* **exploration sessions**: per-user exclude lists implement the paper's
+  browsing protocol (§6.7) — results the user has seen never reappear, while
+  navigation may still pass through them;
+* **online inserts**: new vectors are added through the incremental build
+  path (Alg. 3) and are searchable on the next flush — the "time between
+  insertion and findability" requirement of paper §1.1;
+* **continuous refinement**: ``refine_budget`` edge-optimization iterations
+  (Alg. 5) run between flushes — the paper's central idea, as a background
+  serving-loop activity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.build import DEGIndex
+from repro.core.graph import INVALID
+
+
+@dataclasses.dataclass
+class EngineStats:
+    flushes: int = 0
+    queries: int = 0
+    inserts: int = 0
+    refine_iterations: int = 0
+    total_search_s: float = 0.0
+
+    @property
+    def qps(self) -> float:
+        return self.queries / self.total_search_s if self.total_search_s else 0.0
+
+
+class QueryEngine:
+    def __init__(self, index: DEGIndex, *, k: int = 10, eps: float = 0.1,
+                 max_batch: int = 64, refine_budget: int = 0,
+                 beam_width: Optional[int] = None):
+        self.index = index
+        self.k, self.eps, self.beam_width = k, eps, beam_width
+        self.max_batch = max_batch
+        self.refine_budget = refine_budget
+        self.stats = EngineStats()
+        self._pending: list = []          # (query_vec, exclude_ids, future)
+        self._sessions: dict[str, set] = {}
+
+    # -- request paths ----------------------------------------------------
+    def submit(self, query: np.ndarray, session: Optional[str] = None,
+               seed_vertex: Optional[int] = None) -> dict:
+        """Queue one query; returns a 'future' dict filled at flush()."""
+        fut = {"done": False, "ids": None, "dists": None}
+        excl = sorted(self._sessions.get(session, ())) if session else []
+        self._pending.append((np.asarray(query, np.float32), excl, fut,
+                              session, seed_vertex))
+        if len(self._pending) >= self.max_batch:
+            self.flush()
+        return fut
+
+    def search(self, queries: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """Synchronous batched search (no sessions)."""
+        futs = [self.submit(q) for q in np.atleast_2d(queries)]
+        self.flush()
+        return (np.stack([f["ids"] for f in futs]),
+                np.stack([f["dists"] for f in futs]))
+
+    def explore(self, vertex: int, session: str) -> dict:
+        """Exploration query: seed = an indexed vertex; session exclusions
+        accumulate (paper §6.7 protocol)."""
+        self._sessions.setdefault(session, set()).add(int(vertex))
+        q = self.index.vectors[int(vertex)]
+        return self.submit(q, session=session, seed_vertex=int(vertex))
+
+    def insert(self, vectors: np.ndarray, wave_size: int = 8) -> None:
+        vectors = np.atleast_2d(np.asarray(vectors, np.float32))
+        self.index.add(vectors, wave_size=wave_size)
+        self.stats.inserts += vectors.shape[0]
+
+    def delete(self, vertex: int) -> bool:
+        """Online delete (beyond-paper fully-dynamic path).  Deletion
+        compacts slots (the last vertex moves into the freed slot), so
+        pending queries are flushed first and session exclude-sets are
+        remapped."""
+        self.flush()
+        last = self.index.n - 1
+        ok = bool(self.index.remove([int(vertex)]))
+        if ok:
+            for seen in self._sessions.values():
+                seen.discard(int(vertex))
+                if last in seen and vertex != last:
+                    seen.discard(last)
+                    seen.add(int(vertex))    # the moved vertex's new id
+        return ok
+
+    # -- the device call ---------------------------------------------------
+    def flush(self) -> int:
+        if not self._pending:
+            return 0
+        batch = self._pending[: self.max_batch]
+        self._pending = self._pending[self.max_batch:]
+        B = len(batch)
+        pad = self.max_batch - B           # fixed shape -> one jit entry
+        qs = np.stack([b[0] for b in batch] + [batch[0][0]] * pad)
+        is_explore = any(b[4] is not None for b in batch)
+        t0 = time.time()
+        if not is_explore:
+            res = self.index.search(qs, k=self.k, eps=self.eps,
+                                    beam_width=self.beam_width)
+            ids, dists = np.asarray(res.ids), np.asarray(res.dists)
+        else:
+            xw = max(max((len(b[1]) for b in batch), default=0), 1)
+            excl = np.full((self.max_batch, xw), INVALID, np.int32)
+            seeds = []
+            for i, (_, ex, _, _, sv) in enumerate(batch):
+                excl[i, : len(ex)] = ex
+                seeds.append(sv if sv is not None else 0)
+            seeds += [0] * pad
+            res = self.index.explore(seeds, k=self.k, eps=self.eps,
+                                     exclude=excl,
+                                     beam_width=self.beam_width)
+            ids, dists = np.asarray(res.ids), np.asarray(res.dists)
+        self.stats.total_search_s += time.time() - t0
+        self.stats.flushes += 1
+        self.stats.queries += B
+        for i, (_, _, fut, session, _) in enumerate(batch):
+            fut["ids"], fut["dists"] = ids[i], dists[i]
+            fut["done"] = True
+            if session:
+                self._sessions.setdefault(session, set()).update(
+                    int(x) for x in ids[i] if x != INVALID)
+        # continuous refinement between flushes (the paper's core idea)
+        if self.refine_budget:
+            self.stats.refine_iterations += self.index.refine(
+                self.refine_budget, seed=self.stats.flushes)
+        return B

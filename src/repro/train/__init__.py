@@ -1,0 +1,2 @@
+"""Training substrate: optimizer, schedules, steps, checkpointing,
+fault-tolerant loop."""

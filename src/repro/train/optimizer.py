@@ -1,0 +1,165 @@
+"""Minimal optax-style optimizers (the container has no optax).
+
+An Optimizer is (init, update):
+  state  = opt.init(params)
+  updates, state = opt.update(grads, state, params)
+  params = apply_updates(params, updates)
+
+``partitioned`` routes different param subtrees to different optimizers via
+a label function — used by the recsys archs (embedding tables get stateless
+SGD like MLPerf DLRM; dense towers get AdamW; see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(max_norm: float):
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        g = global_norm(grads)
+        scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+        return jax.tree.map(lambda x: x * scale, grads), state
+
+    return Optimizer(init, update)
+
+
+def sgd(lr: float | Callable = 1e-2, momentum: float = 0.0):
+    def init(params):
+        if momentum == 0.0:
+            return {"count": jnp.zeros((), jnp.int32)}
+        return {"count": jnp.zeros((), jnp.int32),
+                "mom": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(grads, state, params=None):
+        count = state["count"] + 1
+        cur_lr = lr(count) if callable(lr) else lr
+        if momentum == 0.0:
+            upd = jax.tree.map(lambda g: -cur_lr * g, grads)
+            return upd, {"count": count}
+        mom = jax.tree.map(lambda m, g: momentum * m + g, state["mom"], grads)
+        upd = jax.tree.map(lambda m: -cur_lr * m, mom)
+        return upd, {"count": count, "mom": mom}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float | Callable = 1e-3, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          clip_norm: Optional[float] = 1.0):
+    """AdamW with optional fused global-norm clipping."""
+
+    def init(params):
+        return {
+            "count": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(
+                lambda p: jnp.zeros_like(p, dtype=jnp.float32), params),
+            "nu": jax.tree.map(
+                lambda p: jnp.zeros_like(p, dtype=jnp.float32), params),
+        }
+
+    def update(grads, state, params):
+        if clip_norm is not None:
+            g = global_norm(grads)
+            scale = jnp.minimum(1.0, clip_norm / jnp.maximum(g, 1e-9))
+            grads = jax.tree.map(lambda x: x * scale, grads)
+        count = state["count"] + 1
+        cur_lr = lr(count) if callable(lr) else lr
+        mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state["mu"], grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2)
+            * jnp.square(g.astype(jnp.float32)), state["nu"], grads)
+        c = count.astype(jnp.float32)
+        mu_hat_scale = 1.0 / (1 - b1 ** c)
+        nu_hat_scale = 1.0 / (1 - b2 ** c)
+
+        def upd(m, v, p):
+            step = m * mu_hat_scale / (jnp.sqrt(v * nu_hat_scale) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (-cur_lr * step).astype(jnp.float32)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, {"count": count, "mu": mu, "nu": nu}
+
+    return Optimizer(init, update)
+
+
+def partitioned(label_fn: Callable, optimizers: dict[str, Optimizer]):
+    """Route param subtrees to optimizers by label.
+
+    label_fn(path_tuple, leaf) -> key into ``optimizers``.
+
+    Non-selected leaves are masked to ``None`` (an empty pytree node), so a
+    stateful optimizer keeps state *only* for its own leaves — this is what
+    lets MLPerf-style recsys training hold no AdamW moments for the 100M-row
+    embedding tables.
+    """
+
+    def _labels(params):
+        return jax.tree_util.tree_map_with_path(
+            lambda path, leaf: label_fn(path, leaf), params)
+
+    def _mask(tree, labels, key):
+        return jax.tree.map(lambda x, l: x if l == key else None, tree, labels)
+
+    def init(params):
+        labels = _labels(params)
+        return {key: opt.init(_mask(params, labels, key))
+                for key, opt in optimizers.items()}
+
+    def update(grads, state, params):
+        labels = _labels(grads)
+        new_state, upds = {}, {}
+        for key, opt in optimizers.items():
+            upds[key], new_state[key] = opt.update(
+                _mask(grads, labels, key), state[key],
+                _mask(params, labels, key))
+        # stitch per-leaf updates back together by path
+        flat = {key: dict(jax.tree_util.tree_flatten_with_path(u)[0])
+                for key, u in upds.items()}
+        label_map = dict(jax.tree_util.tree_flatten_with_path(labels)[0])
+
+        def pick(path, _leaf):
+            return flat[label_map[path]][path]
+
+        total = jax.tree_util.tree_map_with_path(pick, grads)
+        return total, new_state
+
+    return Optimizer(init, update)
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5
+                         * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr

@@ -1,0 +1,73 @@
+"""Generic train-step factory: value_and_grad + optimizer, with optional
+microbatch gradient accumulation (a lax.scan — the accumulation loop is also
+where compute/reduce-scatter overlap happens on real hardware: XLA overlaps
+the per-microbatch backward with the previous microbatch's gradient
+collectives when latency hiding is enabled)."""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import Optimizer, apply_updates
+
+
+def make_train_step(loss_fn: Callable, opt: Optimizer,
+                    microbatches: int = 1, donate: bool = True,
+                    jit: bool = True):
+    """loss_fn(params, batch) -> (loss, metrics dict).
+
+    Returns step(params, opt_state, batch) -> ((params, opt_state), metrics).
+    With microbatches > 1 the batch's leading dim is split and gradients are
+    accumulated in fp32.
+    """
+
+    def _grads(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def step(params, opt_state, batch):
+        if microbatches <= 1:
+            loss, metrics, grads = _grads(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def body(acc, micro):
+                loss, metrics, grads = _grads(params, micro)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / microbatches,
+                    acc, grads)
+                return acc, (loss, metrics)
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, (losses, metricses) = jax.lax.scan(body, zeros, mb)
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(jnp.mean, metricses)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        return (params, opt_state), metrics
+
+    if jit:
+        step = jax.jit(step, donate_argnums=(0, 1))if donate else jax.jit(step)
+    return step
+
+
+def make_eval_step(loss_fn: Callable, jit: bool = True):
+    def step(params, batch):
+        loss, metrics = loss_fn(params, batch)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        return metrics
+
+    return jax.jit(step) if jit else step

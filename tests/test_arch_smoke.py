@@ -1,0 +1,287 @@
+"""Per-architecture smoke tests: REDUCED configs, one forward/train step on
+CPU, asserting output shapes and no NaNs (assignment requirement f)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, list_archs
+
+LM_ARCHS = ["phi3-mini-3.8b", "granite-3-2b", "gemma3-12b",
+            "qwen3-moe-30b-a3b", "mixtral-8x22b"]
+RECSYS_ARCHS = ["dcn-v2", "deepfm", "din", "dlrm-mlperf"]
+
+
+def test_registry_complete():
+    assert len(list_archs()) == 10
+    from repro.configs import all_cells
+    assert len(all_cells()) == 40
+
+
+def _lm_batch(cfg, B=2, S=16, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab, size=(B, S + 1)).astype(np.int32)
+    return {"tokens": jnp.asarray(toks[:, :-1]),
+            "labels": jnp.asarray(toks[:, 1:])}
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_forward_and_train_step(arch):
+    from repro.models import transformer as T
+    from repro.train.steps import make_train_step
+    from repro.train.optimizer import adamw
+
+    spec = get_arch(arch)
+    cfg = spec.reduced()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    batch = _lm_batch(cfg)
+    logits, aux = T.forward_train(params, batch["tokens"], cfg)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+    opt = adamw(1e-3)
+    step = make_train_step(lambda p, b: T.loss_fn(p, b, cfg), opt)
+    state = opt.init(params)
+    before = np.asarray(params["embed"]).copy()   # step donates params
+    (params2, state2), metrics = step(params, state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.abs(np.asarray(params2["embed"]) - before).max() > 0
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_prefill_decode_consistency(arch):
+    """Greedy decode after prefill must match teacher-forced forward."""
+    from repro.models import transformer as T
+
+    spec = get_arch(arch)
+    cfg = spec.reduced()
+    params = T.init_params(jax.random.PRNGKey(1), cfg)
+    toks = _lm_batch(cfg, B=2, S=12, seed=1)["tokens"]
+    full_logits, _ = T.forward_train(params, toks, cfg)
+    last_pf, cache = T.serve_prefill(params, toks[:, :11], cfg, max_len=16)
+    np.testing.assert_allclose(np.asarray(last_pf),
+                               np.asarray(full_logits[:, 10]),
+                               rtol=2e-2, atol=2e-2)
+    logits_dec, cache = T.serve_decode_step(params, cache, toks[:, 11:12], cfg)
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(full_logits[:, 11]),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_lm_sliding_window_ring_cache():
+    """Decode far beyond the window: ring cache must stay consistent with a
+    full-cache run restricted by the window mask."""
+    from repro.models import transformer as T
+
+    spec = get_arch("mixtral-8x22b")
+    cfg = spec.reduced()          # window 8
+    assert cfg.sliding_window == 8
+    params = T.init_params(jax.random.PRNGKey(2), cfg)
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (1, 20)).astype(np.int32))
+    # reference: full attention with window mask via forward_train
+    ref_logits, _ = T.forward_train(params, toks, cfg)
+    # streamed: prefill 8 then decode 12 steps with ring buffers
+    _, cache = T.serve_prefill(params, toks[:, :8], cfg, max_len=20)
+    outs = []
+    for t in range(8, 20):
+        lg, cache = T.serve_decode_step(params, cache, toks[:, t : t + 1], cfg)
+        outs.append(lg)
+    got = np.stack([np.asarray(o) for o in outs], axis=1)[0]
+    want = np.asarray(ref_logits[0, 8:])
+    np.testing.assert_allclose(got, want, rtol=3e-2, atol=3e-2)
+
+
+def test_moe_dispatch_matches_dense_compute():
+    """Scatter-dispatch MoE == explicit per-token dense expert mix (with
+    generous capacity so nothing drops)."""
+    from repro.models.moe import MoEConfig, init_moe_layer, moe_ffn
+
+    cfg = MoEConfig(n_experts=4, top_k=2, d_ff_expert=32,
+                    capacity_factor=8.0)
+    lp = jax.tree.map(lambda a: a[0],
+                      init_moe_layer(jax.random.PRNGKey(0), 1, 16, cfg))
+    x = jax.random.normal(jax.random.PRNGKey(1), (24, 16), jnp.float32)
+    y, aux = moe_ffn(x, lp, cfg)
+    # dense reference
+    logits = x @ lp["router"]
+    probs = jax.nn.softmax(logits, -1)
+    top_p, top_ids = jax.lax.top_k(probs, 2)
+    top_w = top_p / top_p.sum(-1, keepdims=True)
+    ref = jnp.zeros_like(x)
+    for e in range(4):
+        g = jax.nn.silu(x @ lp["we_gate"][e])
+        u = x @ lp["we_up"][e]
+        fe = (g * u) @ lp["we_down"][e]
+        w = jnp.where(top_ids == e, top_w, 0.0).sum(-1)
+        ref += fe * w[:, None]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=2e-4,
+                               atol=2e-4)
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_tokens():
+    from repro.models.moe import MoEConfig, _capacity
+
+    cfg = MoEConfig(n_experts=4, top_k=2, d_ff_expert=8, capacity_factor=1.0)
+    assert _capacity(64, cfg) >= 64 * 2 // 4
+
+
+# ------------------------------------------------------------------ EGNN --
+def _egnn_graph(cfg, n=40, e=160, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "feats": jnp.asarray(rng.normal(size=(n, cfg.d_feat)).astype(np.float32)),
+        "coords": jnp.asarray(rng.normal(size=(n, 3)).astype(np.float32)),
+        "edges": jnp.asarray(rng.integers(0, n, size=(2, e)).astype(np.int32)),
+        "labels": jnp.asarray(rng.integers(0, cfg.n_classes, size=n)
+                              .astype(np.int32)),
+    }
+
+
+def test_egnn_forward_and_train():
+    from repro.models import egnn as E
+    from repro.train.steps import make_train_step
+    from repro.train.optimizer import adamw
+
+    cfg = get_arch("egnn").reduced()
+    params = E.init_params(jax.random.PRNGKey(0), cfg)
+    batch = _egnn_graph(cfg)
+    logits, coords = E.egnn_forward(params, batch["feats"], batch["coords"],
+                                    batch["edges"], cfg)
+    assert logits.shape == (40, cfg.n_classes)
+    assert coords.shape == (40, 3)
+    assert np.isfinite(np.asarray(logits)).all()
+    opt = adamw(1e-3)
+    step = make_train_step(lambda p, b: E.loss_fn(p, b, cfg), opt)
+    (p2, _), m = step(params, opt.init(params), batch)
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_egnn_equivariance():
+    """E(n) property: rotate+translate inputs => coords transform likewise,
+    invariant node logits."""
+    from repro.models import egnn as E
+
+    cfg = get_arch("egnn").reduced()
+    params = E.init_params(jax.random.PRNGKey(0), cfg)
+    b = _egnn_graph(cfg, seed=4)
+    # random rotation via QR
+    rng = np.random.default_rng(5)
+    q, _ = np.linalg.qr(rng.normal(size=(3, 3)))
+    if np.linalg.det(q) < 0:
+        q[:, 0] *= -1
+    R = jnp.asarray(q.astype(np.float32))
+    t = jnp.asarray(rng.normal(size=(3,)).astype(np.float32))
+    lg1, c1 = E.egnn_forward(params, b["feats"], b["coords"], b["edges"], cfg)
+    lg2, c2 = E.egnn_forward(params, b["feats"], b["coords"] @ R.T + t,
+                             b["edges"], cfg)
+    np.testing.assert_allclose(np.asarray(lg1), np.asarray(lg2), rtol=1e-3,
+                               atol=1e-3)
+    np.testing.assert_allclose(np.asarray(c1 @ R.T + t), np.asarray(c2),
+                               rtol=1e-3, atol=2e-3)
+
+
+def test_egnn_molecule_batched():
+    from repro.models import egnn as E
+
+    cfg = get_arch("egnn").reduced()
+    params = E.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(6)
+    B, n, e = 4, 10, 24
+    feats = jnp.asarray(rng.normal(size=(B, n, cfg.d_feat)).astype(np.float32))
+    coords = jnp.asarray(rng.normal(size=(B, n, 3)).astype(np.float32))
+    edges = jnp.asarray(rng.integers(0, n, size=(B, 2, e)).astype(np.int32))
+    logits, _ = E.egnn_forward_batched(params, feats, coords, edges, cfg)
+    assert logits.shape == (B, n, cfg.n_classes)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_neighbor_sampler():
+    from repro.data.graphs import (random_power_law_graph, sample_neighbors,
+                                   subgraph_batch, subgraph_shapes)
+
+    g = random_power_law_graph(500, 8, seed=0)
+    deg = jnp.asarray(g.degrees().astype(np.int32))
+    seeds = jnp.asarray(np.arange(16, dtype=np.int32))
+    nodes, edges = sample_neighbors(jnp.asarray(g.row_ptr),
+                                    jnp.asarray(g.col_idx), deg, seeds,
+                                    jax.random.PRNGKey(0), (4, 3))
+    n_sub, n_edge = subgraph_shapes(16, (4, 3))
+    assert nodes.shape == (n_sub,)
+    assert edges.shape == (2, n_edge)
+    nodes_np, edges_np = np.asarray(nodes), np.asarray(edges)
+    # every sampled neighbor must be a real neighbor of its parent
+    row_ptr, col = g.row_ptr, g.col_idx
+    for c_pos, p_pos in zip(edges_np[0][:50], edges_np[1][:50]):
+        child, parent = nodes_np[c_pos], nodes_np[p_pos]
+        nbrs = col[row_ptr[parent]: row_ptr[parent + 1]]
+        assert child in nbrs or child == parent  # self-loop fallback
+
+
+# ---------------------------------------------------------------- recsys --
+def _recsys_batch(cfg, B=8, seed=0):
+    rng = np.random.default_rng(seed)
+    b = {"sparse": jnp.asarray(np.stack(
+        [rng.integers(0, v, size=B) for v in cfg.vocab_sizes], 1)
+        .astype(np.int32)),
+        "label": jnp.asarray(rng.integers(0, 2, size=B).astype(np.float32))}
+    if cfg.n_dense:
+        b["dense"] = jnp.asarray(rng.uniform(0, 10, size=(B, cfg.n_dense))
+                                 .astype(np.float32))
+    if cfg.kind == "din":
+        hist = rng.integers(0, cfg.vocab_sizes[cfg.item_field],
+                            size=(B, cfg.seq_len)).astype(np.int32)
+        hist[:, cfg.seq_len // 2:] = -1  # ragged padding
+        b["hist"] = jnp.asarray(hist)
+    return b
+
+
+@pytest.mark.parametrize("arch", RECSYS_ARCHS)
+def test_recsys_forward_and_train(arch):
+    from repro.models import recsys as R
+    from repro.train.steps import make_train_step
+    from repro.train.optimizer import adamw
+
+    cfg = get_arch(arch).reduced()
+    params = R.init_params(jax.random.PRNGKey(0), cfg)
+    batch = _recsys_batch(cfg)
+    logits = R.forward(params, batch, cfg)
+    assert logits.shape == (8,)
+    assert np.isfinite(np.asarray(logits)).all()
+    opt = adamw(1e-3)
+    step = make_train_step(lambda p, b: R.loss_fn(p, b, cfg), opt)
+    (p2, _), m = step(params, opt.init(params), batch)
+    assert np.isfinite(float(m["loss"]))
+
+
+@pytest.mark.parametrize("arch", RECSYS_ARCHS)
+def test_recsys_retrieval(arch):
+    from repro.models import recsys as R
+
+    cfg = get_arch(arch).reduced()
+    params = R.init_params(jax.random.PRNGKey(0), cfg)
+    batch = _recsys_batch(cfg, B=4)
+    cands = jax.random.normal(jax.random.PRNGKey(1), (200, cfg.embed_dim))
+    scores, ids = R.serve_retrieval(params, batch, cands, cfg, k=10)
+    assert scores.shape == (4, 10) and ids.shape == (4, 10)
+    assert np.isfinite(np.asarray(scores)).all()
+    assert (np.diff(np.asarray(scores), axis=1) <= 1e-6).all()  # descending
+
+
+def test_recsys_embedding_bag_consistency():
+    """models.embedding_bag ragged == fixed on equivalent inputs."""
+    from repro.models.embedding_bag import (embedding_bag_fixed,
+                                            embedding_bag_ragged)
+
+    rng = np.random.default_rng(0)
+    table = jnp.asarray(rng.normal(size=(50, 8)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, 50, size=(6, 4)).astype(np.int32))
+    fixed = embedding_bag_fixed(table, ids)
+    flat = ids.reshape(-1)
+    seg = jnp.repeat(jnp.arange(6), 4)
+    ragged = embedding_bag_ragged(table, flat, seg, 6)
+    np.testing.assert_allclose(np.asarray(fixed), np.asarray(ragged),
+                               rtol=1e-6)

@@ -1,0 +1,151 @@
+"""Tests for incremental construction (Alg. 3) and edge optimization (Alg. 4/5)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DEGParams, average_neighbor_distance, build_deg,
+                        exact_knn, recall_at_k)
+from repro.core import invariants as inv
+from repro.core.baselines import random_regular_index
+from repro.core.mrng import check_mrng, check_mrng_candidate
+from repro.data import make_dataset
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_dataset("gaussian", 500, 20, 16, seed=11)
+
+
+def _params(**kw):
+    base = dict(degree=8, k_ext=16, eps_ext=0.3, k_opt=8, i_opt=5)
+    base.update(kw)
+    return DEGParams(**base)
+
+
+def test_build_invariants_sequential(data):
+    base, _ = data
+    idx = build_deg(base[:100], _params())
+    inv.assert_valid_deg(idx.builder, context="sequential build")
+
+
+def test_build_invariants_wave(data):
+    base, _ = data
+    idx = build_deg(base, _params(), wave_size=64)
+    inv.assert_valid_deg(idx.builder, context="wave build")
+
+
+def test_build_with_insert_opt_keeps_invariants(data):
+    base, _ = data
+    idx = build_deg(base[:200], _params(optimize_new=True), wave_size=16)
+    inv.assert_valid_deg(idx.builder, context="insert-opt build")
+
+
+def test_incremental_addition(data):
+    """Incremental property (paper Table 1): vertices addable at any time,
+    and new vertices are findable immediately."""
+    base, queries = data
+    idx = build_deg(base[:300], _params(), wave_size=32)
+    idx.add(base[300:], wave_size=32)
+    inv.assert_valid_deg(idx.builder, context="after incremental add")
+    assert idx.n == base.shape[0]
+    # search for the newly added points themselves
+    res = idx.search(base[450:460], k=1, eps=0.2, beam_width=32)
+    found = np.asarray(res.ids)[:, 0]
+    expect = np.arange(450, 460)
+    assert (found == expect).mean() >= 0.9
+
+
+def test_schemes_all_valid(data):
+    base, _ = data
+    for scheme in "ABCD":
+        idx = build_deg(base[:150], _params(scheme=scheme), wave_size=16)
+        inv.assert_valid_deg(idx.builder, context=f"scheme {scheme}")
+
+
+def test_refine_reduces_avg_neighbor_distance(data):
+    """The core continuous-refinement claim (paper Sec. 5.3 / Fig. 7)."""
+    base, _ = data
+    idx = random_regular_index(base[:300], _params(), seed=3)
+    nd0 = average_neighbor_distance(idx.builder)
+    improved = idx.refine(150, seed=5)
+    nd1 = average_neighbor_distance(idx.builder)
+    inv.assert_valid_deg(idx.builder, context="after refine")
+    assert improved > 0
+    assert nd1 < nd0
+
+
+def test_refine_improves_random_graph_search(data):
+    """Fig. 7-left: optimization turns a random regular graph into a
+    functioning search graph."""
+    base, queries = data
+    _, ti = exact_knn(queries, base[:300], 5)
+    idx = random_regular_index(base[:300], _params(), seed=3)
+    r0 = recall_at_k(np.asarray(idx.search(queries, k=5, eps=0.1,
+                                           beam_width=24).ids),
+                     np.asarray(ti))
+    idx.refine(600, seed=5)
+    r1 = recall_at_k(np.asarray(idx.search(queries, k=5, eps=0.1,
+                                           beam_width=24).ids),
+                     np.asarray(ti))
+    assert r1 > r0 + 0.1
+
+
+def test_optimize_edge_rollback_on_failure(data):
+    """Alg. 4 step (6): if no improving constellation exists the graph is
+    unchanged."""
+    from repro.core.optimize import optimize_edge
+
+    base, _ = data
+    idx = build_deg(base[:200], _params(), wave_size=16)
+    idx.refine(500, seed=1)          # near-converged: most swaps now fail
+    adj_before = idx.builder.adjacency.copy()
+    w_before = idx.builder.weights.copy()
+    failures = 0
+    for v in range(0, 40):
+        nbr = int(idx.builder.neighbors(v)[0])
+        ok = optimize_edge(idx, v, nbr, i_opt=2, k_opt=4, eps_opt=0.001)
+        if not ok:
+            failures += 1
+        inv.assert_valid_deg(idx.builder, context=f"after optimize({v})")
+    assert failures > 0  # at least some must fail and roll back cleanly
+
+
+def test_mrng_check_basics():
+    """checkMRNG on a hand-built triangle: the long edge of a triangle whose
+    third vertex is a shared neighbor violates MRNG."""
+    from repro.core.graph import GraphBuilder
+
+    b = GraphBuilder(8, 4)
+    for _ in range(6):
+        b.add_vertex()
+    # vertices 0-1-2 triangle: w(0,2)=w(1,2)=1, w(0,1)=3 (>max -> violates)
+    b.add_edge(0, 1, 3.0)
+    b.add_edge(0, 2, 1.0)
+    b.add_edge(1, 2, 1.0)
+    assert not check_mrng(b, 0, 1, 3.0)
+    assert check_mrng(b, 0, 2, 1.0)
+    # candidate version: selected=[2] at dist 1, candidate adjacent to 2
+    assert not check_mrng_candidate(b, 1, 3.0, [2], [1.0])
+    assert check_mrng_candidate(b, 1, 0.5, [2], [1.0])
+    assert check_mrng_candidate(b, 1, 3.0, [], [])
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(30, 120), seed=st.integers(0, 1000),
+       intrinsic=st.sampled_from([2, 4, 8]))
+def test_build_always_valid_property(n, seed, intrinsic):
+    """Property: DEG invariants hold for arbitrary datasets/orders."""
+    from repro.data.synthetic import planted_manifold
+
+    pts = planted_manifold(n, 12, intrinsic_dim=intrinsic, seed=seed)
+    idx = build_deg(pts, _params(degree=6, k_ext=12, k_opt=6), wave_size=8)
+    inv.assert_valid_deg(idx.builder)
+    assert idx.n == n
+
+
+def test_duplicate_points_build(data):
+    """Degenerate input: exact duplicates must not break invariants."""
+    base, _ = data
+    pts = np.concatenate([base[:50], base[:20]], axis=0)
+    idx = build_deg(pts, _params(degree=6, k_ext=12, k_opt=6), wave_size=8)
+    inv.assert_valid_deg(idx.builder, context="duplicates")

@@ -1,0 +1,90 @@
+"""Vertex deletion (beyond-paper 'fully dynamic'): invariants hold, no
+tombstones, deleted points stop being findable, interleaving with inserts
+and refinement is safe."""
+import numpy as np
+import pytest
+
+from repro.core.build import DEGParams, build_deg
+from repro.core.delete import delete_vertex
+from repro.core.distances import exact_knn_batched
+from repro.core.invariants import check_invariants
+from repro.core.metrics import recall_at_k
+
+
+@pytest.fixture()
+def index():
+    rng = np.random.default_rng(0)
+    vecs = rng.normal(size=(300, 12)).astype(np.float32)
+    return build_deg(vecs, DEGParams(degree=8, k_ext=16), wave_size=8), vecs
+
+
+def test_delete_preserves_invariants(index):
+    idx, _ = index
+    rng = np.random.default_rng(1)
+    for _ in range(30):
+        v = int(rng.integers(0, idx.n))
+        assert delete_vertex(idx, v)
+        ok, msgs = check_invariants(idx.builder)
+        assert ok, msgs
+    assert idx.n == 270
+
+
+def test_deleted_vector_not_returned(index):
+    idx, vecs = index
+    target = vecs[42].copy()
+    assert delete_vertex(idx, 42)
+    res = idx.search(target[None], k=1, eps=0.2)
+    found = idx.vectors[int(np.asarray(res.ids)[0, 0])]
+    # slot 42 now holds the (moved) last vertex; the nearest hit must not be
+    # the deleted vector unless a true duplicate exists
+    assert not np.allclose(found, target)
+
+
+def test_delete_compacts_no_tombstones(index):
+    idx, _ = index
+    n0 = idx.n
+    idx.remove(range(0, 50))
+    assert idx.n == n0 - 50
+    # every active row is fully regular (no holes/tombstones)
+    from repro.core.graph import INVALID
+
+    adj = idx.builder.adjacency[: idx.n]
+    assert (adj != INVALID).all()
+    assert (idx.builder.adjacency[idx.n:] == INVALID).all()
+
+
+def test_delete_then_insert_cycle(index):
+    idx, _ = index
+    rng = np.random.default_rng(3)
+    for cycle in range(5):
+        idx.remove([int(rng.integers(0, idx.n)) for _ in range(5)])
+        idx.add(rng.normal(size=(5, 12)).astype(np.float32), wave_size=5)
+        ok, msgs = check_invariants(idx.builder)
+        assert ok, msgs
+    # still a useful index: fresh queries hit their true neighbors
+    base = idx.vectors[: idx.n]
+    qs = base[:40] + 0.01 * rng.normal(size=(40, 12)).astype(np.float32)
+    res = idx.search(qs, k=5, eps=0.2)
+    _, gt = exact_knn_batched(qs, base, 5)
+    assert recall_at_k(np.asarray(res.ids), gt) > 0.7
+
+
+def test_delete_below_minimum_raises():
+    rng = np.random.default_rng(4)
+    vecs = rng.normal(size=(10, 6)).astype(np.float32)
+    idx = build_deg(vecs, DEGParams(degree=4, k_ext=8), wave_size=4)
+    guard = 0
+    while idx.n > 6 and guard < 32:     # deletion may retry/decline a vertex
+        delete_vertex(idx, 0)
+        guard += 1
+    assert idx.n == 6
+    with pytest.raises(RuntimeError):
+        delete_vertex(idx, 0)
+
+
+def test_delete_with_refinement(index):
+    idx, _ = index
+    for v in (5, 17, 101):
+        assert delete_vertex(idx, v, refine_after=2)
+    ok, msgs = check_invariants(idx.builder)
+    assert ok, msgs

@@ -1,0 +1,107 @@
+"""Unit + property tests for the DEG graph containers and invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import DEGraph, GraphBuilder, INVALID, complete_graph
+from repro.core import invariants as inv
+
+
+def test_builder_rejects_bad_degree():
+    with pytest.raises(ValueError):
+        GraphBuilder(16, 3)     # odd
+    with pytest.raises(ValueError):
+        GraphBuilder(16, 2)     # too small (paper Sec. 5.1: d >= 4)
+    with pytest.raises(ValueError):
+        GraphBuilder(4, 4)      # capacity < d+1
+
+
+def test_complete_graph_is_valid_deg():
+    vecs = np.random.default_rng(0).normal(size=(5, 8)).astype(np.float32)
+    b = complete_graph(vecs, 4, capacity=16)
+    inv.assert_valid_deg(b)
+    assert b.n == 5
+    # K_5 has perfect graph quality (paper Fig. 1)
+    from repro.core.metrics import graph_quality
+    assert graph_quality(b, vecs) == pytest.approx(1.0)
+
+
+def test_edge_ops_roundtrip():
+    vecs = np.random.default_rng(1).normal(size=(7, 4)).astype(np.float32)
+    b = complete_graph(vecs, 4, capacity=8)
+    w = b.remove_edge(0, 1)
+    assert not b.has_edge(0, 1) and not b.has_edge(1, 0)
+    b.add_edge(0, 1, w)
+    inv.assert_valid_deg(b)
+    with pytest.raises(ValueError):
+        b.add_edge(0, 1, w)   # duplicate
+    with pytest.raises(ValueError):
+        b.add_edge(2, 2, 0.0)  # self loop
+    with pytest.raises(KeyError):
+        b.remove_edge(5, 5)
+
+
+def test_handshake_edge_count():
+    """|E| = |V| * d / 2 (paper Sec. 5.1, handshaking lemma)."""
+    vecs = np.random.default_rng(2).normal(size=(9, 4)).astype(np.float32)
+    b = complete_graph(vecs, 8, capacity=16)
+    n_edges = (b.adjacency[: b.n] != INVALID).sum() // 2
+    assert n_edges == b.n * b.degree // 2
+
+
+def test_snapshot_restore():
+    vecs = np.random.default_rng(3).normal(size=(6, 4)).astype(np.float32)
+    b = complete_graph(vecs, 4, capacity=8)
+    snap = b.snapshot([0, 1, 2])
+    w = b.remove_edge(0, 1)
+    b.restore(snap)
+    assert b.has_edge(0, 1)
+    assert b.edge_weight(0, 1) == pytest.approx(w)
+
+
+def test_freeze_roundtrip():
+    vecs = np.random.default_rng(4).normal(size=(6, 4)).astype(np.float32)
+    b = complete_graph(vecs, 4, capacity=8)
+    g = b.freeze()
+    assert isinstance(g, DEGraph)
+    b2 = g.to_builder()
+    np.testing.assert_array_equal(b.adjacency, b2.adjacency)
+    np.testing.assert_allclose(b.weights, b2.weights)
+    assert b2.n == b.n
+
+
+def test_grow_preserves_graph():
+    vecs = np.random.default_rng(5).normal(size=(6, 4)).astype(np.float32)
+    b = complete_graph(vecs, 4, capacity=8)
+    before = b.adjacency[: b.n].copy()
+    b.grow(32)
+    assert b.capacity == 32
+    np.testing.assert_array_equal(b.adjacency[: b.n], before)
+    inv.assert_valid_deg(b)
+
+
+@settings(max_examples=20, deadline=None)
+@given(d=st.sampled_from([4, 6, 8]), n=st.integers(12, 40),
+       seed=st.integers(0, 10_000))
+def test_random_regular_always_valid(d, n, seed):
+    """Property: the Fig.7-left starting graph is always a valid DEG."""
+    from repro.core.baselines import random_regular_graph
+
+    rng = np.random.default_rng(seed)
+    vecs = rng.normal(size=(n, 6)).astype(np.float32)
+    b = random_regular_graph(n, d, rng, vecs)
+    inv.assert_valid_deg(b)
+
+
+def test_connectivity_detects_split():
+    b = GraphBuilder(12, 4)
+    for _ in range(10):
+        b.add_vertex()
+    # two disjoint K_5s
+    for off in (0, 5):
+        for i in range(5):
+            for j in range(i + 1, 5):
+                b.add_edge(off + i, off + j, 1.0)
+    assert inv.check_regular(b)
+    assert inv.connected_components(b) == 2
+    assert not inv.check_connected(b)

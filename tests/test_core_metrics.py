@@ -1,0 +1,85 @@
+"""Tests for recall/GQ/avg-neighbor-distance + the paper's Fig. 1 observation."""
+import numpy as np
+import pytest
+
+from repro.core import exact_knn, recall_at_k
+from repro.core.graph import GraphBuilder, complete_graph
+from repro.core.metrics import average_neighbor_distance, graph_quality
+
+
+def test_recall_perfect_and_zero():
+    t = np.array([[1, 2, 3], [4, 5, 6]])
+    assert recall_at_k(t, t) == 1.0
+    assert recall_at_k(t + 100, t) == 0.0
+    half = np.array([[1, 2, 99], [4, 5, 98]])
+    assert recall_at_k(half, t) == pytest.approx(4 / 6)
+
+
+def test_recall_ignores_order():
+    t = np.array([[1, 2, 3]])
+    f = np.array([[3, 1, 2]])
+    assert recall_at_k(f, t) == 1.0
+
+
+def test_exact_knn_matches_numpy():
+    rng = np.random.default_rng(0)
+    base = rng.normal(size=(200, 16)).astype(np.float32)
+    q = rng.normal(size=(8, 16)).astype(np.float32)
+    d, i = exact_knn(q, base, 5)
+    d, i = np.asarray(d), np.asarray(i)
+    full = np.linalg.norm(q[:, None, :] - base[None, :, :], axis=2)
+    ref_i = np.argsort(full, axis=1)[:, :5]
+    np.testing.assert_array_equal(i, ref_i)
+    np.testing.assert_allclose(d, np.take_along_axis(full, ref_i, 1),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_gq_insensitive_to_swap_but_and_sensitive():
+    """Paper Fig. 1: a beneficial 2-edge swap can leave GQ unchanged while
+    the average neighbor distance improves — the motivation for Eq. (4)."""
+    # 2D toy: two clusters of 4; graph degree 4
+    pts = np.array([
+        [0, 0], [0, 1], [1, 0], [1, 1],        # cluster A
+        [10, 0], [10, 1], [11, 0], [11, 1],    # cluster B
+    ], dtype=np.float32)
+    b = GraphBuilder(8, 4)
+    for _ in range(8):
+        b.add_vertex()
+
+    def dist(u, v):
+        return float(np.linalg.norm(pts[u] - pts[v]))
+
+    # within-cluster triangles + two *crossing* long edges (suboptimal)
+    for u, v in [(0, 1), (0, 2), (1, 3), (2, 3), (4, 5), (4, 6), (5, 7),
+                 (6, 7), (0, 3), (4, 7)]:
+        b.add_edge(u, v, dist(u, v))
+    # long edges wired crosswise: 1-6, 2-5  vs better parallel: 1-5, 2-6
+    b.add_edge(1, 6, dist(1, 6))
+    b.add_edge(2, 5, dist(2, 5))
+    gq_before = graph_quality(b, pts)
+    nd_before = average_neighbor_distance(b)
+    # swap endpoints (the Sec. 5.1 "sum of weights" comparison)
+    assert dist(1, 5) + dist(2, 6) < dist(1, 6) + dist(2, 5)
+    b.remove_edge(1, 6)
+    b.remove_edge(2, 5)
+    b.add_edge(1, 5, dist(1, 5))
+    b.add_edge(2, 6, dist(2, 6))
+    gq_after = graph_quality(b, pts)
+    nd_after = average_neighbor_distance(b)
+    assert nd_after < nd_before          # Eq. (4) detects the improvement
+    assert gq_after == pytest.approx(gq_before)  # GQ does not
+
+
+def test_average_neighbor_distance_complete_graph():
+    rng = np.random.default_rng(1)
+    pts = rng.normal(size=(5, 3)).astype(np.float32)
+    b = complete_graph(pts, 4, capacity=8)
+    expect = 0.0
+    for i in range(5):
+        s = 0.0
+        for j in range(5):
+            if i != j:
+                s += np.linalg.norm(pts[i] - pts[j])
+        expect += s / 4
+    expect /= 5
+    assert average_neighbor_distance(b) == pytest.approx(expect, rel=1e-5)

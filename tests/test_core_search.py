@@ -1,0 +1,128 @@
+"""Tests for the batched range search (Algorithm 1)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DEGParams, build_deg, exact_knn, medoid_seed,
+                        range_search, recall_at_k)
+from repro.core.graph import INVALID
+from repro.data import make_dataset
+
+
+@pytest.fixture(scope="module")
+def small_index():
+    base, queries = make_dataset("gaussian", 800, 30, 16, seed=7)
+    p = DEGParams(degree=8, k_ext=16, eps_ext=0.3, k_opt=8)
+    idx = build_deg(base, p, wave_size=32)
+    return base, queries, idx
+
+
+def test_high_recall(small_index):
+    base, queries, idx = small_index
+    _, ti = exact_knn(queries, base, 10)
+    res = idx.search(queries, k=10, eps=0.2, beam_width=64)
+    assert recall_at_k(np.asarray(res.ids), np.asarray(ti)) >= 0.9
+
+
+def test_no_duplicates_in_results(small_index):
+    _, queries, idx = small_index
+    res = idx.search(queries, k=10, eps=0.2)
+    ids = np.asarray(res.ids)
+    for row in ids:
+        valid = row[row != INVALID]
+        assert len(set(valid.tolist())) == len(valid)
+
+
+def test_results_sorted_by_distance(small_index):
+    _, queries, idx = small_index
+    res = idx.search(queries, k=10, eps=0.2)
+    d = np.asarray(res.dists)
+    assert (np.diff(d, axis=1) >= -1e-6).all()
+
+
+def test_distances_are_true_metric(small_index):
+    base, queries, idx = small_index
+    res = idx.search(queries, k=5, eps=0.2)
+    ids = np.asarray(res.ids)
+    dists = np.asarray(res.dists)
+    for qi in range(5):
+        for j in range(5):
+            v = ids[qi, j]
+            if v == INVALID:
+                continue
+            true = np.linalg.norm(idx.vectors[v] - np.asarray(queries[qi]))
+            assert dists[qi, j] == pytest.approx(true, rel=1e-4, abs=1e-4)
+
+
+def test_beam_width_monotone_recall(small_index):
+    """Wider beam (the ef knob) must not reduce recall on average."""
+    base, queries, idx = small_index
+    _, ti = exact_knn(queries, base, 10)
+    recalls = []
+    for L in (12, 32, 96):
+        res = idx.search(queries, k=10, eps=0.2, beam_width=L)
+        recalls.append(recall_at_k(np.asarray(res.ids), np.asarray(ti)))
+    assert recalls[0] <= recalls[1] + 0.05
+    assert recalls[1] <= recalls[2] + 0.05
+    assert recalls[-1] >= 0.9
+
+
+def test_invalid_seeds_handled(small_index):
+    base, queries, idx = small_index
+    g = idx.frozen()
+    seeds = jnp.asarray(
+        np.array([[0, INVALID, 0], [INVALID, 3, 3]], dtype=np.int32))
+    res = range_search(g, idx._dev_vectors, jnp.asarray(queries[:2]), seeds,
+                       k=5, eps=0.2)
+    assert np.asarray(res.ids).shape == (2, 5)
+    assert (np.asarray(res.ids)[:, 0] != INVALID).all()
+
+
+def test_exploration_excludes_seed(small_index):
+    base, queries, idx = small_index
+    seeds = [3, 50, 200]
+    res = idx.explore(seeds, k=10)
+    ids = np.asarray(res.ids)
+    for row, s in zip(ids, seeds):
+        assert s not in row.tolist()
+    # exploration from an indexed vertex should find its true neighbors well:
+    # seed == query means the approach phase is free (paper Sec. 6.7)
+    _, ti = exact_knn(idx.vectors[seeds], base, 11)
+    true_wo_self = np.asarray(ti)[:, 1:]
+    rec = recall_at_k(ids, true_wo_self)
+    assert rec >= 0.8
+
+
+def test_exploration_exclude_list(small_index):
+    base, queries, idx = small_index
+    _, ti = exact_knn(idx.vectors[[10]], base, 6)
+    banned = np.asarray(ti)[:, 1:4]      # ban 3 nearest
+    res = idx.explore([10], k=5, exclude=banned)
+    ids = set(np.asarray(res.ids)[0].tolist())
+    for b in banned[0]:
+        assert int(b) not in ids
+
+
+def test_medoid_seed(small_index):
+    base, _, idx = small_index
+    s = medoid_seed(idx._dev_vectors, idx.n)
+    assert 0 <= s < idx.n
+
+
+def test_hops_and_evals_reported(small_index):
+    _, queries, idx = small_index
+    res = idx.search(queries, k=10, eps=0.2)
+    assert (np.asarray(res.hops) > 0).all()
+    assert (np.asarray(res.evals) >= np.asarray(res.hops)).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(k=st.integers(1, 8), eps=st.floats(0.0, 0.5), b=st.integers(1, 4))
+def test_search_shapes_property(small_index, k, eps, b):
+    base, queries, idx = small_index
+    res = idx.search(queries[:b], k=k, eps=eps)
+    assert np.asarray(res.ids).shape == (b, k)
+    assert np.asarray(res.dists).shape == (b, k)
+    d = np.asarray(res.dists)
+    assert not np.isnan(d).any()

@@ -1,0 +1,210 @@
+"""Per-kernel validation: shape/dtype sweeps, allclose vs the pure-jnp oracle
+(interpret=True executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.l2_topk import l2_topk, l2_topk_ref
+from repro.kernels.gather_dist import gather_dist, gather_dist_ref
+from repro.kernels.bag_lookup import bag_lookup, bag_lookup_ref
+
+
+def _rand(rng, shape, dtype):
+    x = rng.normal(size=shape).astype(np.float32)
+    return jnp.asarray(x, dtype=dtype)
+
+
+# ---------------------------------------------------------------- l2_topk --
+@pytest.mark.parametrize("B,N,m,k", [
+    (8, 512, 128, 10),
+    (3, 1000, 33, 5),      # unaligned everything
+    (16, 2048, 128, 100),  # paper-style k=100
+    (1, 513, 960, 1),
+])
+def test_l2_topk_matches_ref(B, N, m, k):
+    rng = np.random.default_rng(B * 1000 + N)
+    q = _rand(rng, (B, m), jnp.float32)
+    x = _rand(rng, (N, m), jnp.float32)
+    d, i = l2_topk(q, x, k, interpret=True)
+    rd, ri = l2_topk_ref(q, x, k)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(rd), rtol=1e-5,
+                               atol=1e-5)
+    # ids may differ on exact distance ties; compare via distances
+    full = np.linalg.norm(np.asarray(q)[:, None] - np.asarray(x)[None], axis=2)
+    got = np.take_along_axis(full, np.asarray(i), axis=1)
+    np.testing.assert_allclose(got, np.asarray(rd), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_l2_topk_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    q = _rand(rng, (4, 64), dtype)
+    x = _rand(rng, (256, 64), dtype)
+    d, i = l2_topk(q, x, 8, interpret=True)
+    rd, ri = l2_topk_ref(q, x, 8)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(d), np.asarray(rd), rtol=tol,
+                               atol=tol)
+
+
+def test_l2_topk_squared_mode():
+    rng = np.random.default_rng(1)
+    q = _rand(rng, (4, 32), jnp.float32)
+    x = _rand(rng, (128, 32), jnp.float32)
+    d2, _ = l2_topk(q, x, 4, squared=True, interpret=True)
+    d, _ = l2_topk(q, x, 4, squared=False, interpret=True)
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(d) ** 2, rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_l2_topk_padding_never_leaks():
+    """Padded base rows must never appear in the ids."""
+    rng = np.random.default_rng(2)
+    q = _rand(rng, (2, 16), jnp.float32)
+    x = _rand(rng, (130, 16), jnp.float32)   # pads to 256
+    _, i = l2_topk(q, x, 50, interpret=True)
+    assert (np.asarray(i) < 130).all()
+    assert (np.asarray(i) >= 0).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(B=st.integers(1, 9), N=st.integers(16, 300), m=st.integers(4, 80),
+       k=st.integers(1, 12))
+def test_l2_topk_property(B, N, m, k):
+    k = min(k, N)
+    rng = np.random.default_rng(B * 7 + N)
+    q = _rand(rng, (B, m), jnp.float32)
+    x = _rand(rng, (N, m), jnp.float32)
+    d, i = l2_topk(q, x, k, interpret=True)
+    rd, _ = l2_topk_ref(q, x, k)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(rd), rtol=1e-4,
+                               atol=1e-4)
+    assert (np.diff(np.asarray(d), axis=1) >= -1e-6).all()
+
+
+# ------------------------------------------------------------ gather_dist --
+@pytest.mark.parametrize("N,m,B,d", [
+    (256, 128, 4, 16),
+    (100, 33, 2, 7),       # unaligned
+    (1024, 128, 8, 30),    # DEG degree 30
+])
+def test_gather_dist_matches_ref(N, m, B, d):
+    rng = np.random.default_rng(N + m)
+    v = _rand(rng, (N, m), jnp.float32)
+    q = _rand(rng, (B, m), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, N, size=(B, d)), jnp.int32)
+    out = gather_dist(v, ids, q, interpret=True)
+    ref = gather_dist_ref(v, ids, q)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_gather_dist_clamps_invalid():
+    rng = np.random.default_rng(3)
+    v = _rand(rng, (32, 16), jnp.float32)
+    q = _rand(rng, (2, 16), jnp.float32)
+    ids = jnp.asarray(np.array([[0, -1, 5], [31, -1, -1]]), jnp.int32)
+    out = np.asarray(gather_dist(v, ids, q, interpret=True))
+    # -1 clamps to row 0; caller masks those lanes — only require no NaN/crash
+    assert np.isfinite(out).all()
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gather_dist_dtypes(dtype):
+    rng = np.random.default_rng(4)
+    v = _rand(rng, (64, 32), dtype)
+    q = _rand(rng, (3, 32), dtype)
+    ids = jnp.asarray(rng.integers(0, 64, size=(3, 9)), jnp.int32)
+    out = gather_dist(v, ids, q, interpret=True)
+    ref = gather_dist_ref(v, ids, q)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=tol,
+                               atol=tol)
+
+
+def test_gather_dist_agrees_with_search_path():
+    """The kernel must agree with the jnp path used inside range_search."""
+    from repro.core.search import _neighbor_distances_jnp
+
+    rng = np.random.default_rng(5)
+    v = _rand(rng, (128, 24), jnp.float32)
+    q = _rand(rng, (4, 24), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, 128, size=(4, 8)), jnp.int32)
+    a = gather_dist(v, ids, q, interpret=True)
+    b = _neighbor_distances_jnp(v, q, ids, "l2")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)
+
+
+# ------------------------------------------------------------- bag_lookup --
+@pytest.mark.parametrize("V,E,B,F", [
+    (1000, 16, 8, 26),     # DLRM-ish
+    (37, 7, 3, 5),         # tiny unaligned
+    (5000, 128, 4, 13),
+])
+def test_bag_lookup_matches_ref(V, E, B, F):
+    rng = np.random.default_rng(V + E)
+    t = _rand(rng, (V, E), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, V, size=(B, F)), jnp.int32)
+    w = jnp.asarray(rng.uniform(0.1, 2.0, size=(B, F)).astype(np.float32))
+    out = bag_lookup(t, ids, w, interpret=True)
+    ref = bag_lookup_ref(t, ids, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_bag_lookup_invalid_ids_zero_weight():
+    rng = np.random.default_rng(6)
+    t = _rand(rng, (50, 8), jnp.float32)
+    ids = jnp.asarray(np.array([[3, -1, 7], [-1, -1, 2]]), jnp.int32)
+    out = np.asarray(bag_lookup(t, ids, interpret=True))
+    ref = np.asarray(t)[[3, 7]].reshape(2, -1, 8)
+    np.testing.assert_allclose(out[0], np.asarray(t)[3] + np.asarray(t)[7],
+                               rtol=1e-5)
+    np.testing.assert_allclose(out[1], np.asarray(t)[2], rtol=1e-5)
+
+
+def test_bag_lookup_unweighted_default():
+    rng = np.random.default_rng(7)
+    t = _rand(rng, (20, 4), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, 20, size=(5, 3)), jnp.int32)
+    out = bag_lookup(t, ids, interpret=True)
+    ref = bag_lookup_ref(t, ids, jnp.ones((5, 3)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5)
+
+
+def test_bag_lookup_matches_model_embedding_bag():
+    """Kernel vs the segment_sum-based EmbeddingBag in the model substrate."""
+    from repro.models.embedding_bag import embedding_bag_fixed
+
+    rng = np.random.default_rng(8)
+    t = _rand(rng, (100, 12), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, 100, size=(6, 4)), jnp.int32)
+    a = bag_lookup(t, ids, interpret=True)
+    b = embedding_bag_fixed(t, ids)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_gather_dist_bf16_path():
+    """bf16 vector payload: distances must match the f32 oracle to bf16
+    precision (the fused-kernel half-traffic path, EXPERIMENTS.md §Perf)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels.gather_dist import ops as gd_ops
+    from repro.kernels.gather_dist import ref as gd_ref
+
+    rng = np.random.default_rng(7)
+    vecs = rng.normal(size=(200, 48)).astype(np.float32)
+    qs = rng.normal(size=(8, 48)).astype(np.float32)
+    ids = rng.integers(0, 200, size=(8, 12)).astype(np.int32)
+    got = gd_ops.gather_dist(jnp.asarray(vecs, jnp.bfloat16),
+                             jnp.asarray(ids),
+                             jnp.asarray(qs, jnp.bfloat16))
+    want = gd_ref.gather_dist_ref(jnp.asarray(vecs), jnp.asarray(ids),
+                                  jnp.asarray(qs))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0.05, atol=0.05)

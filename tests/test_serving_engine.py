@@ -1,0 +1,91 @@
+"""QueryEngine: batching, exploration sessions, online inserts, refinement."""
+import numpy as np
+import pytest
+
+from repro.core.build import DEGParams, build_deg
+from repro.core.distances import exact_knn_batched
+from repro.core.metrics import recall_at_k
+from repro.serving.engine import QueryEngine
+
+
+@pytest.fixture(scope="module")
+def index():
+    rng = np.random.default_rng(0)
+    vecs = rng.normal(size=(800, 12)).astype(np.float32)
+    return build_deg(vecs, DEGParams(degree=8, k_ext=16), wave_size=8), vecs
+
+
+def test_batched_search_recall(index):
+    idx, vecs = index
+    rng = np.random.default_rng(1)
+    qs = vecs[:50] + 0.01 * rng.normal(size=(50, 12)).astype(np.float32)
+    eng = QueryEngine(idx, k=5, max_batch=16)
+    ids, dists = eng.search(qs)
+    _, gt = exact_knn_batched(qs, vecs[: idx.n], 5)
+    assert recall_at_k(ids, gt) > 0.85
+    assert eng.stats.flushes >= 4          # 50 queries / 16 per flush
+
+
+def test_flush_pads_to_fixed_shape(index):
+    idx, vecs = index
+    eng = QueryEngine(idx, k=3, max_batch=8)
+    f = eng.submit(vecs[0])
+    assert not f["done"]
+    eng.flush()
+    assert f["done"] and f["ids"].shape == (3,)
+
+
+def test_exploration_sessions_never_repeat(index):
+    idx, vecs = index
+    eng = QueryEngine(idx, k=5, max_batch=4)
+    seen = set()
+    v = 7
+    for hop in range(5):
+        fut = eng.explore(v, session="u1")
+        eng.flush()
+        ids = [int(x) for x in fut["ids"] if x >= 0]
+        assert v not in ids                  # the seed itself is excluded
+        assert not (set(ids) & seen)         # no repeats across the session
+        seen.update(ids)
+        seen.add(v)
+        v = ids[0]
+    # a different session is unaffected
+    fut = eng.explore(7, session="u2")
+    eng.flush()
+    assert any(int(x) in seen for x in fut["ids"] if x >= 0)
+
+
+def test_online_insert_findable(index):
+    idx, vecs = index
+    eng = QueryEngine(idx, k=3, max_batch=4)
+    rng = np.random.default_rng(3)
+    new = (10.0 + rng.normal(size=(1, 12))).astype(np.float32)  # far away
+    eng.insert(new)
+    new_id = idx.n - 1
+    ids, _ = eng.search(new)
+    assert int(ids[0, 0]) == new_id          # immediately findable
+
+
+def test_refine_budget_runs(index):
+    idx, vecs = index
+    eng = QueryEngine(idx, k=3, max_batch=4, refine_budget=2)
+    eng.search(vecs[:4])
+    assert eng.stats.refine_iterations >= 0  # ran without violating invariants
+    from repro.core.invariants import check_invariants
+
+    ok, msgs = check_invariants(idx.builder)
+    assert ok, msgs
+
+
+def test_online_delete(index):
+    idx, vecs = index
+    from repro.core.invariants import check_invariants
+
+    eng = QueryEngine(idx, k=3, max_batch=4)
+    target = idx.vectors[10].copy()
+    assert eng.delete(10)
+    ok, msgs = check_invariants(idx.builder)
+    assert ok, msgs
+    ids, _ = eng.search(target[None])
+    found = idx.vectors[int(ids[0, 0])]
+    assert not np.allclose(found, target)
