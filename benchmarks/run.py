@@ -22,6 +22,7 @@ SECTIONS = [
     ("table12_graph_stats", "graph_stats"),
     ("appG_neighbor_choice", "neighbor_choice"),
     ("kernels", "kernels"),
+    ("kernel_beam_merge", "beam_merge"),
     ("roofline", "roofline_report"),
 ]
 
@@ -35,6 +36,7 @@ QUICK_OVERRIDES = {
     "degree_sweep": dict(n=1500, n_query=100, degrees=(8, 16)),
     "graph_stats": dict(n=1200),
     "neighbor_choice": dict(n=1200, n_query=100),
+    "beam_merge": dict(shapes=((64, 64, 20), (64, 128, 32))),
 }
 
 

@@ -146,6 +146,32 @@ def parse_module(text: str) -> dict[str, Computation]:
     return comps
 
 
+def _parse_operand_names(opsec: str) -> list:
+    """Operand names from an operand list section.
+
+    Newer XLA prints bare names (``%a, %b``); older releases print the full
+    type inline (``f32[32,32]{1,0} %a``), so naive token matching picks up
+    dtype/dim junk.  Split on top-level commas and keep the *last* token of
+    each fragment — the operand name in both formats.
+    """
+    parts, depth, start = [], 0, 0
+    for i, ch in enumerate(opsec):
+        if ch in "({[":
+            depth += 1
+        elif ch in ")}]":
+            depth -= 1
+        elif ch == "," and depth == 0:
+            parts.append(opsec[start:i])
+            start = i + 1
+    parts.append(opsec[start:])
+    out = []
+    for p in parts:
+        toks = _OPERAND_RE.findall(p)
+        if toks:
+            out.append(toks[-1])
+    return out
+
+
 def _parse_instruction(line: str) -> Optional[Instr]:
     m = _NAME_RE.match(line)
     if not m:
@@ -179,7 +205,7 @@ def _parse_instruction(line: str) -> Optional[Instr]:
     rest = rhs[mo.end():]
     opsec, attrs = _split_operands(rest)
     opsec = re.sub(r"/\*.*?\*/", "", opsec)   # strip /*index=N*/ comments
-    operands = _OPERAND_RE.findall(opsec)
+    operands = _parse_operand_names(opsec)
     calls = {k: v for k, v in _CALL_ATTR_RE.findall(attrs)}
     mt = _TRIP_RE.search(attrs)
     trip = int(mt.group(1)) if mt else None

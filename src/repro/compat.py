@@ -1,0 +1,48 @@
+"""Version compatibility shims for the installed jax.
+
+The codebase targets the modern public API (``jax.shard_map`` with a
+``check_vma`` flag, ``jax.set_mesh`` as a context manager).  Older jax
+releases (<= 0.4.x) expose the same functionality as
+``jax.experimental.shard_map.shard_map`` (flag spelled ``check_rep``) and
+have no mesh context setter — entering the ``Mesh`` object itself is the
+equivalent.  Import ``shard_map`` / ``set_mesh`` from here instead of from
+``jax`` so both generations of the API work unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Callable
+
+import jax
+
+__all__ = ["shard_map", "set_mesh"]
+
+
+if hasattr(jax, "shard_map"):
+    _shard_map_impl: Callable[..., Any] = jax.shard_map
+    _CHECK_KW = "check_vma"
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with the new-API keyword spelling on any jax."""
+    kwargs = {_CHECK_KW: check_vma}
+    return _shard_map_impl(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    Falls back to entering the ``Mesh`` object (the pre-``jax.set_mesh``
+    spelling) when the setter does not exist; a bare ``AbstractMesh`` (not
+    a context manager) degrades to a no-op context.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(mesh, "__enter__"):
+        return mesh
+    return contextlib.nullcontext(mesh)

@@ -1,16 +1,18 @@
 """Core DEG library: the paper's contribution as composable JAX modules."""
+from .beam import BeamState, beam_search
 from .build import DEGIndex, DEGParams, build_deg
 from .distances import exact_knn, exact_knn_batched, get_metric
 from .graph import DEGraph, GraphBuilder, INVALID, complete_graph
 from .metrics import average_neighbor_distance, graph_quality, recall_at_k
-from .optimize import dynamic_edge_optimization, optimize_edge
+from .optimize import dynamic_edge_optimization, optimize_edge, refine_sweep
 from .search import SearchResult, medoid_seed, range_search, search_graph
 
 __all__ = [
+    "BeamState", "beam_search",
     "DEGIndex", "DEGParams", "build_deg",
     "exact_knn", "exact_knn_batched", "get_metric",
     "DEGraph", "GraphBuilder", "INVALID", "complete_graph",
     "average_neighbor_distance", "graph_quality", "recall_at_k",
-    "dynamic_edge_optimization", "optimize_edge",
+    "dynamic_edge_optimization", "optimize_edge", "refine_sweep",
     "SearchResult", "medoid_seed", "range_search", "search_graph",
 ]

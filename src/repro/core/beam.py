@@ -1,0 +1,264 @@
+"""The device-side beam engine — the shared inner loop of the whole system.
+
+The paper's RangeSearch (Alg. 1) appears in every layer of this repro:
+queries (``core/search.py``), incremental-build candidate searches (Alg. 3,
+``core/build.py``), delete-repair and continuous edge optimization (Alg. 5,
+``core/delete.py`` / ``core/optimize.py``), shard-local search
+(``distributed/index.py``) and the serving flush (``serving/engine.py``).
+This module is the single implementation all of them drive:
+
+* :class:`BeamState` — a registered-dataclass pytree holding the lock-step
+  beam of ``B`` query lanes: ids / dists / checked / excluded, all ``(B, L)``
+  with the *sorted invariant* (ascending by ``(dist, stable-rank)``), plus
+  per-lane hop and distance-evaluation counters;
+* jitted primitives :func:`init` / :func:`expand` / :func:`merge` /
+  :func:`extract` — each usable standalone, and composed by
+  :func:`beam_search` into one ``lax.while_loop`` program;
+* the per-hop beam merge dispatches to ``kernels/beam_merge`` — a fused
+  bitonic partial-merge (Pallas kernel + XLA fast path) that replaces the
+  seed's full ``(B, L+d)`` argsort and is bit-identical to it.
+
+``core/search.py::range_search`` is a thin jitted driver over this engine;
+see ARCHITECTURE.md ("Beam engine layering") for how the layers stack.
+
+Exploration queries (paper Sec. 6.7) are native: seeds may be graph
+vertices and ``exclude`` removes vertices from the *result list* (and from
+the radius ``r``) while still allowing navigation through them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .distances import get_metric
+from .graph import DEGraph, INVALID
+
+Array = jax.Array
+_INF = jnp.inf
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class BeamState:
+    """Lock-step beam over B query lanes (sorted invariant along axis 1)."""
+
+    ids: Array        # (B, L) int32, INVALID-padded
+    dists: Array      # (B, L) float32, inf-padded
+    checked: Array    # (B, L) bool — expanded (or never-expandable) entries
+    excluded: Array   # (B, L) bool — in the beam but banned from results
+    hops: Array       # (B,) int32 — expanded vertices
+    evals: Array      # (B,) int32 — distance evaluations (|C| analogue)
+
+    @property
+    def width(self) -> int:
+        return self.ids.shape[1]
+
+
+def neighbor_distances_jnp(vectors, queries, nbr_ids, metric_name):
+    metric = get_metric(metric_name)
+    nvecs = vectors[nbr_ids]                        # (B, d, m)
+    return metric.pair(queries[:, None, :], nvecs)  # (B, d)
+
+
+def _neighbor_distances(vectors, queries, nbr_ids, metric_name, backend):
+    if backend == "pallas" and metric_name == "l2":
+        from repro.kernels.gather_dist import ops as gd_ops
+
+        return gd_ops.gather_dist(vectors, nbr_ids, queries)
+    return neighbor_distances_jnp(vectors, queries, nbr_ids, metric_name)
+
+
+def in_set(ids: Array, excl: Array) -> Array:
+    """ids (B, L), excl (B, X) -> bool (B, L) membership (INVALID never
+    member)."""
+    hit = (ids[:, :, None] == excl[:, None, :]).any(axis=2)
+    return hit & (ids != INVALID)
+
+
+def radius(state: BeamState, k: int) -> Array:
+    """k-th best non-excluded distance per lane (inf if fewer than k)."""
+    ok = (state.ids != INVALID) & ~state.excluded
+    cnt = jnp.cumsum(ok.astype(jnp.int32), axis=1)
+    at_k = ok & (cnt == k)
+    has_k = at_k.any(axis=1)
+    kth = jnp.where(at_k, state.dists, _INF).min(axis=1)
+    return jnp.where(has_k, kth, _INF)
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+def init(vectors: Array, queries: Array, seed_ids: Array, exclude: Array,
+         n_valid: Array, *, beam_width: int, metric: str) -> BeamState:
+    """Seed the beam: dedup seeds per lane, score them, sort, pad to L."""
+    B = queries.shape[0]
+    L = beam_width
+    metric_obj = get_metric(metric)
+
+    seed_valid = (seed_ids != INVALID) & (seed_ids < n_valid)
+    # dedup seeds within each lane (keep first occurrence)
+    first_pos = jnp.argmax(seed_ids[:, :, None] == seed_ids[:, None, :],
+                           axis=2)
+    seed_valid &= first_pos == jnp.arange(seed_ids.shape[1])[None, :]
+    safe_seeds = jnp.where(seed_valid, seed_ids, 0)
+    seed_d = metric_obj.pair(queries[:, None, :], vectors[safe_seeds])
+    seed_d = jnp.where(seed_valid, seed_d, _INF)
+    seed_ids_m = jnp.where(seed_valid, seed_ids, INVALID)
+
+    pad = L - seed_ids.shape[1]
+    ids = jnp.concatenate(
+        [seed_ids_m, jnp.full((B, pad), INVALID, jnp.int32)], axis=1)
+    dists = jnp.concatenate([seed_d, jnp.full((B, pad), _INF)], axis=1)
+    checked = ids == INVALID        # invalid slots never selected
+    excl = in_set(ids, exclude)
+
+    order = jnp.argsort(dists, axis=1)
+    take = functools.partial(jnp.take_along_axis, indices=order, axis=1)
+    return BeamState(
+        ids=take(ids), dists=take(dists), checked=take(checked),
+        excluded=take(excl),
+        hops=jnp.zeros((B,), jnp.int32),
+        evals=seed_valid.sum(axis=1).astype(jnp.int32))
+
+
+def merge(state: BeamState, cand_ids: Array, cand_dists: Array,
+          cand_exc: Array, *, merge_backend: str = "jnp") -> BeamState:
+    """Fold (B, d) scored candidates into the beam, keeping the sorted
+    invariant.  Newly merged INVALID slots become checked (never
+    expandable)."""
+    d, ids, chk, exc = _merge_dispatch(
+        state.dists, state.ids, state.checked, state.excluded,
+        cand_dists, cand_ids, cand_exc, merge_backend)
+    chk = jnp.where(ids == INVALID, True, chk)
+    return dataclasses.replace(state, ids=ids, dists=d, checked=chk,
+                               excluded=exc)
+
+
+def _merge_dispatch(beam_d, beam_ids, beam_chk, beam_exc,
+                    cand_d, cand_ids, cand_exc, merge_backend):
+    from repro.kernels.beam_merge import ops as bm_ops
+
+    return bm_ops.beam_merge(beam_d, beam_ids, beam_chk, beam_exc,
+                             cand_d, cand_ids, cand_exc,
+                             backend=merge_backend)
+
+
+def expand(state: BeamState, adjacency: Array, n_valid: Array,
+           vectors: Array, queries: Array, exclude: Array, *, k: int,
+           eps: float, metric: str, backend: str = "jnp",
+           merge_backend: str = "jnp") -> BeamState:
+    """One hop: expand each lane's closest unchecked entry (Alg. 1 lines
+    8-15) and merge its scored neighbors into the beam."""
+    B = queries.shape[0]
+    eps1 = jnp.float32(1.0 + eps)
+    r = radius(state, k)
+    cur = jnp.argmax(~state.checked, axis=1)            # first unchecked
+    lane = jnp.arange(B)
+    cur_id = state.ids[lane, cur]
+    cur_d = state.dists[lane, cur]
+    active = ((~state.checked.all(axis=1)) & (cur_d <= r * eps1)
+              & (cur_id != INVALID))
+
+    checked = state.checked.at[lane, cur].set(
+        jnp.where(active, True, state.checked[lane, cur]))
+
+    nbrs = adjacency[jnp.where(active, cur_id, 0)]       # (B, d)
+    ok = active[:, None] & (nbrs != INVALID) & (nbrs < n_valid)
+    ok &= ~(nbrs[:, :, None] == state.ids[:, None, :]).any(axis=2)  # dedup
+    safe = jnp.where(ok, nbrs, 0)
+    nd = _neighbor_distances(vectors, queries, safe, metric, backend)
+    nd = jnp.where(ok, nd, _INF)
+    keep = ok & (nd <= r[:, None] * eps1)                # Alg. 1 line 12
+    cand_ids = jnp.where(keep, nbrs, INVALID)
+    cand_d = jnp.where(keep, nd, _INF)
+    cand_exc = in_set(cand_ids, exclude) & keep
+
+    state = dataclasses.replace(
+        state, checked=checked,
+        hops=state.hops + active.astype(jnp.int32),
+        evals=state.evals + ok.sum(axis=1).astype(jnp.int32))
+    return merge(state, cand_ids, cand_d, cand_exc,
+                 merge_backend=merge_backend)
+
+
+def alive(state: BeamState, *, k: int, eps: float) -> Array:
+    """(B,) bool: does the lane still have an expandable entry within the
+    range radius (Alg. 1 line 7 would NOT yet return)?"""
+    eps1 = jnp.float32(1.0 + eps)
+    r = radius(state, k)
+    nxt = jnp.argmax(~state.checked, axis=1)
+    nxt_d = state.dists[jnp.arange(state.ids.shape[0]), nxt]
+    return (~state.checked.all(axis=1)) & (nxt_d <= r * eps1)
+
+
+def extract(state: BeamState, k: int) -> tuple[Array, Array]:
+    """Top-k non-excluded results: (ids (B, k), dists (B, k))."""
+    final_d = jnp.where(state.excluded | (state.ids == INVALID), _INF,
+                        state.dists)
+    order = jnp.argsort(final_d, axis=1)[:, :k]
+    out_ids = jnp.take_along_axis(state.ids, order, axis=1)
+    out_d = jnp.take_along_axis(final_d, order, axis=1)
+    out_ids = jnp.where(jnp.isinf(out_d), INVALID, out_ids)
+    return out_ids, out_d
+
+
+# ---------------------------------------------------------------------------
+# the composed program
+# ---------------------------------------------------------------------------
+def beam_search(graph: DEGraph, vectors: Array, queries: Array,
+                seed_ids: Array, *, k: int, eps: float, beam_width: int,
+                max_hops: int, metric: str = "l2",
+                exclude: Optional[Array] = None, backend: str = "jnp",
+                merge_backend: str = "jnp") -> BeamState:
+    """init -> while(expand) -> final BeamState.  Pure (un-jitted): callers
+    embed it in their own jitted programs (``range_search``, the sharded
+    search step) so every layer reuses one implementation."""
+    B = queries.shape[0]
+    if exclude is None:
+        exclude = jnp.full((B, 1), INVALID, dtype=jnp.int32)
+    n_valid = graph.n
+    adjacency = graph.adjacency
+
+    state0 = init(vectors, queries, seed_ids, exclude, n_valid,
+                  beam_width=beam_width, metric=metric)
+
+    def cond(carry):
+        _, it, any_alive = carry
+        return any_alive & (it < max_hops)
+
+    def body(carry):
+        state, it, _ = carry
+        state = expand(state, adjacency, n_valid, vectors, queries, exclude,
+                       k=k, eps=eps, metric=metric, backend=backend,
+                       merge_backend=merge_backend)
+        return (state, it + 1, alive(state, k=k, eps=eps).any())
+
+    state, _, _ = jax.lax.while_loop(
+        cond, body, (state0, jnp.int32(0), jnp.asarray(True)))
+    return state
+
+
+# jitted standalone primitives (library surface for out-of-loop callers)
+init_jit = jax.jit(init, static_argnames=("beam_width", "metric"))
+merge_jit = jax.jit(merge, static_argnames=("merge_backend",))
+expand_jit = jax.jit(
+    expand, static_argnames=("k", "metric", "backend", "merge_backend"))
+extract_jit = jax.jit(extract, static_argnames=("k",))
+
+
+def default_beam_width(k: int, degree: int, n_seeds: int,
+                       n_exclude: int = 0) -> int:
+    """The L heuristic shared by every driver (seed semantics)."""
+    L = max(k + degree, 2 * k)
+    L = max(L, k, n_seeds)
+    if n_exclude:
+        L = max(L, k + n_exclude)
+    return L
+
+
+def default_max_hops(beam_width: int) -> int:
+    return 4 * beam_width + 64

@@ -96,6 +96,7 @@ class DEGIndex:
         self.builder: Optional[GraphBuilder] = None
         self._pending: list[np.ndarray] = []   # points before K_{d+1} exists
         self._rng = np.random.default_rng(0)
+        self._medoid: Optional[int] = None     # cached medoid_seed entry
 
     # -- sizes -------------------------------------------------------------
     @property
@@ -118,9 +119,22 @@ class DEGIndex:
 
     # -- device sync ---------------------------------------------------------
     def _put_rows(self, rows: np.ndarray, start: int) -> None:
+        self._medoid = None                    # vector set changed
         self._dev_vectors = _write_rows(
             self._dev_vectors, jnp.asarray(rows, dtype=jnp.float32),
             jnp.asarray(start, dtype=jnp.int32))
+
+    def medoid(self) -> int:
+        """Cached approximate-median entry vertex (paper Sec. 5.4).
+
+        ``medoid_seed`` is a full device reduction over the vector buffer;
+        recomputing it per query was pure overhead.  The cache is
+        invalidated whenever the indexed vector set changes (insert waves,
+        deletion compaction — both funnel through ``_put_rows`` — and
+        ``remove``'s slot shrink)."""
+        if self._medoid is None or self._medoid >= self.n:
+            self._medoid = medoid_seed(self._dev_vectors, self.n)
+        return self._medoid
 
     def frozen(self) -> DEGraph:
         return self.builder.freeze()
@@ -161,13 +175,11 @@ class DEGIndex:
         start = self.builder.n
         self.vectors[start : start + W] = pts
         self._put_rows(pts, start)
-        # one batched candidate search for the whole wave (pre-wave graph)
-        graph = self.frozen()
-        seeds = jnp.full((W, 1), self._entry_vertex(), dtype=jnp.int32)
-        res = range_search(
-            graph, self._dev_vectors, jnp.asarray(pts), seeds,
-            k=self.params.k_ext, eps=self.params.eps_ext,
-            metric=self.params.metric)
+        # one batched candidate search for the whole wave (pre-wave graph),
+        # through the same engine program as every other consumer
+        seeds = np.full((W, 1), self._entry_vertex(), dtype=np.int32)
+        res = self.search_batch(pts, seeds, k=self.params.k_ext,
+                                eps=self.params.eps_ext)
         ids = np.asarray(res.ids)
         dists = np.asarray(res.dists)
         for j in range(W):
@@ -278,34 +290,64 @@ class DEGIndex:
         delete_vertices."""
         from .delete import delete_vertices
 
+        self._medoid = None
         return delete_vertices(self, ids if hasattr(ids, "__iter__")
                                else [ids], refine_after=refine_after)
 
     # -- continuous refinement (Alg. 5 driver) -------------------------------
     def refine(self, iterations: int, seed: Optional[int] = None) -> int:
-        from .optimize import dynamic_edge_optimization
+        """Continuous edge optimization (Alg. 5) over ``iterations`` random
+        vertices, via the *batched* candidate-search path: each chunk of
+        vertices prefetches the first Alg.-4 search of every edge task in
+        ONE device call (optimize.refine_sweep), instead of a per-edge
+        ``_search_from`` round-trip.  Host-side graph surgery is unchanged.
+        Returns the number of improved edges."""
+        from .optimize import refine_sweep
 
+        if self.builder is None or self.builder.n <= self.builder.degree + 1:
+            return 0
         rng = np.random.default_rng(seed)
-        improved = 0
-        for _ in range(iterations):
-            improved += int(dynamic_edge_optimization(
-                self, rng,
-                i_opt=self.params.i_opt, k_opt=self.params.k_opt,
-                eps_opt=self.params.eps_opt))
-        return improved
+        vertices = rng.integers(0, self.builder.n, size=int(iterations))
+        return refine_sweep(
+            self, vertices,
+            i_opt=self.params.i_opt, k_opt=self.params.k_opt,
+            eps_opt=self.params.eps_opt)
 
     # -- queries --------------------------------------------------------------
+    def search_batch(self, queries: np.ndarray,
+                     seed_ids: Optional[np.ndarray] = None,
+                     exclude: Optional[np.ndarray] = None, *, k: int,
+                     eps: float = 0.1, beam_width: Optional[int] = None,
+                     backend: str = "jnp") -> SearchResult:
+        """The one device entry point every query path funnels through.
+
+        ``seed_ids`` (B, S) / ``exclude`` (B, X) go straight into the beam
+        engine; plain searches, exploration sessions and the serving
+        flush all share this jitted program (one cache entry per shape
+        family instead of one per calling layer)."""
+        q = jnp.asarray(np.atleast_2d(np.asarray(queries, np.float32)))
+        if seed_ids is None:
+            seeds = jnp.full((q.shape[0], 1), self.medoid(), dtype=jnp.int32)
+        else:
+            seeds = jnp.asarray(np.asarray(seed_ids, np.int32))
+            if seeds.ndim == 1:
+                seeds = seeds[:, None]
+        excl = None if exclude is None else jnp.asarray(
+            np.asarray(exclude, np.int32))
+        return range_search(self.frozen(), self._dev_vectors, q, seeds,
+                            k=k, eps=eps, beam_width=beam_width,
+                            metric=self.params.metric, exclude=excl,
+                            backend=backend)
+
     def search(self, queries: np.ndarray, k: int, eps: float = 0.1,
                beam_width: Optional[int] = None, seed: Optional[int] = None,
                backend: str = "jnp") -> SearchResult:
-        graph = self.frozen()
-        q = jnp.asarray(np.atleast_2d(np.asarray(queries, np.float32)))
         if seed is None:
-            seed = medoid_seed(self._dev_vectors, self.n)
-        seeds = jnp.full((q.shape[0], 1), seed, dtype=jnp.int32)
-        return range_search(graph, self._dev_vectors, q, seeds, k=k, eps=eps,
-                            beam_width=beam_width, metric=self.params.metric,
-                            backend=backend)
+            seed = self.medoid()
+        q = np.atleast_2d(np.asarray(queries, np.float32))
+        seeds = np.full((q.shape[0], 1), seed, dtype=np.int32)
+        return self.search_batch(q, seeds, k=k, eps=eps,
+                                 beam_width=beam_width, backend=backend)
 
     def explore(self, seed_vertices: Sequence[int], k: int, eps: float = 0.1,
                 exclude: Optional[np.ndarray] = None,
@@ -313,29 +355,41 @@ class DEGIndex:
         """Exploration queries (paper Sec. 6.7): seed == query vertex; the
         seed (and optionally already-seen vertices) are excluded from results."""
         sv = np.asarray(seed_vertices, dtype=np.int32).reshape(-1)
-        q = jnp.asarray(self.vectors[sv])
-        seeds = jnp.asarray(sv[:, None])
         if exclude is None:
             excl = sv[:, None]
         else:
             excl = np.concatenate([sv[:, None], np.asarray(exclude, np.int32)],
                                   axis=1)
-        return range_search(self.frozen(), self._dev_vectors, q, seeds,
-                            k=k, eps=eps, beam_width=beam_width,
-                            metric=self.params.metric,
-                            exclude=jnp.asarray(excl))
+        return self.search_batch(self.vectors[sv], sv[:, None], excl,
+                                 k=k, eps=eps, beam_width=beam_width)
 
     # -- internal search used by optimize.py ----------------------------------
     def _search_from(self, query_vec: np.ndarray, seed_ids: Sequence[int],
                      k: int, eps: float) -> tuple[np.ndarray, np.ndarray]:
-        q = jnp.asarray(np.asarray(query_vec, np.float32)[None, :])
         s = np.full((1, 2), INVALID, dtype=np.int32)
         for j, sid in enumerate(list(seed_ids)[:2]):
             s[0, j] = sid
-        res = range_search(self.frozen(), self._dev_vectors, q,
-                           jnp.asarray(s), k=k, eps=eps,
-                           metric=self.params.metric)
+        res = self.search_batch(
+            np.asarray(query_vec, np.float32)[None, :], s, k=k, eps=eps)
         return np.asarray(res.ids)[0], np.asarray(res.dists)[0]
+
+    def _search_from_batch(self, query_vecs: np.ndarray,
+                           seed_ids: np.ndarray, k: int, eps: float
+                           ) -> tuple[np.ndarray, np.ndarray]:
+        """Batched sibling of ``_search_from``: (B, m) queries, (B, S)
+        seeds -> host (B, k) ids/dists.  Lanes are padded to a power of two
+        so the repeated Alg.-5 sweeps reuse a handful of jit entries."""
+        B = query_vecs.shape[0]
+        Bp = 1
+        while Bp < B:
+            Bp *= 2
+        Bp = max(Bp, 8)
+        q = np.zeros((Bp, self.dim), np.float32)
+        q[:B] = query_vecs
+        s = np.full((Bp, seed_ids.shape[1]), INVALID, np.int32)
+        s[:B] = seed_ids
+        res = self.search_batch(q, s, k=k, eps=eps)
+        return np.asarray(res.ids)[:B], np.asarray(res.dists)[:B]
 
 
 def build_deg(vectors: np.ndarray, params: DEGParams | None = None,

@@ -142,6 +142,7 @@ def delete_vertex(index: DEGIndex, v: int, *, rng=None,
         return False
 
     # 4. compact: move last vertex into slot v
+    index._medoid = None     # vector set shrinks even when v == last
     last = b.n - 1
     if v != last:
         last_nbrs = [int(x) for x in b.neighbors(last)]
@@ -157,14 +158,13 @@ def delete_vertex(index: DEGIndex, v: int, *, rng=None,
     b.n -= 1
 
     if refine_after:
-        from .optimize import dynamic_edge_optimization
+        # repair ride-along: one batched Alg. 5 sweep over the re-paired
+        # neighbors (a single prefetch device call via the beam engine)
+        from .optimize import refine_sweep
 
-        for u in nbrs[: refine_after]:
-            if u < b.n:
-                dynamic_edge_optimization(index, rng, vertex=u,
-                                          i_opt=index.params.i_opt,
-                                          k_opt=index.params.k_opt,
-                                          eps_opt=index.params.eps_opt)
+        refine_sweep(index, [u for u in nbrs[: refine_after] if u < b.n],
+                     i_opt=index.params.i_opt, k_opt=index.params.k_opt,
+                     eps_opt=index.params.eps_opt)
     return True
 
 

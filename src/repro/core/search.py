@@ -1,24 +1,26 @@
-"""Batched RangeSearch (paper Algorithm 1) as a fixed-shape TPU program.
+"""Batched RangeSearch (paper Algorithm 1) — thin jitted driver over the
+beam engine.
 
-The paper's single-query best-first loop becomes a *lock-step beam search*
-over ``B`` query lanes inside one ``jax.lax.while_loop``:
+The actual search loop lives in :mod:`repro.core.beam` (see ARCHITECTURE.md,
+"Beam engine layering"): a lock-step beam over ``B`` query lanes inside one
+``jax.lax.while_loop``, where each hop gathers the ``d`` neighbors of the
+closest unchecked beam entry, scores them (``gather_dist`` Pallas kernel on
+TPU), and folds them into the distance-sorted beam with the fused
+``beam_merge`` bitonic partial-merge kernel (bit-identical to, and cheaper
+than, the seed's full ``(B, L+d)`` argsort per hop).
 
-* the candidate set ``S`` and result list ``R`` of Alg. 1 are merged into one
-  distance-sorted *beam* of static width ``L >= k`` per lane (the classic
-  ef-style formulation, exact w.r.t. Alg. 1 semantics: ``r`` is the k-th best
-  distance seen, expansion requires ``delta <= r * (1 + eps)``);
-* one hop = gather the ``d`` neighbors of the closest unchecked beam entry
-  (a dense ``(B, d)`` lookup thanks to DEG's even regularity), compute their
-  distances (``(B, d, m)`` gather + reduction — the `gather_dist` Pallas
-  kernel implements the fused HBM->VMEM version), and merge into the beam
-  with an argsort;
-* a lane deactivates exactly when Alg. 1 line 7 would return: the closest
-  unchecked candidate is farther than ``r * (1 + eps)``.
+This module keeps the public query API: :func:`range_search` resolves the
+beam-width/hop-budget defaults and jits the engine program;
+:func:`search_graph` adds the shared-medoid-seed convenience.  All other
+layers (build, optimize, delete, distributed, serving) drive the same
+engine — either through :func:`range_search` or directly via
+``beam.beam_search`` inside their own jitted programs.
 
 Exploration queries (paper Sec. 6.7) are supported natively: seeds can be
-graph vertices and an ``exclude`` list removes already-seen vertices from the
-*result list* (and from the radius ``r``) while still allowing navigation
-through them — exactly the browsing protocol the paper describes.
+graph vertices and an ``exclude`` list removes already-seen vertices from
+the *result list* (and from the radius ``r``) while still allowing
+navigation through them — exactly the browsing protocol the paper
+describes.
 """
 from __future__ import annotations
 
@@ -29,11 +31,11 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .distances import get_metric
+from . import beam
+from .beam import neighbor_distances_jnp as _neighbor_distances_jnp  # noqa: F401  (re-export)
 from .graph import DEGraph, INVALID
 
 Array = jax.Array
-_INF = jnp.inf
 
 
 @jax.tree_util.register_dataclass
@@ -45,23 +47,10 @@ class SearchResult:
     evals: Array    # (B,) int32 — number of distance evaluations (|C| analogue)
 
 
-def _neighbor_distances_jnp(vectors, queries, nbr_ids, metric_name):
-    metric = get_metric(metric_name)
-    nvecs = vectors[nbr_ids]                       # (B, d, m)
-    return metric.pair(queries[:, None, :], nvecs)  # (B, d)
-
-
-def _neighbor_distances(vectors, queries, nbr_ids, metric_name, backend):
-    if backend == "pallas" and metric_name == "l2":
-        from repro.kernels.gather_dist import ops as gd_ops
-
-        return gd_ops.gather_dist(vectors, nbr_ids, queries)
-    return _neighbor_distances_jnp(vectors, queries, nbr_ids, metric_name)
-
-
 @functools.partial(
     jax.jit,
-    static_argnames=("k", "beam_width", "max_hops", "metric", "backend"),
+    static_argnames=("k", "beam_width", "max_hops", "metric", "backend",
+                     "merge_backend"),
 )
 def range_search(
     graph: DEGraph,
@@ -76,6 +65,7 @@ def range_search(
     metric: str = "l2",
     exclude: Optional[Array] = None,
     backend: str = "jnp",
+    merge_backend: str = "jnp",
 ) -> SearchResult:
     """Approximate k-NN for a batch of queries.
 
@@ -90,129 +80,36 @@ def range_search(
       max_hops: safety bound on loop iterations (0 -> auto).
       exclude: optional (B, X) int32 vertices excluded from results (still
         traversable) — the exploration protocol.
+      backend: distance backend ("jnp" | "pallas" fused gather_dist).
+      merge_backend: per-hop beam merge ("jnp" bitonic | "pallas" kernel |
+        "argsort" seed semantics) — all bit-identical.
     """
-    B, m = queries.shape
-    d = graph.degree
-    L = beam_width if beam_width is not None else max(k + d, 2 * k)
+    n_ex = exclude.shape[1] if exclude is not None else 0
+    L = (beam_width if beam_width is not None
+         else beam.default_beam_width(k, graph.degree, seed_ids.shape[1],
+                                      n_ex))
     L = max(L, k, seed_ids.shape[1])
     if exclude is not None:
-        L = max(L, k + exclude.shape[1])
+        L = max(L, k + n_ex)
     if max_hops <= 0:
-        max_hops = 4 * L + 64
-    metric_obj = get_metric(metric)
-    eps1 = jnp.float32(1.0 + eps)
+        max_hops = beam.default_max_hops(L)
 
-    n_valid = graph.n
-    adjacency = graph.adjacency
-
-    if exclude is None:
-        exclude = jnp.full((B, 1), INVALID, dtype=jnp.int32)
-
-    # ---- initial beam from seeds ----------------------------------------
-    seed_valid = (seed_ids != INVALID) & (seed_ids < n_valid)
-    # dedup seeds within each lane (keep first occurrence)
-    first_pos = jnp.argmax(seed_ids[:, :, None] == seed_ids[:, None, :], axis=2)
-    seed_valid &= first_pos == jnp.arange(seed_ids.shape[1])[None, :]
-    safe_seeds = jnp.where(seed_valid, seed_ids, 0)
-    seed_d = metric_obj.pair(queries[:, None, :], vectors[safe_seeds])
-    seed_d = jnp.where(seed_valid, seed_d, _INF)
-    seed_ids_m = jnp.where(seed_valid, seed_ids, INVALID)
-
-    pad = L - seed_ids.shape[1]
-    beam_ids = jnp.concatenate(
-        [seed_ids_m, jnp.full((B, pad), INVALID, jnp.int32)], axis=1)
-    beam_dists = jnp.concatenate([seed_d, jnp.full((B, pad), _INF)], axis=1)
-    beam_checked = beam_ids == INVALID  # invalid slots never selected
-    beam_excl = _in_set(beam_ids, exclude)
-
-    order = jnp.argsort(beam_dists, axis=1)
-    beam_ids = jnp.take_along_axis(beam_ids, order, axis=1)
-    beam_dists = jnp.take_along_axis(beam_dists, order, axis=1)
-    beam_checked = jnp.take_along_axis(beam_checked, order, axis=1)
-    beam_excl = jnp.take_along_axis(beam_excl, order, axis=1)
-
-    evals = seed_valid.sum(axis=1).astype(jnp.int32)
-    hops = jnp.zeros((B,), jnp.int32)
-
-    def radius(ids, dists, excl):
-        """k-th best non-excluded distance (inf if fewer than k)."""
-        ok = (ids != INVALID) & ~excl
-        cnt = jnp.cumsum(ok.astype(jnp.int32), axis=1)
-        at_k = ok & (cnt == k)
-        has_k = at_k.any(axis=1)
-        kth = jnp.where(at_k, dists, _INF).min(axis=1)
-        return jnp.where(has_k, kth, _INF)
-
-    def cond(state):
-        _, _, _, _, _, _, it, alive = state
-        return alive & (it < max_hops)
-
-    def body(state):
-        b_ids, b_dists, b_chk, b_exc, hops, evals, it, _ = state
-        r = radius(b_ids, b_dists, b_exc)
-        cur = jnp.argmax(~b_chk, axis=1)                    # first unchecked
-        lane = jnp.arange(B)
-        cur_id = b_ids[lane, cur]
-        cur_d = b_dists[lane, cur]
-        active = (~b_chk.all(axis=1)) & (cur_d <= r * eps1) & (cur_id != INVALID)
-
-        b_chk = b_chk.at[lane, cur].set(jnp.where(active, True, b_chk[lane, cur]))
-
-        nbrs = adjacency[jnp.where(active, cur_id, 0)]       # (B, d)
-        ok = active[:, None] & (nbrs != INVALID) & (nbrs < n_valid)
-        ok &= ~(nbrs[:, :, None] == b_ids[:, None, :]).any(axis=2)  # dedup
-        safe = jnp.where(ok, nbrs, 0)
-        nd = _neighbor_distances(vectors, queries, safe, metric, backend)
-        nd = jnp.where(ok, nd, _INF)
-        keep = ok & (nd <= r[:, None] * eps1)                # Alg.1 line 12
-        cand_ids = jnp.where(keep, nbrs, INVALID)
-        cand_d = jnp.where(keep, nd, _INF)
-        cand_exc = _in_set(cand_ids, exclude) & keep
-
-        evals = evals + ok.sum(axis=1).astype(jnp.int32)
-        hops = hops + active.astype(jnp.int32)
-
-        all_ids = jnp.concatenate([b_ids, cand_ids], axis=1)
-        all_d = jnp.concatenate([b_dists, cand_d], axis=1)
-        all_chk = jnp.concatenate([b_chk, jnp.zeros_like(keep)], axis=1)
-        all_exc = jnp.concatenate([b_exc, cand_exc], axis=1)
-        order = jnp.argsort(all_d, axis=1)[:, :L]
-        b_ids = jnp.take_along_axis(all_ids, order, axis=1)
-        b_dists = jnp.take_along_axis(all_d, order, axis=1)
-        b_chk = jnp.take_along_axis(all_chk, order, axis=1)
-        b_exc = jnp.take_along_axis(all_exc, order, axis=1)
-        b_chk = jnp.where(b_ids == INVALID, True, b_chk)
-
-        # lane is alive if its closest unchecked entry is within the radius
-        r2 = radius(b_ids, b_dists, b_exc)
-        nxt = jnp.argmax(~b_chk, axis=1)
-        nxt_d = b_dists[lane, nxt]
-        lane_alive = (~b_chk.all(axis=1)) & (nxt_d <= r2 * eps1)
-        return (b_ids, b_dists, b_chk, b_exc, hops, evals, it + 1,
-                lane_alive.any())
-
-    state = (beam_ids, beam_dists, beam_checked, beam_excl, hops, evals,
-             jnp.int32(0), jnp.asarray(True))
-    b_ids, b_dists, b_chk, b_exc, hops, evals, _, _ = jax.lax.while_loop(
-        cond, body, state)
-
-    # ---- extract top-k, skipping excluded --------------------------------
-    final_d = jnp.where(b_exc | (b_ids == INVALID), _INF, b_dists)
-    order = jnp.argsort(final_d, axis=1)[:, :k]
-    out_ids = jnp.take_along_axis(b_ids, order, axis=1)
-    out_d = jnp.take_along_axis(final_d, order, axis=1)
-    out_ids = jnp.where(jnp.isinf(out_d), INVALID, out_ids)
-    return SearchResult(ids=out_ids, dists=out_d, hops=hops, evals=evals)
-
-
-def _in_set(ids: Array, excl: Array) -> Array:
-    """ids (B, L), excl (B, X) -> bool (B, L) membership (INVALID never member)."""
-    hit = (ids[:, :, None] == excl[:, None, :]).any(axis=2)
-    return hit & (ids != INVALID)
+    state = beam.beam_search(
+        graph, vectors, queries, seed_ids, k=k, eps=eps, beam_width=L,
+        max_hops=max_hops, metric=metric, exclude=exclude, backend=backend,
+        merge_backend=merge_backend)
+    out_ids, out_d = beam.extract(state, k)
+    return SearchResult(ids=out_ids, dists=out_d, hops=state.hops,
+                        evals=state.evals)
 
 
 def medoid_seed(vectors: Array, n: int) -> int:
-    """Approximate median vertex (paper Sec. 5.4 uses it as the search seed)."""
+    """Approximate median vertex (paper Sec. 5.4 uses it as the search seed).
+
+    One device reduction per call — ``DEGIndex`` caches the result and
+    invalidates it on vector mutation (add/remove), so hot query paths
+    do not pay this repeatedly.
+    """
     mean = jnp.mean(vectors[:n], axis=0, keepdims=True)
     d = jnp.linalg.norm(vectors[:n] - mean, axis=1)
     return int(jnp.argmin(d))

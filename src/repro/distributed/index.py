@@ -24,13 +24,13 @@ from typing import Callable, Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import set_mesh, shard_map
+
+from repro.core import beam
 from repro.core.build import DEGIndex, DEGParams
 from repro.core.graph import INVALID
-from repro.core.search import medoid_seed, range_search
-
 from .collectives import topk_merge_allgather
 
 Array = jax.Array
@@ -70,12 +70,19 @@ def make_sharded_search(mesh: Mesh, *, k: int, eps: float = 0.1,
                 [local_rows[:, :1],
                  jnp.broadcast_to(seed[0], (B, 1)).astype(jnp.int32)], axis=1)
             excl_local = local_rows
-        res = range_search(g, vecs, queries, seeds, k=k, eps=eps,
-                           beam_width=beam_width, metric=metric,
-                           exclude=excl_local)
-        gids = jnp.where(res.ids == INVALID, INVALID,
-                         res.ids * n_shards + shard)
-        dists, ids = topk_merge_allgather(res.dists, gids, k, shard_axis)
+        # shard-local beam engine program (same primitives as range_search,
+        # embedded directly in the shard_map body)
+        n_ex = excl_local.shape[1] if excl_local is not None else 0
+        L = (beam_width if beam_width is not None
+             else beam.default_beam_width(k, g.degree, seeds.shape[1], n_ex))
+        L = max(L, k, seeds.shape[1], k + n_ex)
+        state = beam.beam_search(
+            g, vecs, queries, seeds, k=k, eps=eps, beam_width=L,
+            max_hops=beam.default_max_hops(L), metric=metric,
+            exclude=excl_local)
+        lids, ldists = beam.extract(state, k)
+        gids = jnp.where(lids == INVALID, INVALID, lids * n_shards + shard)
+        dists, ids = topk_merge_allgather(ldists, gids, k, shard_axis)
         return ids, dists
 
     bspec = P(batch_axes, None)
@@ -131,7 +138,7 @@ class ShardedDEG:
         f = make_sharded_search(mesh, k=k, eps=eps,
                                 metric=self.params.metric,
                                 batch_axes=batch_axes)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             ids, dists = jax.jit(f)(self.adjacency, self.vectors, self.n,
                                     self.seeds, jnp.asarray(queries))
         return np.asarray(ids), np.asarray(dists)
@@ -171,7 +178,7 @@ def build_sharded_deg(vectors: np.ndarray, n_shards: int,
         adj[s, : sh.n] = sh.builder.adjacency[: sh.n]
         vecs[s, : sh.n] = sh.vectors[: sh.n]
         n_arr[s] = sh.n
-        seeds[s] = medoid_seed(jnp.asarray(sh.vectors), sh.n)
+        seeds[s] = sh.medoid()       # cached per-shard medoid entry
     return ShardedDEG(shards=shards, adjacency=jnp.asarray(adj),
                       vectors=jnp.asarray(vecs), n=jnp.asarray(n_arr),
                       seeds=jnp.asarray(seeds), params=params)

@@ -15,5 +15,9 @@ Kernels:
                     the `retrieval_cand` scorer for the recsys archs);
 * ``gather_dist`` — scalar-prefetched neighbor-row gather fused with the
                     per-hop distance computation of the graph search;
+* ``beam_merge``  — fused bitonic partial merge folding the per-hop scored
+                    candidates into the sorted search beam (bit-identical
+                    to a stable argsort of the concatenation; the beam
+                    engine's per-hop workhorse — see core/beam.py);
 * ``bag_lookup``  — embedding-bag gather-reduce (recsys embedding tables).
 """

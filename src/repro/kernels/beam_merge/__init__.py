@@ -1,0 +1,6 @@
+from .beam_merge import beam_merge_pallas, merge_beam_candidates
+from .ops import beam_merge
+from .ref import beam_merge_ref
+
+__all__ = ["beam_merge", "beam_merge_pallas", "beam_merge_ref",
+           "merge_beam_candidates"]

@@ -1,0 +1,75 @@
+"""Public dispatch for the fused beam merge.
+
+Backends (all bit-identical outputs — see beam_merge.py for why):
+
+* ``"jnp"``     — the bitonic partial-merge network inlined as plain XLA
+                  ops; the default inside the jitted search loop off-TPU.
+* ``"pallas"``  — the Pallas kernel (interpret mode off-TPU).
+* ``"argsort"`` — the seed stable-argsort merge (oracle; also the baseline
+                  the ``beam_merge`` microbenchmark compares against).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .beam_merge import beam_merge_pallas, merge_beam_candidates
+from .ref import beam_merge_ref
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(v: int, mult: int) -> int:
+    return (v + mult - 1) // mult * mult
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "tb", "interpret"))
+def beam_merge(beam_dists, beam_ids, beam_chk, beam_exc,
+               cand_dists, cand_ids, cand_exc, *, cand_chk=None,
+               backend: str = "jnp", tb: int = 8,
+               interpret: bool | None = None):
+    """Merge ``d`` candidates into the sorted width-``L`` beam.
+
+    beam_* : (B, L) — dists f32 ascending (stable order), ids i32,
+             checked/excluded bool.
+    cand_* : (B, d) — masked lanes carry dist=+inf / id=INVALID.
+    ``cand_chk`` is keyword-only (defaults to all-False — fresh candidates
+    are unexpanded) so the 7-positional-arg surface cannot be confused
+    with the 8-positional (…, cand_chk, cand_exc) channel order of
+    ``beam_merge_ref`` / ``beam_merge_pallas``.
+    Returns (dists, ids, checked, excluded), each (B, L): the first L
+    entries of the stable sort of ``[beam | candidates]``.
+    """
+    if cand_chk is None:
+        cand_chk = jnp.zeros_like(cand_ids, dtype=bool)
+    if backend == "argsort":
+        return beam_merge_ref(beam_dists, beam_ids, beam_chk, beam_exc,
+                              cand_dists, cand_ids, cand_chk, cand_exc)
+    if backend == "jnp":
+        d, ids, chk, exc = merge_beam_candidates(
+            beam_dists, (beam_ids, beam_chk, beam_exc),
+            cand_dists, (cand_ids, cand_chk, cand_exc))
+        return d, ids, chk, exc
+    if backend != "pallas":
+        raise ValueError(f"unknown beam_merge backend {backend!r}")
+    if interpret is None:
+        interpret = _default_interpret()
+    B, L = beam_dists.shape
+    pad_b = _round_up(max(B, 1), tb) - B
+
+    def pad(x, fill):
+        return jnp.pad(x, ((0, pad_b), (0, 0)), constant_values=fill)
+
+    i32 = jnp.int32
+    out = beam_merge_pallas(
+        pad(beam_dists, jnp.inf), pad(beam_ids, 0),
+        pad(beam_chk.astype(i32), 0), pad(beam_exc.astype(i32), 0),
+        pad(cand_dists, jnp.inf), pad(cand_ids, 0),
+        pad(cand_chk.astype(i32), 0), pad(cand_exc.astype(i32), 0),
+        tb=tb, interpret=interpret)
+    d, ids, chk, exc = out
+    return (d[:B], ids[:B], chk[:B].astype(bool), exc[:B].astype(bool))

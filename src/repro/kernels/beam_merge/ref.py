@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the fused beam merge: the seed implementation's
+stable argsort over the ``[beam | candidates]`` concatenation."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def beam_merge_ref(beam_dists, beam_ids, beam_chk, beam_exc,
+                   cand_dists, cand_ids, cand_chk, cand_exc):
+    """(B, L) sorted beam + (B, d) candidates -> merged (B, L) 4-tuple.
+
+    Returns (dists, ids, checked, excluded) — the first L entries of the
+    stable sort of the concatenation, i.e. ties keep beam-before-candidate
+    and original-lane order.  This IS the pre-beam-engine merge, kept as the
+    golden semantics every other backend must reproduce bit-exactly.
+    """
+    L = beam_dists.shape[-1]
+    all_d = jnp.concatenate([beam_dists, cand_dists], axis=-1)
+    order = jnp.argsort(all_d, axis=-1)[..., :L]
+
+    def take(b, c):
+        return jnp.take_along_axis(jnp.concatenate([b, c], -1), order, -1)
+
+    return (jnp.take_along_axis(all_d, order, -1),
+            take(beam_ids, cand_ids),
+            take(beam_chk, cand_chk),
+            take(beam_exc, cand_exc))

@@ -70,7 +70,9 @@ class CellProgram:
             donate_argnums=self.donate)
 
     def lower(self, mesh: Mesh):
-        with jax.set_mesh(mesh):
+        from repro.compat import set_mesh
+
+        with set_mesh(mesh):
             return self.jitted(mesh).lower(*self.args)
 
 

@@ -83,7 +83,7 @@ def main() -> None:
     print(f"served {len(futs)} queries in {wall:.2f}s "
           f"({engine.stats.qps:.0f} qps device-time), recall@{args.k}={rec:.4f}, "
           f"{engine.stats.inserts} inserts, "
-          f"{engine.stats.refine_iterations} refine iterations")
+          f"{engine.stats.refine_iterations} refine edge improvements")
 
     # exploration sessions (paper §6.7): 4 hops each, no repeats
     for s in range(args.explore_sessions):

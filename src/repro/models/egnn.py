@@ -183,8 +183,9 @@ def make_sharded_loss(cfg: EGNNConfig, mesh, shard_axes) -> "Callable":
     """
     import functools as _ft
 
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
 
     axes = tuple(shard_axes)
 

@@ -32,7 +32,7 @@ class EngineStats:
     flushes: int = 0
     queries: int = 0
     inserts: int = 0
-    refine_iterations: int = 0
+    refine_iterations: int = 0   # improved EDGES (refine's return unit)
     total_search_s: float = 0.0
 
     @property
@@ -43,7 +43,7 @@ class EngineStats:
 class QueryEngine:
     def __init__(self, index: DEGIndex, *, k: int = 10, eps: float = 0.1,
                  max_batch: int = 64, refine_budget: int = 0,
-                 beam_width: Optional[int] = None):
+                 beam_width: Optional[int] = None, exclude_width: int = 8):
         self.index = index
         self.k, self.eps, self.beam_width = k, eps, beam_width
         self.max_batch = max_batch
@@ -51,6 +51,11 @@ class QueryEngine:
         self.stats = EngineStats()
         self._pending: list = []          # (query_vec, exclude_ids, future)
         self._sessions: dict[str, set] = {}
+        # minimum exclude-lane width: per-flush widths are bucketed to
+        # powers of two above this floor, so flushes with comparable
+        # session history reuse the same jitted program (bounded entries)
+        # without one long session permanently widening every later flush.
+        self._exclude_width = max(1, exclude_width)
 
     # -- request paths ----------------------------------------------------
     def submit(self, query: np.ndarray, session: Optional[str] = None,
@@ -101,6 +106,16 @@ class QueryEngine:
 
     # -- the device call ---------------------------------------------------
     def flush(self) -> int:
+        """One fixed-shape beam-engine call for the whole pending batch.
+
+        Seed and exclude lanes go straight into ``DEGIndex.search_batch``:
+        plain queries get the cached medoid seed, exploration queries their
+        seed vertex plus session history.  A flush with no exclusions at
+        all passes ``exclude=None`` (identical program to ``index.search``,
+        configured beam_width honored); otherwise the exclude width is the
+        batch's need bucketed to a power of two, so widths — and the beam
+        widening ``L >= k + X`` that comes with them — never outlive the
+        sessions that required them."""
         if not self._pending:
             return 0
         batch = self._pending[: self.max_batch]
@@ -108,24 +123,28 @@ class QueryEngine:
         B = len(batch)
         pad = self.max_batch - B           # fixed shape -> one jit entry
         qs = np.stack([b[0] for b in batch] + [batch[0][0]] * pad)
-        is_explore = any(b[4] is not None for b in batch)
-        t0 = time.time()
-        if not is_explore:
-            res = self.index.search(qs, k=self.k, eps=self.eps,
-                                    beam_width=self.beam_width)
-            ids, dists = np.asarray(res.ids), np.asarray(res.dists)
+        max_ex = max((len(b[1]) + (b[4] is not None) for b in batch),
+                     default=0)
+        seeds = np.full((self.max_batch, 1), self.index.medoid(), np.int32)
+        if max_ex == 0:
+            excl = None
         else:
-            xw = max(max((len(b[1]) for b in batch), default=0), 1)
+            xw = self._exclude_width
+            while xw < max_ex:
+                xw *= 2
             excl = np.full((self.max_batch, xw), INVALID, np.int32)
-            seeds = []
-            for i, (_, ex, _, _, sv) in enumerate(batch):
+        for i, (_, ex, _, _, sv) in enumerate(batch):
+            if sv is not None:
+                seeds[i, 0] = sv
+                excl[i, 0] = sv            # the seed never reappears
+                excl[i, 1 : len(ex) + 1] = ex
+            elif ex:
                 excl[i, : len(ex)] = ex
-                seeds.append(sv if sv is not None else 0)
-            seeds += [0] * pad
-            res = self.index.explore(seeds, k=self.k, eps=self.eps,
-                                     exclude=excl,
-                                     beam_width=self.beam_width)
-            ids, dists = np.asarray(res.ids), np.asarray(res.dists)
+        t0 = time.time()
+        res = self.index.search_batch(qs, seeds, excl, k=self.k,
+                                      eps=self.eps,
+                                      beam_width=self.beam_width)
+        ids, dists = np.asarray(res.ids), np.asarray(res.dists)
         self.stats.total_search_s += time.time() - t0
         self.stats.flushes += 1
         self.stats.queries += B
@@ -135,7 +154,8 @@ class QueryEngine:
             if session:
                 self._sessions.setdefault(session, set()).update(
                     int(x) for x in ids[i] if x != INVALID)
-        # continuous refinement between flushes (the paper's core idea)
+        # continuous refinement between flushes (the paper's core idea);
+        # refine() counts improved EDGES (can exceed the vertex budget)
         if self.refine_budget:
             self.stats.refine_iterations += self.index.refine(
                 self.refine_budget, seed=self.stats.flushes)

@@ -1,0 +1,79 @@
+"""Test-session shims.
+
+``hypothesis`` is not available in every execution image; the property
+tests only use a tiny slice of its API (``given`` / ``settings`` /
+``strategies.integers|floats|sampled_from``), so when the real library is
+missing we install a deterministic mini-implementation that draws a fixed
+number of pseudo-random examples per test.  With the real library on the
+path this file is a no-op.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+import sys
+import types
+
+
+def _install_hypothesis_stub() -> None:
+    mod = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    def integers(min_value, max_value):
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    def floats(min_value, max_value):
+        return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+    def sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda r: r.choice(seq))
+
+    st.integers, st.floats, st.sampled_from = integers, floats, sampled_from
+
+    def given(**strategies):
+        def deco(fn):
+            # pytest must only see the non-drawn params (they are fixtures);
+            # build a wrapper whose signature is the original's minus the
+            # strategy-provided names.
+            fixture_names = [p for p in inspect.signature(fn).parameters
+                             if p not in strategies]
+
+            def wrapper(**fixtures):
+                n = getattr(wrapper, "_max_examples", 20)
+                rng = random.Random(0)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(**fixtures, **drawn)
+
+            wrapper.__signature__ = inspect.Signature(
+                [inspect.Parameter(p, inspect.Parameter.POSITIONAL_OR_KEYWORD)
+                 for p in fixture_names])
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return deco
+
+    def settings(max_examples=20, deadline=None, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    mod.given, mod.settings, mod.strategies = given, settings, st
+    mod.__stub__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st
+
+
+try:  # pragma: no cover - depends on the execution image
+    import hypothesis  # noqa: F401
+except ImportError:  # pragma: no cover
+    _install_hypothesis_stub()

@@ -83,8 +83,9 @@ def test_collective_bytes_counted():
         import pytest
 
         pytest.skip("needs >=2 devices")
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.compat import set_mesh, shard_map
 
     mesh = jax.make_mesh((jax.device_count(),), ("x",))
     x = jnp.ones((jax.device_count() * 4, 8), jnp.float32)
@@ -94,7 +95,7 @@ def test_collective_bytes_counted():
 
     g = shard_map(f, mesh=mesh, in_specs=P("x", None),
                   out_specs=P("x", None), check_vma=False)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         text = jax.jit(g).lower(x).compile().as_text()
     cost = analyze_text(text)
     assert cost["collective_bytes"] > 0

@@ -1,0 +1,105 @@
+"""beam_merge kernel: every backend must be BIT-identical to the stable
+argsort oracle (ties break beam-before-candidate, then lane order — the
+property the golden search test depends on)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.graph import INVALID
+from repro.kernels.beam_merge import beam_merge, beam_merge_ref
+
+
+def _case(rng, B, L, d, inf_beam=0.2, inf_cand=0.3, ties=True):
+    bd = np.sort(rng.normal(size=(B, L)).astype(np.float32), axis=1)
+    n_inf = int(L * inf_beam)
+    if n_inf:
+        bd[:, L - n_inf:] = np.inf
+    bi = rng.integers(0, 4 * L, size=(B, L)).astype(np.int32)
+    bi[np.isinf(bd)] = INVALID
+    bc = rng.random((B, L)) < 0.5
+    bx = rng.random((B, L)) < 0.25
+    cd = rng.normal(size=(B, d)).astype(np.float32)
+    cd[rng.random((B, d)) < inf_cand] = np.inf
+    ci = rng.integers(0, 4 * L, size=(B, d)).astype(np.int32)
+    ci[np.isinf(cd)] = INVALID
+    cx = rng.random((B, d)) < 0.25
+    if ties and L >= 2 and d >= 2:
+        cd[:, 0] = bd[:, 1]          # exact beam<->candidate tie
+        cd[:, -1] = cd[:, 0]         # candidate<->candidate tie
+    return tuple(jnp.asarray(x)
+                 for x in (bd, bi, bc, bx, cd, ci, cx))
+
+
+def _assert_identical(args, backend):
+    got = beam_merge(*args, backend=backend)
+    ref = beam_merge(*args, backend="argsort")
+    for g, r, name in zip(got, ref, ("dists", "ids", "checked", "excluded")):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(r),
+                                      err_msg=f"{backend}:{name}")
+
+
+@pytest.mark.parametrize("B,L,d", [
+    (4, 16, 8),     # aligned
+    (3, 7, 5),      # odd everything
+    (1, 5, 11),     # more candidates than beam
+    (2, 33, 3),     # odd L just past a power of two
+    (5, 12, 12),    # L == pow2 boundary after padding
+    (8, 30, 20),    # DEG degree 20, default beam
+])
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_merge_matches_argsort(B, L, d, backend):
+    rng = np.random.default_rng(B * 100 + L * 10 + d)
+    _assert_identical(_case(rng, B, L, d), backend)
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_merge_invalid_padding(backend):
+    """INVALID-id lanes (inf dist) must stay exactly where the stable sort
+    puts them — beam pads before candidate pads."""
+    rng = np.random.default_rng(0)
+    args = _case(rng, 3, 9, 6, inf_beam=0.6, inf_cand=0.7)
+    _assert_identical(args, backend)
+    # and ids of inf entries are INVALID in all backends
+    d_, ids, _, _ = beam_merge(*args, backend=backend)
+    assert (np.asarray(ids)[np.isinf(np.asarray(d_))] == INVALID).all()
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_merge_all_inf_lanes(backend):
+    """Degenerate: every candidate masked, beam all inf — nothing moves."""
+    rng = np.random.default_rng(1)
+    bd, bi, bc, bx, cd, ci, cx = _case(rng, 2, 8, 4)
+    cd = jnp.full_like(cd, jnp.inf)
+    ci = jnp.full_like(ci, INVALID)
+    got = beam_merge(bd, bi, bc, bx, cd, ci, cx, backend=backend)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(bd))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(bi))
+
+
+def test_merge_property_sweep():
+    """Random odd shapes, heavy inf density, both backends, one seed per
+    shape — the cheap exhaustive guard."""
+    rng = np.random.default_rng(42)
+    for _ in range(25):
+        B = int(rng.integers(1, 6))
+        L = int(rng.integers(2, 40))
+        d = int(rng.integers(1, 25))
+        args = _case(rng, B, L, d,
+                     inf_beam=float(rng.random() * 0.8),
+                     inf_cand=float(rng.random()))
+        _assert_identical(args, "jnp")
+    # pallas path on a couple of them only (interpret mode is slow)
+    for _ in range(3):
+        B = int(rng.integers(1, 4))
+        L = int(rng.integers(2, 20))
+        d = int(rng.integers(1, 12))
+        _assert_identical(_case(rng, B, L, d), "pallas")
+
+
+def test_merge_keeps_sorted_invariant():
+    rng = np.random.default_rng(7)
+    args = _case(rng, 4, 21, 9)
+    d_, ids, chk, exc = beam_merge(*args, backend="jnp")
+    d_np = np.asarray(d_)
+    fin = np.where(np.isinf(d_np), np.float32(3e38), d_np)
+    assert (np.diff(fin, axis=1) >= 0).all()

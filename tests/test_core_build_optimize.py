@@ -149,3 +149,24 @@ def test_duplicate_points_build(data):
     pts = np.concatenate([base[:50], base[:20]], axis=0)
     idx = build_deg(pts, _params(degree=6, k_ext=12, k_opt=6), wave_size=8)
     inv.assert_valid_deg(idx.builder, context="duplicates")
+
+
+def test_batched_refine_sweep_improves_edges(data):
+    """The batched Alg. 5 candidate-search path (one device call per chunk
+    of edge tasks) must improve >= 1 edge per sweep on a synthetic corpus
+    and keep every DEG invariant."""
+    from repro.core.metrics import average_neighbor_distance
+    from repro.core.optimize import refine_sweep
+
+    base, _ = data
+    idx = random_regular_index(base[:200], _params(), seed=4)
+    nd0 = average_neighbor_distance(idx.builder)
+    improved = refine_sweep(idx, list(range(48)),
+                            i_opt=idx.params.i_opt, k_opt=idx.params.k_opt,
+                            eps_opt=idx.params.eps_opt)
+    assert improved >= 1
+    inv.assert_valid_deg(idx.builder, context="after batched refine_sweep")
+    assert average_neighbor_distance(idx.builder) < nd0
+    # DEGIndex.refine routes through the same batched path
+    assert idx.refine(32, seed=0) >= 1
+    inv.assert_valid_deg(idx.builder, context="after DEGIndex.refine")

@@ -126,3 +126,45 @@ def test_search_shapes_property(small_index, k, eps, b):
     assert np.asarray(res.dists).shape == (b, k)
     d = np.asarray(res.dists)
     assert not np.isnan(d).any()
+
+
+def test_exploration_excluded_traversed_not_returned(small_index):
+    """Exploration protocol (paper Sec. 6.7): excluded vertices must never
+    appear in results, yet navigation still passes THROUGH them — excluding
+    the seed's entire neighborhood must not wall off the rest of the graph."""
+    base, _, idx = small_index
+    v = 17
+    ring = [int(u) for u in idx.builder.neighbors(v)]     # all d neighbors
+    excl = np.asarray([[v] + ring], np.int32)
+    res = idx.search_batch(base[v][None], np.asarray([[v]], np.int32), excl,
+                           k=8, eps=0.2)
+    ids = [int(x) for x in np.asarray(res.ids)[0] if x != INVALID]
+    banned = set([v] + ring)
+    assert ids, "exploration returned nothing"
+    assert not (set(ids) & banned)        # never in results ...
+    # ... but traversal went through the ring: every returned vertex is
+    # outside the seed's immediate neighborhood, i.e. >= 2 hops away, and
+    # the lane did expand vertices
+    assert int(np.asarray(res.hops)[0]) >= 2
+    # the results must be *good* despite the exclusion: close to the
+    # exact nearest non-banned vertices
+    d = np.linalg.norm(base[: idx.n] - base[v], axis=1)
+    d[list(banned)] = np.inf
+    best = float(np.sort(d)[0])
+    assert float(np.asarray(res.dists)[0, 0]) <= best * 1.5
+
+
+def test_medoid_seed_cached_and_invalidated(small_index):
+    """DEGIndex caches the medoid entry vertex and recomputes only after
+    the vector set changes (satellite: no device reduction per query)."""
+    base, _, idx = small_index
+    m0 = idx.medoid()
+    assert idx._medoid is not None
+    assert idx.medoid() == m0            # cache hit, same value
+    # mutation invalidates
+    rng = np.random.default_rng(0)
+    idx.add(rng.normal(size=(4, base.shape[1])).astype(np.float32),
+            wave_size=4)
+    assert idx._medoid is None
+    m1 = idx.medoid()
+    assert 0 <= m1 < idx.n

@@ -25,6 +25,7 @@ if jax.device_count() < 8:
 
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
+from repro.compat import set_mesh  # noqa: E402
 from repro.core.build import DEGParams  # noqa: E402
 from repro.distributed.collectives import (  # noqa: E402
     compressed_psum, int8_compress, int8_decompress, make_sharded_lookup,
@@ -48,7 +49,7 @@ def test_sharded_lookup_matches_gather(mesh):
     table = jnp.asarray(rng.normal(size=(64, 8)).astype(np.float32))
     ids = jnp.asarray(rng.integers(0, 64, size=(10, 5)).astype(np.int32))
     lookup = make_sharded_lookup(mesh)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         out = jax.jit(lookup)(table, ids)
     np.testing.assert_allclose(np.asarray(out),
                                np.asarray(table)[np.asarray(ids)], rtol=1e-6)
@@ -60,7 +61,7 @@ def test_sharded_brute_topk_exact(mesh):
     db = jnp.asarray(rng.normal(size=(80, 12)).astype(np.float32))
     f = sharded_brute_topk(mesh, k=7, shard_axes=("data", "model"),
                            metric="l2")
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         vals, ids = jax.jit(f)(q, db)
     d2 = ((np.asarray(q)[:, None] - np.asarray(db)[None]) ** 2).sum(-1)
     gt = np.argsort(d2, axis=1)[:, :7]
@@ -77,7 +78,7 @@ def test_int8_compression_roundtrip():
 
 
 def test_compressed_psum_approximates_sum(mesh):
-    from jax import shard_map
+    from repro.compat import shard_map
 
     n_dev = 4                       # the 2x2 debug mesh
     rng = np.random.default_rng(3)
@@ -88,7 +89,7 @@ def test_compressed_psum_approximates_sum(mesh):
 
     g = shard_map(f, mesh=mesh, in_specs=P(("data", "model"), None),
                   out_specs=P(("data", "model"), None), check_vma=False)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         out = jax.jit(g)(x)     # one row per device -> psum = column sums
     want = np.broadcast_to(np.asarray(x).sum(0, keepdims=True),
                            (n_dev, 32))
@@ -147,7 +148,7 @@ def test_lm_sharded_train_step_runs(mesh):
         return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
                             is_leaf=lambda x: isinstance(x, P))
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         jstep = jax.jit(step, in_shardings=(shard(pspec), shard(ospec),
                                             shard(bspec)),
                         out_shardings=((shard(pspec), shard(ospec)),
