@@ -58,6 +58,25 @@ def run(seed: int = 0) -> dict:
          arith_intensity=2 * d * m / tile_bytes, fits_vmem=True)
     out["gather_dist"] = ok
 
+    # --- gather_dist_q: int8 gather + VMEM dequant + distance --------------
+    from repro.kernels.gather_dist_q import ops as gdq_ops
+    from repro.kernels.gather_dist_q import ref as gdq_ref
+    from repro.quant import make_store
+
+    store = make_store(db, "sq8")
+    got = gdq_ops.gather_dist_q(store.data, store.scale, jnp.asarray(nbr),
+                                jnp.asarray(qs[:B]))
+    want = gdq_ref.gather_dist_q_ref(store.data, store.scale,
+                                     jnp.asarray(nbr), jnp.asarray(qs[:B]))
+    ok = bool(np.allclose(np.asarray(got), np.asarray(want), atol=1e-3))
+    tile_bytes = d * m * 1 + m * 4 + m * 4 + d * 4  # int8 rows+scale+q+out
+    float_bytes = (d * m + m + d) * 4               # the gather_dist tile
+    emit("kernel_gather_dist_q", allclose=ok, block_q=1, block_n=d,
+         tile_bytes=tile_bytes, tile_flops=3 * d * m,
+         arith_intensity=3 * d * m / tile_bytes, fits_vmem=True,
+         gather_bytes_vs_float=float_bytes / tile_bytes)
+    out["gather_dist_q"] = ok
+
     # --- bag_lookup: embedding bag gather-reduce ---------------------------
     from repro.kernels.bag_lookup import ops as bl_ops
     from repro.kernels.bag_lookup import ref as bl_ref

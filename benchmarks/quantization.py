@@ -1,0 +1,65 @@
+"""Quantized-store frontier: recall@10 vs vector-memory-bytes vs QPS.
+
+The serving question behind ISSUE 2: how much of the float32 store's HBM
+footprint can the hot traversal path shed before the two-stage rerank can
+no longer buy the recall back?  For each codec (float32 / fp16 / sq8) and
+several ``rerank_k`` widths this sweeps the ``bench-small`` config and
+emits one row per point: recall@10, QPS (fixed eps), and the traversal
+store's bytes for the live rows (``DEGIndex.memory_stats``).
+
+Acceptance bar tracked here: SQ8 two-stage must sit within 1% recall of
+the float32 single-stage path at >= 3.5x memory reduction.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.deg import DEG_PAPER_CONFIGS
+from repro.core.build import build_deg
+from repro.core.metrics import recall_at_k
+
+from .common import emit, make_bench_dataset, timed_search
+
+
+def run(n: int = 4000, n_query: int = 256, dim: int = 32, k: int = 10,
+        eps: float = 0.1, rerank_ks=(10, 20, 40), seed: int = 0) -> dict:
+    params = DEG_PAPER_CONFIGS["bench-small"]
+    ds = make_bench_dataset("synth-lowlid", n, n_query, dim, "low", k=k,
+                            seed=seed)
+    deg = build_deg(ds.base, params, wave_size=16)
+    deg.refine(200, seed=seed)
+    mem = deg.memory_stats()
+
+    summary: dict = {}
+
+    def measure(name, codec, rerank_k, quantized):
+        res, secs = timed_search(
+            lambda q: deg.search_batch(q, k=k, eps=eps, quantized=quantized,
+                                       rerank_k=rerank_k), ds.queries,
+            repeats=2)
+        rec = recall_at_k(np.asarray(res.ids)[:, :k], ds.gt_ids[:, :k])
+        bytes_ = mem[f"{codec}_bytes"]
+        emit("quantization", dataset=ds.name, codec=codec,
+             rerank_k=rerank_k or 0, recall=rec, qps=n_query / secs,
+             store_bytes=bytes_, mem_ratio=mem[f"{codec}_ratio"],
+             evals=float(np.mean(np.asarray(res.evals))))
+        return rec
+
+    # exact single-stage baseline
+    base_rec = measure("float32", "float32", None, None)
+    summary["float32"] = base_rec
+
+    for codec in ("fp16", "sq8"):
+        best = 0.0
+        for rk in rerank_ks:
+            best = max(best, measure(codec, codec, rk, codec))
+        summary[codec] = best
+        summary[f"{codec}_ratio"] = mem[f"{codec}_ratio"]
+
+    summary["sq8_within_1pct"] = bool(summary["sq8"] >= base_rec - 0.01)
+    summary["sq8_mem_ok"] = bool(mem["sq8_ratio"] >= 3.5)
+    return summary
+
+
+if __name__ == "__main__":
+    print(run())

@@ -23,6 +23,7 @@ SECTIONS = [
     ("appG_neighbor_choice", "neighbor_choice"),
     ("kernels", "kernels"),
     ("kernel_beam_merge", "beam_merge"),
+    ("quantized_store", "quantization"),
     ("roofline", "roofline_report"),
 ]
 
@@ -37,6 +38,7 @@ QUICK_OVERRIDES = {
     "graph_stats": dict(n=1200),
     "neighbor_choice": dict(n=1200, n_query=100),
     "beam_merge": dict(shapes=((64, 64, 20), (64, 128, 32))),
+    "quantization": dict(n=1500, n_query=128, rerank_ks=(10, 20)),
 }
 
 
@@ -68,6 +70,11 @@ def main() -> int:
         except Exception as e:
             failures.append((mod_name, e))
             traceback.print_exc()
+            # a broken section must leave a machine-readable trace in the
+            # CSV, not just a traceback on a terminal nobody scrolls back
+            common.emit("section_failure", section=mod_name,
+                        error=f"{type(e).__name__}: {e}",
+                        seconds=time.time() - t0)
     if args.csv:
         os.makedirs(os.path.dirname(args.csv) or ".", exist_ok=True)
         common.write_csv(args.csv)

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 from .base import ArchSpec, ShapeCell
-from .deg import DEG_PAPER_CONFIGS
+from .deg import DEG_PAPER_CONFIGS, QUANT_PRESETS, QuantPreset
 from .gnn_archs import EGNN
 from .lm_archs import (GEMMA3_12B, GRANITE_3_2B, MIXTRAL_8X22B, PHI3_MINI,
                        QWEN3_MOE)

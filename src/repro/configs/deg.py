@@ -1,6 +1,9 @@
 """DEG hyperparameters from the paper (Table 3) keyed by dataset analogue,
-plus the defaults used by the offline benchmarks."""
+plus the defaults used by the offline benchmarks and the serving-side
+quantized-store presets."""
 from __future__ import annotations
+
+import dataclasses
 
 from repro.core.build import DEGParams
 
@@ -17,4 +20,26 @@ DEG_PAPER_CONFIGS = {
     # CPU-scale default for the offline benchmarks in this container
     "bench-small": DEGParams(degree=16, k_ext=32, eps_ext=0.3, k_opt=16,
                              eps_opt=0.001, i_opt=5),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPreset:
+    """Serving-side store configuration (post-training; orthogonal to the
+    build params above).  ``codec`` is what the beam traverses, ``rerank_k``
+    how many candidates the exact second stage re-scores (0 = auto 4*k,
+    ignored for the exact codec)."""
+
+    codec: str = "float32"
+    rerank_k: int = 0
+
+
+# serving presets: exact baseline, the 2x half-precision store, and two
+# SQ8 points trading rerank width for recall headroom (the
+# benchmarks/quantization.py frontier quantifies the trade on bench-small)
+QUANT_PRESETS = {
+    "exact": QuantPreset(),
+    "fp16": QuantPreset(codec="fp16", rerank_k=20),
+    "sq8-compact": QuantPreset(codec="sq8", rerank_k=20),
+    "sq8-serving": QuantPreset(codec="sq8", rerank_k=40),
 }

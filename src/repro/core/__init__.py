@@ -5,7 +5,8 @@ from .distances import exact_knn, exact_knn_batched, get_metric
 from .graph import DEGraph, GraphBuilder, INVALID, complete_graph
 from .metrics import average_neighbor_distance, graph_quality, recall_at_k
 from .optimize import dynamic_edge_optimization, optimize_edge, refine_sweep
-from .search import SearchResult, medoid_seed, range_search, search_graph
+from .search import (SearchResult, exact_rerank, medoid_seed, range_search,
+                     search_graph)
 
 __all__ = [
     "BeamState", "beam_search",
@@ -14,5 +15,6 @@ __all__ = [
     "DEGraph", "GraphBuilder", "INVALID", "complete_graph",
     "average_neighbor_distance", "graph_quality", "recall_at_k",
     "dynamic_edge_optimization", "optimize_edge", "refine_sweep",
-    "SearchResult", "medoid_seed", "range_search", "search_graph",
+    "SearchResult", "exact_rerank", "medoid_seed", "range_search",
+    "search_graph",
 ]

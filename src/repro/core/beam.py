@@ -34,6 +34,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.quant.store import VectorStore, as_store  # noqa: F401  (re-export)
+
 from .distances import get_metric
 from .graph import DEGraph, INVALID
 
@@ -59,17 +61,16 @@ class BeamState:
 
 
 def neighbor_distances_jnp(vectors, queries, nbr_ids, metric_name):
-    metric = get_metric(metric_name)
-    nvecs = vectors[nbr_ids]                        # (B, d, m)
-    return metric.pair(queries[:, None, :], nvecs)  # (B, d)
+    """jnp gather+pair distance path.  ``vectors`` may be a raw (n, m) array
+    (exact float32 semantics — the pre-store program verbatim) or a
+    :class:`repro.quant.VectorStore` of any codec."""
+    return as_store(vectors).neighbor_distances(queries, nbr_ids, metric_name,
+                                                backend="jnp")
 
 
 def _neighbor_distances(vectors, queries, nbr_ids, metric_name, backend):
-    if backend == "pallas" and metric_name == "l2":
-        from repro.kernels.gather_dist import ops as gd_ops
-
-        return gd_ops.gather_dist(vectors, nbr_ids, queries)
-    return neighbor_distances_jnp(vectors, queries, nbr_ids, metric_name)
+    return as_store(vectors).neighbor_distances(queries, nbr_ids, metric_name,
+                                                backend=backend)
 
 
 def in_set(ids: Array, excl: Array) -> Array:
@@ -92,11 +93,13 @@ def radius(state: BeamState, k: int) -> Array:
 # ---------------------------------------------------------------------------
 # primitives
 # ---------------------------------------------------------------------------
-def init(vectors: Array, queries: Array, seed_ids: Array, exclude: Array,
-         n_valid: Array, *, beam_width: int, metric: str) -> BeamState:
+def init(vectors: Array | VectorStore, queries: Array, seed_ids: Array,
+         exclude: Array, n_valid: Array, *, beam_width: int,
+         metric: str) -> BeamState:
     """Seed the beam: dedup seeds per lane, score them, sort, pad to L."""
     B = queries.shape[0]
     L = beam_width
+    store = as_store(vectors)
     metric_obj = get_metric(metric)
 
     seed_valid = (seed_ids != INVALID) & (seed_ids < n_valid)
@@ -105,7 +108,7 @@ def init(vectors: Array, queries: Array, seed_ids: Array, exclude: Array,
                            axis=2)
     seed_valid &= first_pos == jnp.arange(seed_ids.shape[1])[None, :]
     safe_seeds = jnp.where(seed_valid, seed_ids, 0)
-    seed_d = metric_obj.pair(queries[:, None, :], vectors[safe_seeds])
+    seed_d = metric_obj.pair(queries[:, None, :], store.decode(safe_seeds))
     seed_d = jnp.where(seed_valid, seed_d, _INF)
     seed_ids_m = jnp.where(seed_valid, seed_ids, INVALID)
 
@@ -148,7 +151,8 @@ def _merge_dispatch(beam_d, beam_ids, beam_chk, beam_exc,
 
 
 def expand(state: BeamState, adjacency: Array, n_valid: Array,
-           vectors: Array, queries: Array, exclude: Array, *, k: int,
+           vectors: Array | VectorStore, queries: Array, exclude: Array, *,
+           k: int,
            eps: float, metric: str, backend: str = "jnp",
            merge_backend: str = "jnp") -> BeamState:
     """One hop: expand each lane's closest unchecked entry (Alg. 1 lines
@@ -209,14 +213,19 @@ def extract(state: BeamState, k: int) -> tuple[Array, Array]:
 # ---------------------------------------------------------------------------
 # the composed program
 # ---------------------------------------------------------------------------
-def beam_search(graph: DEGraph, vectors: Array, queries: Array,
+def beam_search(graph: DEGraph, vectors: Array | VectorStore, queries: Array,
                 seed_ids: Array, *, k: int, eps: float, beam_width: int,
                 max_hops: int, metric: str = "l2",
                 exclude: Optional[Array] = None, backend: str = "jnp",
                 merge_backend: str = "jnp") -> BeamState:
     """init -> while(expand) -> final BeamState.  Pure (un-jitted): callers
     embed it in their own jitted programs (``range_search``, the sharded
-    search step) so every layer reuses one implementation."""
+    search step) so every layer reuses one implementation.
+
+    ``vectors`` may be a raw float array (exact) or a
+    :class:`repro.quant.VectorStore` — with a compressed codec the beam
+    traverses *approximate* distances; callers that need exact results run
+    the two-stage rerank in ``core/search.py`` on top."""
     B = queries.shape[0]
     if exclude is None:
         exclude = jnp.full((B, 1), INVALID, dtype=jnp.int32)

@@ -97,6 +97,10 @@ class DEGIndex:
         self._pending: list[np.ndarray] = []   # points before K_{d+1} exists
         self._rng = np.random.default_rng(0)
         self._medoid: Optional[int] = None     # cached medoid_seed entry
+        # compressed views of _dev_vectors, keyed by codec name; invalidated
+        # whenever the indexed vector set changes (post-training recipe:
+        # re-encode + re-calibrate from the live rows, never retrain)
+        self._stores: dict = {}
 
     # -- sizes -------------------------------------------------------------
     @property
@@ -114,12 +118,14 @@ class DEGIndex:
         vecs[: self.capacity] = self.vectors
         self.vectors = vecs
         self._dev_vectors = jnp.asarray(vecs)
+        self._stores = {}
         if self.builder is not None:
             self.builder.grow(new_capacity)
 
     # -- device sync ---------------------------------------------------------
     def _put_rows(self, rows: np.ndarray, start: int) -> None:
         self._medoid = None                    # vector set changed
+        self._stores = {}
         self._dev_vectors = _write_rows(
             self._dev_vectors, jnp.asarray(rows, dtype=jnp.float32),
             jnp.asarray(start, dtype=jnp.int32))
@@ -291,6 +297,7 @@ class DEGIndex:
         from .delete import delete_vertices
 
         self._medoid = None
+        self._stores = {}
         return delete_vertices(self, ids if hasattr(ids, "__iter__")
                                else [ids], refine_after=refine_after)
 
@@ -313,18 +320,56 @@ class DEGIndex:
             i_opt=self.params.i_opt, k_opt=self.params.k_opt,
             eps_opt=self.params.eps_opt)
 
+    # -- quantized store views ----------------------------------------------
+    def store_for(self, codec: str):
+        """The :class:`repro.quant.VectorStore` view the beam traverses
+        under ``codec`` — encoded once per (codec, vector-set version) and
+        cached until the indexed vectors change."""
+        from repro.quant import make_store
+
+        if codec not in self._stores:
+            self._stores[codec] = make_store(self._dev_vectors, codec,
+                                             n=self.n)
+        return self._stores[codec]
+
+    def memory_stats(self) -> dict:
+        """Vector-store footprint of the *hot traversal path* per codec
+        (live rows only).  The exact float32 copy used by two-stage rerank
+        is reported separately — it is touched ``rerank_k`` rows per query,
+        not per hop, so it can live off the accelerator."""
+        from repro.quant import codec as qc
+
+        n, m = self.n, self.dim
+        exact = qc.store_bytes("float32", n, m)
+        out = {"n": n, "dim": m, "exact_bytes": exact}
+        for name in qc.CODECS:
+            b = qc.store_bytes(name, n, m)
+            out[f"{name}_bytes"] = b
+            out[f"{name}_ratio"] = exact / b if b else 0.0
+        return out
+
     # -- queries --------------------------------------------------------------
     def search_batch(self, queries: np.ndarray,
                      seed_ids: Optional[np.ndarray] = None,
                      exclude: Optional[np.ndarray] = None, *, k: int,
                      eps: float = 0.1, beam_width: Optional[int] = None,
-                     backend: str = "jnp") -> SearchResult:
+                     backend: str = "jnp",
+                     quantized: Optional[str] = None,
+                     rerank_k: Optional[int] = None) -> SearchResult:
         """The one device entry point every query path funnels through.
 
         ``seed_ids`` (B, S) / ``exclude`` (B, X) go straight into the beam
         engine; plain searches, exploration sessions and the serving
         flush all share this jitted program (one cache entry per shape
-        family instead of one per calling layer)."""
+        family instead of one per calling layer).
+
+        ``quantized`` selects the store codec the beam traverses ("fp16" |
+        "sq8"; None/"float32" = the exact path, bit-identical to the
+        pre-quantization engine).  With a compressed codec the search is
+        two-stage: the beam runs over compressed distances, then the best
+        ``rerank_k`` candidates (default ``4 * k``) are re-scored exactly
+        against the float store and the exact top-k is returned.
+        """
         q = jnp.asarray(np.atleast_2d(np.asarray(queries, np.float32)))
         if seed_ids is None:
             seeds = jnp.full((q.shape[0], 1), self.medoid(), dtype=jnp.int32)
@@ -334,20 +379,30 @@ class DEGIndex:
                 seeds = seeds[:, None]
         excl = None if exclude is None else jnp.asarray(
             np.asarray(exclude, np.int32))
-        return range_search(self.frozen(), self._dev_vectors, q, seeds,
-                            k=k, eps=eps, beam_width=beam_width,
+        if quantized in (None, "float32"):
+            return range_search(self.frozen(), self._dev_vectors, q, seeds,
+                                k=k, eps=eps, beam_width=beam_width,
+                                metric=self.params.metric, exclude=excl,
+                                backend=backend)
+        store = self.store_for(quantized)
+        rk = int(rerank_k) if rerank_k else 4 * k
+        return range_search(self.frozen(), store, q, seeds, k=k, eps=eps,
+                            beam_width=beam_width,
                             metric=self.params.metric, exclude=excl,
-                            backend=backend)
+                            backend=backend, rerank_k=max(rk, k),
+                            exact_vectors=self._dev_vectors)
 
     def search(self, queries: np.ndarray, k: int, eps: float = 0.1,
                beam_width: Optional[int] = None, seed: Optional[int] = None,
-               backend: str = "jnp") -> SearchResult:
+               backend: str = "jnp", quantized: Optional[str] = None,
+               rerank_k: Optional[int] = None) -> SearchResult:
         if seed is None:
             seed = self.medoid()
         q = np.atleast_2d(np.asarray(queries, np.float32))
         seeds = np.full((q.shape[0], 1), seed, dtype=np.int32)
         return self.search_batch(q, seeds, k=k, eps=eps,
-                                 beam_width=beam_width, backend=backend)
+                                 beam_width=beam_width, backend=backend,
+                                 quantized=quantized, rerank_k=rerank_k)
 
     def explore(self, seed_vertices: Sequence[int], k: int, eps: float = 0.1,
                 exclude: Optional[np.ndarray] = None,

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 
 from . import beam
 from .beam import neighbor_distances_jnp as _neighbor_distances_jnp  # noqa: F401  (re-export)
+from .distances import get_metric
 from .graph import DEGraph, INVALID
 
 Array = jax.Array
@@ -47,10 +48,31 @@ class SearchResult:
     evals: Array    # (B,) int32 — number of distance evaluations (|C| analogue)
 
 
+def exact_rerank(exact_vectors: Array, queries: Array, cand_ids: Array,
+                 *, k: int, metric: str = "l2") -> tuple[Array, Array]:
+    """Stage two of the quantized search: exactly re-score INVALID-padded
+    candidate ids against the float store and return the exact top-k.
+
+    One gather of ``rerank_k`` rows per query — the only touch of the exact
+    store on the whole query path (the beam itself traversed compressed
+    rows).  Stable sort keeps ties deterministic.
+    """
+    metric_obj = get_metric(metric)
+    safe = jnp.where(cand_ids == INVALID, 0, cand_ids)
+    d = metric_obj.pair(queries[:, None, :],
+                        exact_vectors[safe].astype(jnp.float32))
+    d = jnp.where(cand_ids == INVALID, jnp.inf, d)
+    order = jnp.argsort(d, axis=1, stable=True)[:, :k]
+    out_ids = jnp.take_along_axis(cand_ids, order, axis=1)
+    out_d = jnp.take_along_axis(d, order, axis=1)
+    out_ids = jnp.where(jnp.isinf(out_d), INVALID, out_ids)
+    return out_ids, out_d
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("k", "beam_width", "max_hops", "metric", "backend",
-                     "merge_backend"),
+                     "merge_backend", "rerank_k"),
 )
 def range_search(
     graph: DEGraph,
@@ -66,12 +88,16 @@ def range_search(
     exclude: Optional[Array] = None,
     backend: str = "jnp",
     merge_backend: str = "jnp",
+    rerank_k: int = 0,
+    exact_vectors: Optional[Array] = None,
 ) -> SearchResult:
     """Approximate k-NN for a batch of queries.
 
     Args:
       graph: the DEG to search.
-      vectors: (capacity, m) float — the indexed points (rows >= graph.n unused).
+      vectors: (capacity, m) float — the indexed points (rows >= graph.n
+        unused) — or a :class:`repro.quant.VectorStore` view of them (the
+        beam then traverses compressed distances).
       queries: (B, m) float.
       seed_ids: (B, S) int32 seed vertices, INVALID-padded.
       k: result count.
@@ -80,9 +106,15 @@ def range_search(
       max_hops: safety bound on loop iterations (0 -> auto).
       exclude: optional (B, X) int32 vertices excluded from results (still
         traversable) — the exploration protocol.
-      backend: distance backend ("jnp" | "pallas" fused gather_dist).
+      backend: distance backend ("jnp" | "pallas" fused gather_dist /
+        gather_dist_q per the store codec).
       merge_backend: per-hop beam merge ("jnp" bitonic | "pallas" kernel |
         "argsort" seed semantics) — all bit-identical.
+      rerank_k: two-stage search — take this many beam candidates and
+        re-score them exactly against ``exact_vectors`` (requires
+        ``rerank_k >= k``).  0 disables the second stage: results carry the
+        store's (possibly compressed) distances.
+      exact_vectors: (capacity, m) float32 exact rows for the rerank stage.
     """
     n_ex = exclude.shape[1] if exclude is not None else 0
     L = (beam_width if beam_width is not None
@@ -91,6 +123,12 @@ def range_search(
     L = max(L, k, seed_ids.shape[1])
     if exclude is not None:
         L = max(L, k + n_ex)
+    if rerank_k:
+        if rerank_k < k:
+            raise ValueError(f"rerank_k={rerank_k} must be >= k={k}")
+        if exact_vectors is None:
+            raise ValueError("rerank_k > 0 requires exact_vectors")
+        L = max(L, rerank_k + n_ex)   # room for rerank_k non-excluded hits
     if max_hops <= 0:
         max_hops = beam.default_max_hops(L)
 
@@ -98,9 +136,17 @@ def range_search(
         graph, vectors, queries, seed_ids, k=k, eps=eps, beam_width=L,
         max_hops=max_hops, metric=metric, exclude=exclude, backend=backend,
         merge_backend=merge_backend)
-    out_ids, out_d = beam.extract(state, k)
+    if rerank_k:
+        cand_ids, _ = beam.extract(state, rerank_k)
+        out_ids, out_d = exact_rerank(exact_vectors, queries, cand_ids,
+                                      k=k, metric=metric)
+        evals = state.evals + (cand_ids != INVALID).sum(axis=1,
+                                                        dtype=jnp.int32)
+    else:
+        out_ids, out_d = beam.extract(state, k)
+        evals = state.evals
     return SearchResult(ids=out_ids, dists=out_d, hops=state.hops,
-                        evals=state.evals)
+                        evals=evals)
 
 
 def medoid_seed(vectors: Array, n: int) -> int:

@@ -42,19 +42,39 @@ Array = jax.Array
 def make_sharded_search(mesh: Mesh, *, k: int, eps: float = 0.1,
                         beam_width: Optional[int] = None,
                         metric: str = "l2", shard_axis: str = "model",
-                        batch_axes="data", exclude_width: int = 0) -> Callable:
+                        batch_axes="data", exclude_width: int = 0,
+                        codec: str = "float32",
+                        rerank_k: int = 0) -> Callable:
     """Build the jit-able sharded search step.
 
     f(adjacency (S, Ns, d) i32, vectors (S, Ns, m) f32, n (S,) i32,
       seeds (S,) i32, queries (B, m) f32[, exclude (B, X) i32])
       -> (ids (B, k) global i32, dists (B, k) f32)
-    """
-    n_shards = int(mesh.shape[shard_axis])
 
-    def local(adj, vecs, n, seed, queries, exclude):
+    With a compressed ``codec``, f additionally takes
+    ``codes (S, Ns, m)`` / ``scales (S, m)`` after ``vectors`` and runs the
+    two-stage protocol: each shard's beam traverses its *quantized* store,
+    ``rerank_k`` (default ``4 * k``) candidates per shard merge through
+    ``topk_merge_allgather``, and the merged list is re-scored exactly
+    AFTER the merge — each shard scores the merged rows it owns against its
+    float store and a ``pmin`` over the shard axis fills every lane.  The
+    extra collective volume is one (B, rerank_k) f32 pmin; the final top-k
+    ordering is exactly the float ordering of the surviving candidates.
+    """
+    from repro.quant.store import VectorStore
+
+    n_shards = int(mesh.shape[shard_axis])
+    quantized = codec != "float32"
+    rr = max(rerank_k, k) if quantized else k
+    if quantized and rerank_k <= 0:
+        rr = 4 * k
+
+    def local(adj, vecs, codes, scales, n, seed, queries, exclude):
         adj, vecs = adj[0], vecs[0]              # strip leading shard dim
         from repro.core.graph import DEGraph
 
+        store = (VectorStore(data=codes[0], scale=scales[0], codec=codec)
+                 if quantized else beam.as_store(vecs))
         g = DEGraph(adjacency=adj, weights=jnp.zeros_like(adj, jnp.float32),
                     n=n[0])
         B = queries.shape[0]
@@ -74,41 +94,72 @@ def make_sharded_search(mesh: Mesh, *, k: int, eps: float = 0.1,
         # embedded directly in the shard_map body)
         n_ex = excl_local.shape[1] if excl_local is not None else 0
         L = (beam_width if beam_width is not None
-             else beam.default_beam_width(k, g.degree, seeds.shape[1], n_ex))
-        L = max(L, k, seeds.shape[1], k + n_ex)
+             else beam.default_beam_width(rr, g.degree, seeds.shape[1],
+                                          n_ex))
+        L = max(L, rr, seeds.shape[1], rr + n_ex)
         state = beam.beam_search(
-            g, vecs, queries, seeds, k=k, eps=eps, beam_width=L,
+            g, store, queries, seeds, k=rr, eps=eps, beam_width=L,
             max_hops=beam.default_max_hops(L), metric=metric,
             exclude=excl_local)
-        lids, ldists = beam.extract(state, k)
+        lids, ldists = beam.extract(state, rr)
         gids = jnp.where(lids == INVALID, INVALID, lids * n_shards + shard)
-        dists, ids = topk_merge_allgather(ldists, gids, k, shard_axis)
+        dists, ids = topk_merge_allgather(ldists, gids, rr, shard_axis)
+        if quantized:
+            ids, dists = _exact_rerank_owned(
+                vecs, queries, ids, k=k, metric=metric,
+                n_shards=n_shards, shard=shard, shard_axis=shard_axis)
         return ids, dists
 
     bspec = P(batch_axes, None)
     shspec3 = P(shard_axis, None, None)
     shspec1 = P(shard_axis)
 
+    in_specs = [shspec3, shspec3]
+    if quantized:
+        in_specs += [shspec3, P(shard_axis, None)]
+    in_specs += [shspec1, shspec1, bspec]
     if exclude_width > 0:
-        def f(adj, vecs, n, seeds, queries, exclude):
-            return shard_map(
-                functools.partial(local),
-                mesh=mesh,
-                in_specs=(shspec3, shspec3, shspec1, shspec1, bspec,
-                          P(batch_axes, None)),
-                out_specs=(bspec, bspec), check_vma=False,
-            )(adj, vecs, n, seeds, queries, exclude)
-        return f
+        in_specs += [P(batch_axes, None)]
 
-    def f(adj, vecs, n, seeds, queries):
+    def body(*a):
+        if quantized:
+            adj, vecs, codes, scales, n, seed, queries = a[:7]
+            rest = a[7:]
+        else:
+            adj, vecs, n, seed, queries = a[:5]
+            codes = scales = None
+            rest = a[5:]
+        exclude = rest[0] if rest else None
+        return local(adj, vecs, codes, scales, n, seed, queries, exclude)
+
+    def f(*args):
         return shard_map(
-            lambda a, v, nn, s, q: local(a, v, nn, s, q, None),
-            mesh=mesh,
-            in_specs=(shspec3, shspec3, shspec1, shspec1, bspec),
+            body, mesh=mesh, in_specs=tuple(in_specs),
             out_specs=(bspec, bspec), check_vma=False,
-        )(adj, vecs, n, seeds, queries)
+        )(*args)
 
     return f
+
+
+def _exact_rerank_owned(vecs, queries, ids, *, k, metric, n_shards, shard,
+                        shard_axis):
+    """Exact rerank of merged global ids inside shard_map: each shard
+    scores the rows it owns against its float store; pmin over the shard
+    axis fills the unowned lanes; the exact top-k wins."""
+    from repro.core.distances import get_metric
+
+    own = (ids != INVALID) & ((ids % n_shards) == shard)
+    rows = jnp.where(own, ids // n_shards, 0)
+    ed = get_metric(metric).pair(queries[:, None, :],
+                                 vecs[rows].astype(jnp.float32))
+    ed = jnp.where(own, ed, jnp.inf)
+    ed = jax.lax.pmin(ed, shard_axis)
+    ed = jnp.where(ids == INVALID, jnp.inf, ed)
+    order = jnp.argsort(ed, axis=1, stable=True)[:, :k]
+    out_ids = jnp.take_along_axis(ids, order, axis=1)
+    out_d = jnp.take_along_axis(ed, order, axis=1)
+    out_ids = jnp.where(jnp.isinf(out_d), INVALID, out_ids)
+    return out_ids, out_d
 
 
 # ---------------------------------------------------------------------------
@@ -116,7 +167,12 @@ def make_sharded_search(mesh: Mesh, *, k: int, eps: float = 0.1,
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
 class ShardedDEG:
-    """S independently built sub-DEGs + the stacked device arrays."""
+    """S independently built sub-DEGs + the stacked device arrays.
+
+    ``quantize()`` attaches per-shard compressed stores (codes calibrated
+    per shard from its live rows); ``search`` then runs the two-stage
+    protocol of :func:`make_sharded_search` (quantized traversal, exact
+    rerank after the all-gather merge)."""
 
     shards: list                     # list[DEGIndex]
     adjacency: Array                 # (S, Ns, d)
@@ -124,6 +180,9 @@ class ShardedDEG:
     n: Array                         # (S,)
     seeds: Array                     # (S,) per-shard medoid
     params: DEGParams
+    codec: str = "float32"
+    codes: Optional[Array] = None    # (S, Ns, m) — compressed rows
+    scales: Optional[Array] = None   # (S, m) — per-shard sq8 scales
 
     @property
     def n_shards(self) -> int:
@@ -133,14 +192,58 @@ class ShardedDEG:
     def n_total(self) -> int:
         return int(np.asarray(self.n).sum())
 
+    def quantize(self, codec: str) -> "ShardedDEG":
+        """Post-training: encode every shard's store under ``codec``
+        (per-shard calibration over its live rows)."""
+        from repro.quant import codec as qc
+
+        if codec not in qc.CODECS:
+            raise ValueError(f"unknown codec {codec!r} "
+                             f"(have {sorted(qc.CODECS)})")
+        if codec == "float32":
+            return dataclasses.replace(self, codec=codec, codes=None,
+                                       scales=None)
+        S, Ns, m = self.vectors.shape
+        n_host = np.asarray(self.n)
+        vecs = np.asarray(self.vectors)
+        codes = np.zeros((S, Ns, m),
+                         dtype={"fp16": np.float16, "sq8": np.int8}[codec])
+        scales = np.ones((S, m), dtype=np.float32)
+        for s in range(S):
+            sc = qc.calibrate_sq8_scale(jnp.asarray(vecs[s]), n_host[s]) \
+                if codec == "sq8" else jnp.ones((m,), jnp.float32)
+            scales[s] = np.asarray(sc)
+            codes[s] = np.asarray(qc.encode(codec, jnp.asarray(vecs[s]), sc))
+        return dataclasses.replace(self, codec=codec,
+                                   codes=jnp.asarray(codes),
+                                   scales=jnp.asarray(scales))
+
+    def memory_stats(self) -> dict:
+        """Per-shard traversal-store bytes (live rows) under the attached
+        codec vs the exact float32 store."""
+        from repro.quant import codec as qc
+
+        m = self.vectors.shape[2]
+        per_shard = np.asarray(self.n)
+        exact = sum(qc.store_bytes("float32", int(ns), m) for ns in per_shard)
+        b = sum(qc.store_bytes(self.codec, int(ns), m) for ns in per_shard)
+        return {"n": int(per_shard.sum()), "dim": m, "codec": self.codec,
+                "exact_bytes": exact, "store_bytes": b,
+                "ratio": exact / b if b else 0.0}
+
     def search(self, mesh: Mesh, queries: np.ndarray, k: int,
-               eps: float = 0.1, batch_axes="data") -> tuple:
+               eps: float = 0.1, batch_axes="data",
+               rerank_k: int = 0) -> tuple:
         f = make_sharded_search(mesh, k=k, eps=eps,
                                 metric=self.params.metric,
-                                batch_axes=batch_axes)
+                                batch_axes=batch_axes, codec=self.codec,
+                                rerank_k=rerank_k)
+        args = [self.adjacency, self.vectors]
+        if self.codec != "float32":
+            args += [self.codes, self.scales]
+        args += [self.n, self.seeds, jnp.asarray(queries)]
         with set_mesh(mesh):
-            ids, dists = jax.jit(f)(self.adjacency, self.vectors, self.n,
-                                    self.seeds, jnp.asarray(queries))
+            ids, dists = jax.jit(f)(*args)
         return np.asarray(ids), np.asarray(dists)
 
     def drop_shard(self, idx: int) -> "ShardedDEG":
@@ -155,8 +258,10 @@ class ShardedDEG:
 def build_sharded_deg(vectors: np.ndarray, n_shards: int,
                       params: Optional[DEGParams] = None,
                       wave_size: int = 8,
-                      refine_iterations: int = 0) -> ShardedDEG:
-    """Round-robin partition + per-shard incremental DEG build."""
+                      refine_iterations: int = 0,
+                      codec: str = "float32") -> ShardedDEG:
+    """Round-robin partition + per-shard incremental DEG build.
+    ``codec`` != "float32" attaches post-training quantized shard stores."""
     params = params or DEGParams()
     vectors = np.asarray(vectors, dtype=np.float32)
     N, m = vectors.shape
@@ -179,6 +284,7 @@ def build_sharded_deg(vectors: np.ndarray, n_shards: int,
         vecs[s, : sh.n] = sh.vectors[: sh.n]
         n_arr[s] = sh.n
         seeds[s] = sh.medoid()       # cached per-shard medoid entry
-    return ShardedDEG(shards=shards, adjacency=jnp.asarray(adj),
-                      vectors=jnp.asarray(vecs), n=jnp.asarray(n_arr),
-                      seeds=jnp.asarray(seeds), params=params)
+    sd = ShardedDEG(shards=shards, adjacency=jnp.asarray(adj),
+                    vectors=jnp.asarray(vecs), n=jnp.asarray(n_arr),
+                    seeds=jnp.asarray(seeds), params=params)
+    return sd.quantize(codec) if codec != "float32" else sd

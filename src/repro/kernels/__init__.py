@@ -19,5 +19,10 @@ Kernels:
                     candidates into the sorted search beam (bit-identical
                     to a stable argsort of the concatenation; the beam
                     engine's per-hop workhorse — see core/beam.py);
+* ``gather_dist_q`` — the SQ8 sibling of ``gather_dist``: gathers int8 code
+                    rows, dequantizes them in VMEM against the shared
+                    per-dimension scale, and reduces to distances in one
+                    pass (the quantized store's hot path — see
+                    quant/store.py);
 * ``bag_lookup``  — embedding-bag gather-reduce (recsys embedding tables).
 """

@@ -1,0 +1,4 @@
+from .ops import gather_dist_q
+from .ref import gather_dist_q_ref
+
+__all__ = ["gather_dist_q", "gather_dist_q_ref"]

@@ -1,0 +1,60 @@
+"""Fused neighbor-gather + dequantize + distance Pallas TPU kernel.
+
+The quantized sibling of ``kernels/gather_dist``: one hop of the DEG range
+search over an SQ8 store needs ``dist(q_b, deq(codes[ids[b, j]]))`` for
+``j < d``.  A naive XLA lowering gathers the int8 rows, materializes the
+dequantized ``(B, d, m)`` float32 tensor in HBM (8x the code bytes!), then
+reduces.  Here each int8 row is DMA'd HBM->VMEM directly by the BlockSpec
+index_map using the *scalar-prefetched* ``ids`` and dequantized in VMEM —
+the float32 intermediate never exists outside the register file, so the HBM
+traffic per hop is the ``d * m`` code bytes plus the query row: a ~4x cut of
+the term that dominates the search roofline.
+
+grid = (B, d): step (i, j) pulls code row ids[i, j], the shared per-dimension
+scale row, and query row i into VMEM, computes one dequantized distance, and
+stores it at out[i, j].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, codes_ref, scale_ref, q_ref, out_ref, *, squared: bool):
+    j = pl.program_id(1)
+    row = codes_ref[0, :].astype(jnp.float32) * scale_ref[0, :]
+    diff = row - q_ref[0, :].astype(jnp.float32)
+    d2 = jnp.maximum(jnp.sum(diff * diff), 0.0)
+    dist = d2 if squared else jnp.sqrt(d2)
+    out_ref[0, pl.dslice(j, 1)] = dist[None]
+
+
+@functools.partial(jax.jit, static_argnames=("squared", "interpret"))
+def gather_dist_q_pallas(codes: jax.Array, scale: jax.Array, ids: jax.Array,
+                         queries: jax.Array, *, squared: bool = False,
+                         interpret: bool = True):
+    """codes (N, m) int8, scale (1, m) f32, ids (B, d) int32 in [0, N),
+    queries (B, m) f32 -> (B, d) f32 distances."""
+    N, m = codes.shape
+    B, d = ids.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, d),
+        in_specs=[
+            pl.BlockSpec((1, m), lambda i, j, ids: (ids[i, j], 0)),
+            pl.BlockSpec((1, m), lambda i, j, ids: (0, 0)),
+            pl.BlockSpec((1, m), lambda i, j, ids: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, j, ids: (i, 0)),
+    )
+    kernel = functools.partial(_kernel, squared=squared)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, d), jnp.float32),
+        interpret=interpret,
+    )(ids, codes, scale, queries)

@@ -1,0 +1,32 @@
+"""Public wrapper for the gather+dequant+distance kernel: clamps
+out-of-range ids (INVALID = -1 slots are masked by the caller), pads the
+feature dim to the 128-lane boundary (zero code x zero scale x zero query
+padding contributes nothing to the distance)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .gather_dist_q import gather_dist_q_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("squared", "interpret"))
+def gather_dist_q(codes: jax.Array, scale: jax.Array, ids: jax.Array,
+                  queries: jax.Array, *, squared: bool = False,
+                  interpret: bool | None = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    N, m = codes.shape
+    pad_m = (-m) % 128
+    c = jnp.pad(codes.astype(jnp.int8), ((0, 0), (0, pad_m)))
+    s = jnp.pad(scale.astype(jnp.float32), (0, pad_m))[None, :]
+    q = jnp.pad(queries.astype(jnp.float32), ((0, 0), (0, pad_m)))
+    safe_ids = jnp.clip(ids, 0, N - 1).astype(jnp.int32)
+    return gather_dist_q_pallas(c, s, safe_ids, q, squared=squared,
+                                interpret=interpret)

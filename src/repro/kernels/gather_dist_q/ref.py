@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the gather+dequant+distance kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("squared",))
+def gather_dist_q_ref(codes: jax.Array, scale: jax.Array, ids: jax.Array,
+                      queries: jax.Array, squared: bool = False):
+    """codes (N, m) int8, scale (m,) f32, ids (B, d), queries (B, m)."""
+    g = codes[ids].astype(jnp.float32) * scale[None, None, :]   # (B, d, m)
+    diff = g - queries.astype(jnp.float32)[:, None, :]
+    d2 = jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0)
+    return d2 if squared else jnp.sqrt(d2)

@@ -29,8 +29,23 @@ def main() -> None:
     ap.add_argument("--build-refine", type=int, default=500,
                     help="refinement iterations after build (paper Alg. 5; "
                     "without it recall plateaus — see EXPERIMENTS.md)")
+    from repro.configs.deg import QUANT_PRESETS
+
+    ap.add_argument("--preset", default=None, choices=sorted(QUANT_PRESETS),
+                    help="named store preset from configs/deg.py "
+                    "(sets --codec/--rerank-k)")
+    ap.add_argument("--codec", default="float32",
+                    choices=("float32", "fp16", "sq8"),
+                    help="vector store the beam traverses (compressed "
+                    "codecs run the two-stage exact-rerank search)")
+    ap.add_argument("--rerank-k", type=int, default=0,
+                    help="exact-rerank width for compressed codecs "
+                    "(0 = auto 4*k)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.preset:
+        preset = QUANT_PRESETS[args.preset]
+        args.codec, args.rerank_k = preset.codec, preset.rerank_k
 
     from repro.core.build import DEGIndex, DEGParams, build_deg
     from repro.core.distances import exact_knn_batched
@@ -66,7 +81,14 @@ def main() -> None:
                         wave_size=16,
                         refine_iterations=args.build_refine)
     engine = QueryEngine(idx, k=args.k, max_batch=args.batch,
-                         refine_budget=args.refine_budget)
+                         refine_budget=args.refine_budget,
+                         codec=args.codec,
+                         rerank_k=args.rerank_k or None)
+    if args.codec != "float32":
+        ms = engine.memory_stats()
+        print(f"codec={args.codec}: traversal store "
+              f"{ms['serving_bytes']/1e6:.2f} MB "
+              f"({ms['serving_ratio']:.2f}x smaller than float32)")
 
     futs = []
     t0 = time.time()

@@ -1,0 +1,98 @@
+"""Post-training vector codecs for the in-graph store.
+
+The DEG search roofline is the random gather of neighbor rows (see
+``kernels/gather_dist``); at serving scale the float32 store — not compute —
+caps how many vertices a shard can hold.  Following the standard
+post-training-quantization recipe (quantize after build, calibrate from the
+indexed data, never retrain), this module provides the *codec* layer:
+
+* ``sq8`` — per-dimension symmetric scalar quantization to int8.  The scale
+  of dimension ``j`` is calibrated as ``max_i |x[i, j]| / 127`` over the
+  indexed vectors, so every indexed value round-trips with
+  ``|deq(q(x)) - x| <= scale/2`` (round-to-nearest, no clipping inside the
+  calibration range — the property test pins this bound).
+* ``fp16`` — IEEE half precision, a 2x codec with no calibration state.
+* ``float32`` — the identity codec (the exact store; decode is a no-op so
+  the float path stays bit-identical to the pre-quantization engine).
+
+Codecs are deliberately stateless functions over ``(data, scale)`` pairs;
+:mod:`repro.quant.store` packages them with the arrays as a pytree the beam
+engine can traverse.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+#: codec name -> (storage dtype, bytes per element)
+CODECS = {
+    "float32": (jnp.float32, 4),
+    "fp16": (jnp.float16, 2),
+    "sq8": (jnp.int8, 1),
+}
+
+
+def calibrate_sq8_scale(vectors: Array, n=None) -> Array:
+    """Per-dimension symmetric scale from the indexed rows.
+
+    vectors (capacity, m); ``n`` restricts calibration to the first ``n``
+    rows (the live vertices — capacity padding must not inflate scales,
+    though zero padding cannot since |0| contributes nothing).
+    """
+    x = vectors if n is None else vectors[:n]
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=0)
+    return jnp.maximum(amax, 1e-12) / 127.0
+
+
+def sq8_encode(vectors: Array, scale: Array) -> Array:
+    """Round-to-nearest symmetric int8: q = clip(round(x / scale), ±127)."""
+    q = jnp.round(vectors.astype(jnp.float32) / scale[None, :])
+    return jnp.clip(q, -127, 127).astype(jnp.int8)
+
+
+def sq8_decode(codes: Array, scale: Array) -> Array:
+    return codes.astype(jnp.float32) * scale
+
+
+def encode(codec: str, vectors: Array, scale: Array) -> Array:
+    if codec == "float32":
+        return vectors.astype(jnp.float32)
+    if codec == "fp16":
+        return vectors.astype(jnp.float16)
+    if codec == "sq8":
+        return sq8_encode(vectors, scale)
+    raise ValueError(f"unknown codec {codec!r} (have {sorted(CODECS)})")
+
+
+def decode(codec: str, data: Array, scale: Array) -> Array:
+    """Decoded rows in float32.  ``float32`` decode must be the identity
+    (astype to the same dtype is a no-op) so the exact path is bit-identical
+    to a raw-array store."""
+    if codec == "float32":
+        return data.astype(jnp.float32)
+    if codec == "fp16":
+        return data.astype(jnp.float32)
+    if codec == "sq8":
+        return sq8_decode(data, scale)
+    raise ValueError(f"unknown codec {codec!r} (have {sorted(CODECS)})")
+
+
+def bytes_per_row(codec: str, dim: int) -> int:
+    """Bytes of one stored row (the per-dimension sq8 scale vector is shared
+    by all rows and charged to the store, not the row)."""
+    if codec not in CODECS:
+        raise ValueError(f"unknown codec {codec!r} (have {sorted(CODECS)})")
+    return CODECS[codec][1] * dim
+
+
+def store_bytes(codec: str, n_rows: int, dim: int) -> int:
+    """Total traversal-store bytes for ``n_rows`` rows: rows plus codec
+    calibration state (sq8's shared per-dimension scale vector).  The ONE
+    byte-accounting rule — VectorStore.memory_bytes, DEGIndex.memory_stats
+    and ShardedDEG.memory_stats all delegate here."""
+    total = n_rows * bytes_per_row(codec, dim)
+    if codec == "sq8":
+        total += dim * 4
+    return total

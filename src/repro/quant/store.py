@@ -1,0 +1,114 @@
+"""The vector store the beam engine traverses.
+
+:class:`VectorStore` sits between ``core/graph.py`` (which owns topology)
+and ``core/beam.py`` (which owns traversal): the engine asks the store for
+seed/neighbor distances and never touches a raw ``(n, m)`` array again.
+It is a registered-dataclass pytree — ``data``/``scale`` are leaves, the
+codec name is static — so it passes through ``jax.jit`` / ``shard_map``
+boundaries exactly like :class:`repro.core.graph.DEGraph` does.
+
+Three views behind one interface:
+
+* ``float32`` — the exact store.  ``decode`` is the identity and
+  ``neighbor_distances`` lowers to the *same ops* as the pre-quantization
+  engine, so this path stays bit-identical (pinned by the golden fixture).
+* ``fp16`` — half-precision rows, upcast in the gather.
+* ``sq8`` — int8 codes + per-dimension scale; the hot gather path runs the
+  fused ``kernels/gather_dist_q`` gather→dequant→distance kernel (Pallas on
+  TPU, jnp elsewhere).
+
+The store deliberately does NOT hold the exact copy used by two-stage
+rerank — that stays with the index owner (host / cold path); see
+ARCHITECTURE.md ("Quantized store layering").
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import codec as C
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class VectorStore:
+    """Encoded vector rows + dequant state behind one distance interface."""
+
+    data: Array    # (capacity, m) — float32 / float16 / int8 per codec
+    scale: Array   # (m,) float32 — sq8 dequant scale (ones otherwise)
+    codec: str = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def capacity(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.data.shape[1]
+
+    @property
+    def exact(self) -> bool:
+        return self.codec == "float32"
+
+    def decode(self, ids: Array) -> Array:
+        """Gather rows by id and decode to float32 (identity for float32)."""
+        return C.decode(self.codec, self.data[ids], self.scale)
+
+    def neighbor_distances(self, queries: Array, nbr_ids: Array,
+                           metric_name: str, backend: str = "jnp") -> Array:
+        """dist(q_b, decode(row ids[b, j])) for (B, d) ids -> (B, d).
+
+        The one call the beam engine makes per hop.  ``backend='pallas'``
+        routes l2 to the fused gather kernels (``gather_dist`` for float
+        codecs, ``gather_dist_q`` for sq8); everything else takes the jnp
+        gather+pair path, which for float32 is the exact pre-store program.
+        """
+        from repro.core.distances import get_metric
+
+        if backend == "pallas" and metric_name == "l2":
+            if self.codec == "sq8":
+                from repro.kernels.gather_dist_q import ops as gdq_ops
+
+                return gdq_ops.gather_dist_q(self.data, self.scale, nbr_ids,
+                                             queries)
+            from repro.kernels.gather_dist import ops as gd_ops
+
+            return gd_ops.gather_dist(self.data, nbr_ids, queries)
+        metric = get_metric(metric_name)
+        nvecs = self.decode(nbr_ids)                       # (B, d, m)
+        return metric.pair(queries[:, None, :], nvecs)     # (B, d)
+
+    # -- footprint ---------------------------------------------------------
+    def memory_bytes(self, n=None) -> int:
+        """Store bytes for ``n`` rows (default: full capacity) + dequant
+        state."""
+        rows = self.capacity if n is None else int(n)
+        return C.store_bytes(self.codec, rows, self.dim)
+
+
+def make_store(vectors: Array, codec: str = "float32", n=None) -> VectorStore:
+    """Encode ``vectors`` under ``codec``; sq8 calibrates its per-dimension
+    scale from the first ``n`` rows (the live vertices)."""
+    vectors = jnp.asarray(vectors)
+    m = vectors.shape[1]
+    if codec == "sq8":
+        scale = C.calibrate_sq8_scale(vectors, n)
+    else:
+        scale = jnp.ones((m,), jnp.float32)
+    return VectorStore(data=C.encode(codec, vectors, scale), scale=scale,
+                       codec=codec)
+
+
+def as_store(vectors) -> VectorStore:
+    """Normalize the beam engine's ``vectors`` argument: raw float arrays
+    become exact float32 stores (identical ops), stores pass through."""
+    if isinstance(vectors, VectorStore):
+        return vectors
+    vectors = jnp.asarray(vectors)
+    return VectorStore(data=vectors,
+                       scale=jnp.ones((vectors.shape[1],), jnp.float32),
+                       codec="float32")

@@ -13,7 +13,12 @@ a :class:`repro.distributed.index.ShardedDEG` (mesh) with:
   insertion and findability" requirement of paper §1.1;
 * **continuous refinement**: ``refine_budget`` edge-optimization iterations
   (Alg. 5) run between flushes — the paper's central idea, as a background
-  serving-loop activity.
+  serving-loop activity;
+* **quantized serving**: ``codec="sq8"|"fp16"`` makes every flush traverse
+  the compressed vector store (two-stage search: exact rerank of
+  ``rerank_k`` candidates restores recall) — the paper's predictable-index-
+  size claim extended to a ~4x smaller hot store; ``memory_stats()``
+  reports the footprint.
 """
 from __future__ import annotations
 
@@ -43,9 +48,21 @@ class EngineStats:
 class QueryEngine:
     def __init__(self, index: DEGIndex, *, k: int = 10, eps: float = 0.1,
                  max_batch: int = 64, refine_budget: int = 0,
-                 beam_width: Optional[int] = None, exclude_width: int = 8):
+                 beam_width: Optional[int] = None, exclude_width: int = 8,
+                 codec: str = "float32", rerank_k: Optional[int] = None):
+        """``codec`` picks the vector store the beam traverses for THIS
+        engine ("float32" exact | "fp16" | "sq8"); compressed codecs run
+        the two-stage search (exact rerank of ``rerank_k`` candidates,
+        default ``4 * k``).  Engines over the same index may choose
+        different codecs — the index caches one store per codec."""
+        from repro.quant.codec import CODECS
+
+        if codec not in CODECS:
+            raise ValueError(f"unknown codec {codec!r} "
+                             f"(have {sorted(CODECS)})")
         self.index = index
         self.k, self.eps, self.beam_width = k, eps, beam_width
+        self.codec, self.rerank_k = codec, rerank_k
         self.max_batch = max_batch
         self.refine_budget = refine_budget
         self.stats = EngineStats()
@@ -82,6 +99,16 @@ class QueryEngine:
         self._sessions.setdefault(session, set()).add(int(vertex))
         q = self.index.vectors[int(vertex)]
         return self.submit(q, session=session, seed_vertex=int(vertex))
+
+    def memory_stats(self) -> dict:
+        """Vector-store footprint of this engine's traversal path: the
+        index-wide per-codec table plus the bytes/ratio for the codec this
+        engine actually serves with."""
+        stats = self.index.memory_stats()
+        stats["codec"] = self.codec
+        stats["serving_bytes"] = stats[f"{self.codec}_bytes"]
+        stats["serving_ratio"] = stats[f"{self.codec}_ratio"]
+        return stats
 
     def insert(self, vectors: np.ndarray, wave_size: int = 8) -> None:
         vectors = np.atleast_2d(np.asarray(vectors, np.float32))
@@ -141,9 +168,11 @@ class QueryEngine:
             elif ex:
                 excl[i, : len(ex)] = ex
         t0 = time.time()
-        res = self.index.search_batch(qs, seeds, excl, k=self.k,
-                                      eps=self.eps,
-                                      beam_width=self.beam_width)
+        res = self.index.search_batch(
+            qs, seeds, excl, k=self.k, eps=self.eps,
+            beam_width=self.beam_width,
+            quantized=None if self.codec == "float32" else self.codec,
+            rerank_k=self.rerank_k)
         ids, dists = np.asarray(res.ids), np.asarray(res.dists)
         self.stats.total_search_s += time.time() - t0
         self.stats.flushes += 1

@@ -77,6 +77,71 @@ def test_int8_compression_roundtrip():
     np.testing.assert_allclose(np.asarray(back), np.asarray(x), atol=0.02)
 
 
+def test_compressed_psum_global_scale_agreement(mesh):
+    """The pmax agreement path: shards with wildly different magnitudes
+    must agree on ONE global scale before quantizing — so every device
+    produces bitwise-identical output and the error is bounded by the
+    *global* amax, not the per-shard ones."""
+    from repro.compat import shard_map
+
+    n_dev = 4
+    rng = np.random.default_rng(11)
+    # shard 0 dominates: per-shard scales would disagree by ~1000x
+    mags = np.array([1000.0, 1.0, 0.01, 1.0], np.float32)
+    x = (mags[:, None] * rng.normal(size=(n_dev, 64))).astype(np.float32)
+
+    def f(xs):
+        return compressed_psum(xs, ("data", "model"))
+
+    g = shard_map(f, mesh=mesh, in_specs=P(("data", "model"), None),
+                  out_specs=P(("data", "model"), None), check_vma=False)
+    with set_mesh(mesh):
+        out = np.asarray(jax.jit(g)(jnp.asarray(x)))
+    # agreement: all devices computed the identical dequantized sum
+    assert (out == out[0][None, :]).all()
+    # error bound from the GLOBAL scale (amax over all shards)
+    amax = float(np.abs(x).max())
+    want = x.sum(0)
+    assert np.abs(out[0] - want).max() <= n_dev * amax / 127 + 1e-6
+    # the small shards' contribution is quantized to the global grid, not
+    # dropped: a zero-input roundtrip stays exactly zero
+    with set_mesh(mesh):
+        zero = np.asarray(jax.jit(g)(jnp.zeros((n_dev, 64), jnp.float32)))
+    assert (zero == 0).all()
+
+
+def test_compressed_grad_allreduce_tree(mesh):
+    """make_compressed_grad_allreduce: tree-structured int8 mean-allreduce
+    matches the exact per-leaf mean within the global-scale bound and
+    preserves leaf dtypes."""
+    from repro.compat import shard_map
+    from repro.distributed.collectives import make_compressed_grad_allreduce
+
+    n_dev = 4
+    rng = np.random.default_rng(12)
+    grads = {
+        "w": jnp.asarray(rng.normal(size=(n_dev, 8, 4)).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(size=(n_dev, 16)).astype(np.float32)),
+    }
+    reduce_tree = make_compressed_grad_allreduce(mesh, ("data", "model"))
+    g = shard_map(
+        reduce_tree, mesh=mesh,
+        in_specs=({k: P(("data", "model"), *([None] * (v.ndim - 1)))
+                   for k, v in grads.items()},),
+        out_specs={k: P(("data", "model"), *([None] * (v.ndim - 1)))
+                   for k, v in grads.items()},
+        check_vma=False)
+    with set_mesh(mesh):
+        out = jax.jit(g)(grads)
+    for k, v in grads.items():
+        got = np.asarray(out[k])
+        assert got.dtype == np.float32
+        want = np.asarray(v).mean(0, keepdims=True)
+        amax = float(np.abs(np.asarray(v)).max())
+        tol = amax / 127 + 1e-6          # mean divides the n_dev factor out
+        assert np.abs(got - np.broadcast_to(want, got.shape)).max() <= tol
+
+
 def test_compressed_psum_approximates_sum(mesh):
     from repro.compat import shard_map
 
@@ -115,6 +180,36 @@ def test_sharded_deg_recall_and_shard_loss(mesh):
     assert (np.asarray(ids2) % 2 == 1).all()
     rec2 = np.mean([len(set(ids2[i]) & set(gt[i])) / 5 for i in range(64)])
     assert 0.3 < rec2 < rec
+
+
+def test_sharded_deg_quantized_two_stage(mesh):
+    """SQ8 shard-local traversal + exact rerank AFTER topk_merge_allgather:
+    recall holds within 1% of the float path and the returned distances are
+    the exact float distances of the returned ids."""
+    rng = np.random.default_rng(13)
+    vecs = rng.normal(size=(600, 16)).astype(np.float32)
+    sd = build_sharded_deg(vecs, 2, DEGParams(degree=8, k_ext=16),
+                           wave_size=8)
+    qs = vecs[:48] + 0.01 * rng.normal(size=(48, 16)).astype(np.float32)
+    d2 = ((qs[:, None] - vecs[None]) ** 2).sum(-1)
+    gt = np.argsort(d2, axis=1)[:, :5]
+
+    ids_f, _ = sd.search(mesh, qs, k=5)
+    rec_f = np.mean([len(set(ids_f[i]) & set(gt[i])) / 5 for i in range(48)])
+
+    sq = sd.quantize("sq8")
+    assert sq.memory_stats()["ratio"] >= 3.5
+    ids_q, dists_q = sq.search(mesh, qs, k=5, rerank_k=20)
+    rec_q = np.mean([len(set(ids_q[i]) & set(gt[i])) / 5 for i in range(48)])
+    assert rec_q >= rec_f - 0.01
+    # exact-rerank invariant: reported distances == float distances
+    for i in range(48):
+        valid = ids_q[i] >= 0
+        np.testing.assert_allclose(
+            dists_q[i][valid], np.sqrt(d2[i][ids_q[i][valid]]), rtol=1e-5)
+    # shard loss still degrades gracefully on the quantized path
+    ids_d, _ = sq.drop_shard(0).search(mesh, qs, k=5, rerank_k=20)
+    assert (ids_d % 2 == 1).all()
 
 
 def test_lm_sharded_train_step_runs(mesh):

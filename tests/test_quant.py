@@ -1,0 +1,225 @@
+"""Quantized vector store: codecs, the fused gather_dist_q kernel, and the
+two-stage (compressed traversal + exact rerank) search."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.build import DEGParams, build_deg
+from repro.core.distances import exact_knn_batched
+from repro.core.metrics import recall_at_k
+from repro.core.search import exact_rerank
+from repro.core.graph import INVALID
+from repro.kernels.gather_dist_q import gather_dist_q, gather_dist_q_ref
+from repro.quant import (calibrate_sq8_scale, make_store, sq8_decode,
+                         sq8_encode)
+from repro.quant.store import as_store
+
+
+# ------------------------------------------------------------------ codecs --
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 60), m=st.integers(1, 40), seed=st.integers(0, 999),
+       spread=st.floats(0.1, 100.0))
+def test_sq8_reconstruction_error_bound(n, m, seed, spread):
+    """Per-dimension round-to-nearest: |deq(q(x)) - x| <= scale/2 for every
+    value inside the calibration range (and calibration covers the data)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray((spread * rng.normal(size=(n, m))).astype(np.float32))
+    scale = calibrate_sq8_scale(x)
+    back = sq8_decode(sq8_encode(x, scale), scale)
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    bound = np.asarray(scale)[None, :] / 2 + 1e-7
+    assert (err <= bound).all()
+
+
+def test_sq8_calibration_respects_n():
+    """Rows past n (capacity padding / stale slots) must not inflate scales."""
+    x = np.ones((4, 3), np.float32)
+    x[2:] = 1000.0                     # garbage rows beyond the live set
+    s_live = np.asarray(calibrate_sq8_scale(jnp.asarray(x), 2))
+    np.testing.assert_allclose(s_live, np.full(3, 1.0 / 127.0), rtol=1e-6)
+
+
+def test_store_float32_is_identity_view():
+    rng = np.random.default_rng(0)
+    v = jnp.asarray(rng.normal(size=(20, 8)).astype(np.float32))
+    store = as_store(v)
+    assert store.exact and store.codec == "float32"
+    ids = jnp.asarray([[1, 3], [5, 7]], jnp.int32)
+    np.testing.assert_array_equal(np.asarray(store.decode(ids)),
+                                  np.asarray(v)[np.asarray(ids)])
+
+
+def test_store_memory_bytes():
+    rng = np.random.default_rng(1)
+    v = rng.normal(size=(100, 32)).astype(np.float32)
+    f32 = make_store(v, "float32").memory_bytes(100)
+    f16 = make_store(v, "fp16").memory_bytes(100)
+    sq8 = make_store(v, "sq8").memory_bytes(100)
+    assert f32 == 100 * 32 * 4
+    assert f16 == f32 // 2
+    assert sq8 == 100 * 32 + 32 * 4            # codes + shared scale vector
+    assert f32 / sq8 >= 3.5
+
+
+def test_make_store_rejects_unknown_codec():
+    with pytest.raises(ValueError, match="unknown codec"):
+        make_store(np.zeros((4, 2), np.float32), "pq4")
+
+
+# ------------------------------------------------------- gather_dist_q ------
+@pytest.mark.parametrize("N,m,B,d", [
+    (256, 128, 4, 16),
+    (100, 33, 2, 7),       # unaligned
+    (1024, 128, 8, 30),    # DEG degree 30
+])
+def test_gather_dist_q_jnp_path_matches_ref(N, m, B, d):
+    """The store's jnp dequant+pair path vs the kernel oracle: <= 1e-5."""
+    rng = np.random.default_rng(N + m)
+    v = rng.normal(size=(N, m)).astype(np.float32)
+    q = jnp.asarray(rng.normal(size=(B, m)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, N, size=(B, d)), jnp.int32)
+    store = make_store(v, "sq8")
+    got = store.neighbor_distances(q, ids, "l2", backend="jnp")
+    ref = gather_dist_q_ref(store.data, store.scale, ids, q)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("N,m,B,d", [
+    (256, 128, 4, 16),
+    (100, 33, 2, 7),
+    (512, 48, 8, 30),
+])
+def test_gather_dist_q_pallas_matches_jnp_exactly(N, m, B, d):
+    """Kernel (interpret mode) vs the jnp oracle over the SAME 128-lane
+    padded operands: bitwise identical floats.  (Padding itself perturbs
+    XLA's reduction grouping by ~1e-6 — the <=1e-5 test above covers the
+    unpadded comparison.)"""
+    rng = np.random.default_rng(3 * N + m)
+    v = rng.normal(size=(N, m)).astype(np.float32)
+    q = jnp.asarray(rng.normal(size=(B, m)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, N, size=(B, d)), jnp.int32)
+    store = make_store(v, "sq8")
+    pall = gather_dist_q(store.data, store.scale, ids, q, interpret=True)
+    pad = (-m) % 128                       # the ops-layer padding, verbatim
+    oracle = gather_dist_q_ref(
+        jnp.pad(store.data, ((0, 0), (0, pad))),
+        jnp.pad(store.scale, (0, pad)),
+        ids, jnp.pad(q, ((0, 0), (0, pad))))
+    np.testing.assert_array_equal(np.asarray(pall), np.asarray(oracle))
+
+
+def test_gather_dist_q_clamps_invalid():
+    rng = np.random.default_rng(5)
+    store = make_store(rng.normal(size=(32, 16)).astype(np.float32), "sq8")
+    q = jnp.asarray(rng.normal(size=(2, 16)).astype(np.float32))
+    ids = jnp.asarray(np.array([[0, -1, 5], [31, -1, -1]]), jnp.int32)
+    out = np.asarray(gather_dist_q(store.data, store.scale, ids, q,
+                                   interpret=True))
+    assert np.isfinite(out).all()
+
+
+def test_gather_dist_q_squared_mode():
+    rng = np.random.default_rng(6)
+    store = make_store(rng.normal(size=(64, 24)).astype(np.float32), "sq8")
+    q = jnp.asarray(rng.normal(size=(3, 24)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, 64, size=(3, 8)), jnp.int32)
+    d2 = gather_dist_q(store.data, store.scale, ids, q, squared=True,
+                       interpret=True)
+    d = gather_dist_q(store.data, store.scale, ids, q, interpret=True)
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(d) ** 2,
+                               rtol=1e-4, atol=1e-5)
+
+
+# ----------------------------------------------------------- two-stage ------
+@pytest.fixture(scope="module")
+def small_index():
+    rng = np.random.default_rng(0)
+    vecs = rng.normal(size=(700, 16)).astype(np.float32)
+    idx = build_deg(vecs, DEGParams(degree=8, k_ext=16), wave_size=8)
+    qs = vecs[:48] + 0.01 * rng.normal(size=(48, 16)).astype(np.float32)
+    _, gt = exact_knn_batched(qs, vecs, 10)
+    return idx, qs, gt
+
+
+def test_exact_rerank_orders_by_true_distance():
+    rng = np.random.default_rng(7)
+    vecs = jnp.asarray(rng.normal(size=(50, 8)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(2, 8)).astype(np.float32))
+    cand = jnp.asarray(np.array([[4, 9, INVALID, 17, 3],
+                                 [1, INVALID, INVALID, 2, 0]]), jnp.int32)
+    ids, d = exact_rerank(vecs, q, cand, k=3)
+    full = np.linalg.norm(np.asarray(q)[:, None] - np.asarray(vecs)[None],
+                          axis=2)
+    for b, lane in enumerate(np.asarray(cand)):
+        valid = [c for c in lane if c != INVALID]
+        want = sorted(valid, key=lambda c: full[b, c])[:3]
+        got = [int(x) for x in np.asarray(ids)[b] if x != INVALID]
+        assert got == want
+    # reported distances are the exact float distances
+    got_d = np.take_along_axis(full, np.asarray(ids).clip(0), axis=1)
+    finite = np.asarray(d) < np.inf
+    np.testing.assert_allclose(np.asarray(d)[finite], got_d[finite],
+                               rtol=1e-6)
+
+
+def test_two_stage_recall_within_1pct(small_index):
+    idx, qs, gt = small_index
+    base = recall_at_k(np.asarray(idx.search_batch(qs, k=10).ids), gt)
+    sq8 = recall_at_k(
+        np.asarray(idx.search_batch(qs, k=10, quantized="sq8",
+                                    rerank_k=40).ids), gt)
+    assert sq8 >= base - 0.01
+    assert idx.memory_stats()["sq8_ratio"] >= 3.5
+
+
+@settings(max_examples=5, deadline=None)
+@given(rk_lo=st.integers(10, 20), rk_step=st.integers(1, 30))
+def test_two_stage_recall_monotone_in_rerank_k(small_index, rk_lo, rk_step):
+    """Exact rerank over a wider (superset) candidate list can only help:
+    recall@10 is monotone in rerank_k (ties have measure zero here).
+    beam_width is pinned >= every rerank_k so both runs share one traversal
+    and the candidate lists really nest (without it a larger rerank_k
+    widens the beam and the property need not hold)."""
+    idx, qs, gt = small_index
+    rk_hi = rk_lo + rk_step
+    lo = recall_at_k(np.asarray(
+        idx.search_batch(qs, k=10, quantized="sq8", rerank_k=rk_lo,
+                         beam_width=64).ids), gt)
+    hi = recall_at_k(np.asarray(
+        idx.search_batch(qs, k=10, quantized="sq8", rerank_k=rk_hi,
+                         beam_width=64).ids), gt)
+    assert hi >= lo - 1e-9
+
+
+def test_quantized_store_invalidated_on_insert(small_index):
+    rng = np.random.default_rng(9)
+    vecs = rng.normal(size=(100, 8)).astype(np.float32)
+    idx = build_deg(vecs, DEGParams(degree=4, k_ext=8), wave_size=8)
+    s1 = idx.store_for("sq8")
+    new = (5.0 + rng.normal(size=(1, 8))).astype(np.float32)  # outlier
+    idx.add(new)
+    s2 = idx.store_for("sq8")
+    assert s2 is not s1
+    # the outlier must be representable after re-calibration
+    back = np.asarray(s2.decode(jnp.asarray([[idx.n - 1]], jnp.int32)))[0, 0]
+    np.testing.assert_allclose(back, new[0], atol=float(s2.scale.max()))
+
+
+def test_rerank_k_smaller_than_k_rejected(small_index):
+    idx, qs, _ = small_index
+    from repro.core.search import range_search
+
+    with pytest.raises(ValueError, match="rerank_k"):
+        range_search(idx.frozen(), idx.store_for("sq8"),
+                     jnp.asarray(qs), jnp.zeros((48, 1), jnp.int32),
+                     k=10, rerank_k=5, exact_vectors=idx._dev_vectors)
+
+
+def test_engine_rejects_unknown_codec(small_index):
+    idx, _, _ = small_index
+    from repro.serving.engine import QueryEngine
+
+    with pytest.raises(ValueError, match="unknown codec"):
+        QueryEngine(idx, codec="pq4")
