@@ -18,6 +18,8 @@ VMEM_BYTES = 96 * 1024 * 1024     # v5e VMEM per core (~128MiB minus reserves)
 def run(seed: int = 0) -> dict:
     import jax.numpy as jnp
 
+    from repro.analysis.roofline import kernel_tile_costs
+
     rng = np.random.default_rng(seed)
     out = {}
 
@@ -52,10 +54,10 @@ def run(seed: int = 0) -> dict:
     want = gd_ref.gather_dist_ref(jnp.asarray(db), jnp.asarray(nbr),
                                   jnp.asarray(qs[:B]))
     ok = bool(np.allclose(np.asarray(got), np.asarray(want), atol=1e-3))
-    tile_bytes = (d * m + m + d) * 4          # rows + query + out per lane
+    tc = kernel_tile_costs("gather_dist", d=d, m=m)
     emit("kernel_gather_dist", allclose=ok, block_q=1, block_n=d,
-         tile_bytes=tile_bytes, tile_flops=2 * d * m,
-         arith_intensity=2 * d * m / tile_bytes, fits_vmem=True)
+         tile_bytes=tc["hbm_bytes"], tile_flops=tc["flops"],
+         arith_intensity=tc["flops"] / tc["hbm_bytes"], fits_vmem=True)
     out["gather_dist"] = ok
 
     # --- gather_dist_q: int8 gather + VMEM dequant + distance --------------
@@ -69,13 +71,35 @@ def run(seed: int = 0) -> dict:
     want = gdq_ref.gather_dist_q_ref(store.data, store.scale,
                                      jnp.asarray(nbr), jnp.asarray(qs[:B]))
     ok = bool(np.allclose(np.asarray(got), np.asarray(want), atol=1e-3))
-    tile_bytes = d * m * 1 + m * 4 + m * 4 + d * 4  # int8 rows+scale+q+out
-    float_bytes = (d * m + m + d) * 4               # the gather_dist tile
+    tc = kernel_tile_costs("gather_dist_q", d=d, m=m)
+    float_bytes = kernel_tile_costs("gather_dist", d=d, m=m)["hbm_bytes"]
     emit("kernel_gather_dist_q", allclose=ok, block_q=1, block_n=d,
-         tile_bytes=tile_bytes, tile_flops=3 * d * m,
-         arith_intensity=3 * d * m / tile_bytes, fits_vmem=True,
-         gather_bytes_vs_float=float_bytes / tile_bytes)
+         tile_bytes=tc["hbm_bytes"], tile_flops=tc["flops"],
+         arith_intensity=tc["flops"] / tc["hbm_bytes"], fits_vmem=True,
+         gather_bytes_vs_float=float_bytes / tc["hbm_bytes"])
     out["gather_dist_q"] = ok
+
+    # --- mrng_occlusion: gather + distance + Alg. 2 lune test --------------
+    from repro.kernels.mrng_occlusion import ops as mo_ops
+    from repro.kernels.mrng_occlusion import ref as mo_ref
+
+    K = 16
+    nbr3 = jnp.asarray(rng.integers(0, N, size=(B, K, d)), jnp.int32)
+    cd = jnp.asarray(rng.uniform(0.5, 8.0, size=(B, K)).astype(np.float32))
+    w3 = jnp.asarray(rng.uniform(0.5, 8.0,
+                                 size=(B, K, d)).astype(np.float32))
+    got_d, got_o = mo_ops.mrng_occlusion(jnp.asarray(db), nbr3,
+                                         jnp.asarray(qs[:B]), cd, w3,
+                                         backend="pallas")
+    want_d, want_o = mo_ref.mrng_occlusion_ref(jnp.asarray(db), nbr3,
+                                               jnp.asarray(qs[:B]), cd, w3)
+    ok = (bool(np.allclose(np.asarray(got_d), np.asarray(want_d), atol=1e-3))
+          and bool((np.asarray(got_o) == np.asarray(want_o)).all()))
+    tc = kernel_tile_costs("mrng_occlusion", K=K, d=d, m=m)
+    emit("kernel_mrng_occlusion", allclose=ok, block_q=1, block_n=K * d,
+         tile_bytes=tc["hbm_bytes"], tile_flops=tc["flops"],
+         arith_intensity=tc["flops"] / tc["hbm_bytes"], fits_vmem=True)
+    out["mrng_occlusion"] = ok
 
     # --- bag_lookup: embedding bag gather-reduce ---------------------------
     from repro.kernels.bag_lookup import ops as bl_ops

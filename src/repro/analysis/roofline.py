@@ -152,6 +152,61 @@ def recsys_model_flops(cfg, kind: str, batch: int,
     return mult * batch * per_ex
 
 
+# ---------------------------------------------------------------------------
+# structural Pallas-kernel tiles: HBM bytes + flops per tile at BlockSpec
+# granularity — shared by benchmarks/kernels.py and the §Roofline report
+# ---------------------------------------------------------------------------
+# dims at the production-search cell scale (launch/cells.py DEG_CELLS):
+# degree 30, dim 128, beam 64, k_ext 60; int8 codes for the sq8 store.
+KERNEL_DIMS = {
+    "gather_dist": dict(d=30, m=128),
+    "gather_dist_q": dict(d=30, m=128),
+    "beam_merge": dict(L=64, d=30),
+    "mrng_occlusion": dict(K=60, d=30, m=128),
+}
+
+
+def kernel_tile_costs(name: str, **dims) -> dict:
+    """Structural per-tile costs of the named Pallas kernel.
+
+    * ``gather_dist``     — d float32 rows + query + out;
+    * ``gather_dist_q``   — d int8 code rows + f32 scale/query/out (the
+      ~4x gather-traffic cut vs gather_dist);
+    * ``beam_merge``      — the (L + d) bitonic partial merge over 4
+      channels (dists f32, ids i32, checked/excluded bytes), in + out;
+    * ``mrng_occlusion``  — K*d gathered f32 rows + query + candidate
+      dists + neighbor weights in, distances + occlusion mask out; one
+      distance (2m) plus the lune compare per gathered row.
+    """
+    if name == "gather_dist":
+        d, m = dims["d"], dims["m"]
+        return {"hbm_bytes": (d * m + m + d) * 4, "flops": 2.0 * d * m}
+    if name == "gather_dist_q":
+        d, m = dims["d"], dims["m"]
+        return {"hbm_bytes": d * m + (m + m + d) * 4,
+                "flops": 3.0 * d * m}
+    if name == "beam_merge":
+        L, d = dims["L"], dims["d"]
+        n = L + d
+        passes = max(1, int(np.ceil(np.log2(max(n, 2)))))
+        return {"hbm_bytes": 2 * n * (4 + 4 + 1 + 1),
+                "flops": float(n * passes)}
+    if name == "mrng_occlusion":
+        K, d, m = dims["K"], dims["d"], dims["m"]
+        # f32: gathered rows + query + cand dists + weights + both outputs;
+        # plus the K*d int32 neighbor-id array driving the gather
+        return {"hbm_bytes": (K * d * m + m + K + 3 * K * d) * 4 + K * d * 4,
+                "flops": K * d * (2.0 * m + 2.0)}
+    raise ValueError(f"unknown kernel {name!r}; have {sorted(KERNEL_DIMS)}")
+
+
+def kernel_roofline(name: str, **dims) -> Roofline:
+    """Single-tile roofline of a Pallas kernel (no collectives)."""
+    c = kernel_tile_costs(name, **(dims or KERNEL_DIMS[name]))
+    return from_costs(c["flops"], c["hbm_bytes"], 0.0,
+                      model_flops=c["flops"])
+
+
 def deg_model_flops(meta: dict, avg_hops: float) -> float:
     """Per-query useful work: hops x (d neighbor distances) + seed + merge.
     One distance = 2m flops (paper's SIMD L2 analogue)."""

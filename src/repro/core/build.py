@@ -27,7 +27,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .distances import get_metric
-from .graph import DEGraph, GraphBuilder, INVALID, complete_graph
+from .graph import (DEGraph, GraphBuilder, INVALID, complete_graph,
+                    pow2_bucket)
 from .mrng import check_mrng_candidate
 from .search import SearchResult, medoid_seed, range_search
 
@@ -72,6 +73,15 @@ class DEGParams:
     # optimization").  Default off; the faithful knob remains available.
     optimize_new: bool = False
     metric: str = "l2"
+    # Alg. 3 neighbor selection as one wave-batched device program (see
+    # core/extend.py); False forces the per-vertex host path (the pre-PR
+    # behavior, kept as the fallback and the benchmark baseline).
+    device_extend: bool = True
+    # selection block size within an insert wave: the device program
+    # selects this many vertices per call against the freshly synced graph
+    # (dirty-row scatter), bounding selection staleness — and wave
+    # conflicts — to the block instead of the whole wave.
+    extend_block: int = 16
 
     def __post_init__(self):
         if self.k_ext < self.degree:
@@ -101,6 +111,9 @@ class DEGIndex:
         # whenever the indexed vector set changes (post-training recipe:
         # re-encode + re-calibrate from the live rows, never retrain)
         self._stores: dict = {}
+        # per-stage wall time of _insert_wave (candidate search vs vertex
+        # extension) — benchmarks/build_cost.py reports both
+        self.build_stats = {"search_s": 0.0, "extend_s": 0.0, "vertices": 0}
 
     # -- sizes -------------------------------------------------------------
     @property
@@ -143,7 +156,10 @@ class DEGIndex:
         return self._medoid
 
     def frozen(self) -> DEGraph:
-        return self.builder.freeze()
+        """The device twin consumed transiently by every search call —
+        valid until the next graph mutation + sync (donated buffers); use
+        ``builder.freeze()`` for a snapshot that must survive mutations."""
+        return self.builder.device_graph()
 
     # -- insertion -----------------------------------------------------------
     def add(self, points: np.ndarray, wave_size: int = 1) -> None:
@@ -177,43 +193,130 @@ class DEGIndex:
             i += w
 
     def _insert_wave(self, pts: np.ndarray) -> None:
+        import time
+
         W = pts.shape[0]
         start = self.builder.n
         self.vectors[start : start + W] = pts
         self._put_rows(pts, start)
         # one batched candidate search for the whole wave (pre-wave graph),
         # through the same engine program as every other consumer
+        t0 = time.perf_counter()
         seeds = np.full((W, 1), self._entry_vertex(), dtype=np.int32)
         res = self.search_batch(pts, seeds, k=self.params.k_ext,
                                 eps=self.params.eps_ext)
         ids = np.asarray(res.ids)
         dists = np.asarray(res.dists)
-        for j in range(W):
-            v = self.builder.add_vertex()
-            assert v == start + j
-            new_edges = self._extend_vertex(v, pts[j], ids[j], dists[j])
-            if self.params.optimize_new:
-                from .optimize import optimize_edge
+        t1 = time.perf_counter()
+        use_device = self.params.device_extend
+        block = max(int(self.params.extend_block), 1) if use_device else W
+        for j0 in range(0, W, block):
+            j1 = min(j0 + block, W)
+            vs = [self.builder.add_vertex() for _ in range(j0, j1)]
+            assert vs[0] == start + j0
+            if use_device:
+                # Alg. 3 selection for a block of vertices in ONE device
+                # program against the freshly synced graph (the dirty-row
+                # scatter in device_graph picks up the previous block's
+                # edge swaps), then ONE vectorized application of every
+                # selection that survived intra-block conflicts
+                # (first-lane-wins, matching the host application order).
+                from .extend import extend_wave
 
-                in_s = set(int(x) for x in ids[j] if x != INVALID)
-                for u in new_edges:
-                    if u not in in_s and self.builder.has_edge(v, u):
-                        # Alg. 3 line 17: replace the far neighbors of the new
-                        # vertex.  Alg. 4's search finds a new neighbor for its
-                        # *second* argument, so the new vertex goes second
-                        # (the paper's prose reading; measured better than the
-                        # literal (v, u) order — see EXPERIMENTS.md).
-                        optimize_edge(self, u, v,
-                                      i_opt=self.params.i_opt,
-                                      k_opt=self.params.k_opt,
-                                      eps_opt=self.params.eps_opt)
+                sel_ids, sel_d, ok = extend_wave(
+                    self, pts[j0:j1], ids[j0:j1], dists[j0:j1], start + j0)
+                self._apply_extension_block(start + j0, sel_ids, sel_d, ok)
+            for j in range(j0, j1):
+                v = start + j
+                # warm start from the LIVE row: a host completion of an
+                # earlier lane may have stolen (or added) edges of this
+                # vertex since the bulk apply
+                live = self.builder.neighbors(v)
+                if len(live) == self.params.degree:
+                    new_edges = [int(x) for x in live]
+                else:
+                    new_edges = self._extend_vertex(
+                        v, pts[j], ids[j], dists[j],
+                        [int(x) for x in live],
+                        [float(x) for x in
+                         self.builder.neighbor_weights(v)])
+                self._post_insert(v, new_edges, ids[j])
+        self.build_stats["search_s"] += t1 - t0
+        self.build_stats["extend_s"] += time.perf_counter() - t1
+        self.build_stats["vertices"] += W
+
+    def _post_insert(self, v: int, new_edges, cand_ids) -> None:
+        if not self.params.optimize_new:
+            return
+        from .optimize import optimize_edge
+
+        in_s = set(int(x) for x in cand_ids if x != INVALID)
+        for u in new_edges:
+            if u not in in_s and self.builder.has_edge(v, u):
+                # Alg. 3 line 17: replace the far neighbors of the new
+                # vertex.  Alg. 4's search finds a new neighbor for its
+                # *second* argument, so the new vertex goes second
+                # (the paper's prose reading; measured better than the
+                # literal (v, u) order — see EXPERIMENTS.md).
+                optimize_edge(self, u, v,
+                              i_opt=self.params.i_opt,
+                              k_opt=self.params.k_opt,
+                              eps_opt=self.params.eps_opt)
 
     def _entry_vertex(self) -> int:
         return int(self._rng.integers(0, max(self.builder.n, 1)))
 
+    def _apply_extension_block(self, start_v: int, sel_ids: np.ndarray,
+                               sel_d: np.ndarray, ok: np.ndarray) -> None:
+        """Apply a block of device-selected neighborhoods in one vectorized
+        pass of Alg. 3 edge swaps.
+
+        An edge may be surrendered by several lanes of the block (they all
+        selected against the same snapshot); the first lane wins — exactly
+        the host application order — via a lane-major first-occurrence
+        dedup, and ``GraphBuilder.replace_edges`` skips anything else that
+        is stale.  Lanes left short of ``degree`` edges are completed
+        through the host path by the caller (off the live rows)."""
+        b = self.builder
+        Wb, D = sel_ids.shape
+        P = D // 2
+        v_arr = start_v + np.arange(Wb)
+        lane_ok = np.asarray(ok, bool).copy()
+        # structural sanity (the device program guarantees these; cheap)
+        lane_ok &= ((sel_ids >= 0).all(axis=1)
+                    & (sel_ids < v_arr[:, None]).all(axis=1))
+        srt = np.sort(sel_ids, axis=1)
+        lane_ok &= (srt[:, 1:] != srt[:, :-1]).all(axis=1)
+        bs, ns = sel_ids[:, 0::2], sel_ids[:, 1::2]          # (Wb, P)
+        lo = np.minimum(bs, ns).astype(np.int64)
+        hi = np.maximum(bs, ns).astype(np.int64)
+        key = lo * b.capacity + hi
+        # failed lanes claim nothing: give them unique sentinel keys
+        sentinel = -1 - (np.arange(Wb, dtype=np.int64)[:, None] * P
+                         + np.arange(P, dtype=np.int64)[None, :])
+        key = np.where(lane_ok[:, None], key, sentinel)
+        _, first = np.unique(key.reshape(-1), return_index=True)
+        keep = np.zeros(key.size, dtype=bool)
+        keep[first] = True
+        keep = keep.reshape(Wb, P) & lane_ok[:, None]
+        k = keep.reshape(-1)
+        # v-row slots stay at the pair's original position (2t, 2t+1);
+        # dropped pairs leave INVALID holes the host completion refills
+        t_idx = np.broadcast_to(np.arange(P), (Wb, P))
+        b.replace_edges(
+            np.broadcast_to(v_arr[:, None], (Wb, P)).reshape(-1)[k],
+            (2 * t_idx).reshape(-1)[k].astype(np.int64),
+            bs.reshape(-1)[k], ns.reshape(-1)[k],
+            sel_d[:, 0::2].reshape(-1)[k], sel_d[:, 1::2].reshape(-1)[k])
+
     # -- Alg. 3 core: select d/2 (b, n) pairs -------------------------------
     def _extend_vertex(self, v: int, vec: np.ndarray, cand_ids: np.ndarray,
-                       cand_dists: np.ndarray) -> list[int]:
+                       cand_dists: np.ndarray,
+                       U0: Optional[list[int]] = None,
+                       U0_d: Optional[list[float]] = None) -> list[int]:
+        """Host Alg. 3 selection (the pre-device reference path).  ``U0`` /
+        ``U0_d`` optionally seed the selected set with already-applied
+        pairs (device-wave completion after conflicts)."""
         b = self.builder
         d = b.degree
         metric = self.params.metric
@@ -221,8 +324,9 @@ class DEGIndex:
             (int(c), float(x)) for c, x in zip(cand_ids, cand_dists)
             if c != INVALID and c < v
         ]
-        U: list[int] = []
-        U_d: list[float] = []
+        U: list[int] = list(U0 or [])
+        U_d: list[float] = list(U0_d or [])
+        n_pre = len(U)            # warm-start edges already in the graph
 
         def select_n(bb: int, b_dist: float) -> Optional[tuple[int, float]]:
             nbrs = [int(x) for x in b.neighbors(bb) if int(x) not in U]
@@ -276,14 +380,16 @@ class DEGIndex:
                 if exhausted_fallbacks > 3:
                     raise RuntimeError(
                         f"cannot complete neighborhood for vertex {v}")
-                cands = self._exact_candidates(vec, exclude=set(U) | {v})
-        for u, w in zip(U, U_d):
+                cands = self._exact_candidates(vec, set(U), v)
+        for u, w in zip(U[n_pre:], U_d[n_pre:]):
             b.add_edge(v, u, w)
         return U
 
-    def _exact_candidates(self, vec, exclude):
-        n = self.builder.n - 1  # the vertex being inserted is already counted
-        ds = np_pair_dist(self.params.metric, vec, self.vectors[:n])
+    def _exact_candidates(self, vec, exclude, v):
+        """Widened pool for an exhausted extension: every vertex below the
+        one being inserted — same-block vertices above ``v`` are added but
+        not yet extended, so ``builder.n`` is not the right bound."""
+        ds = np_pair_dist(self.params.metric, vec, self.vectors[:v])
         order = np.argsort(ds)
         return [(int(i), float(ds[i])) for i in order if int(i) not in exclude]
 
@@ -435,10 +541,7 @@ class DEGIndex:
         seeds -> host (B, k) ids/dists.  Lanes are padded to a power of two
         so the repeated Alg.-5 sweeps reuse a handful of jit entries."""
         B = query_vecs.shape[0]
-        Bp = 1
-        while Bp < B:
-            Bp *= 2
-        Bp = max(Bp, 8)
+        Bp = pow2_bucket(B, floor=8)
         q = np.zeros((Bp, self.dim), np.float32)
         q[:B] = query_vecs
         s = np.full((Bp, seed_ids.shape[1]), INVALID, np.int32)

@@ -32,7 +32,7 @@ from typing import Iterable, Optional, Sequence
 import numpy as np
 
 from .build import DEGIndex, np_pair_dist
-from .graph import INVALID, GraphBuilder
+from .graph import GraphBuilder
 
 
 def _greedy_matching(cands: list, pairs_needed: int,
@@ -153,8 +153,7 @@ def delete_vertex(index: DEGIndex, v: int, *, rng=None,
         index._put_rows(index.vectors[v][None], v)
         for u, w in zip(last_nbrs, last_ws):
             b.add_edge(v, u if u != v else last, w)
-    b.adjacency[last] = INVALID
-    b.weights[last] = 0.0
+    b.clear_vertex(last)           # marks the row dirty for the device sync
     b.n -= 1
 
     if refine_after:

@@ -1,0 +1,226 @@
+"""Device-resident construction programs (paper Alg. 2/3 + the Alg. 5 hot
+decisions).
+
+Host-side graph *surgery* stays sequential numpy (``GraphBuilder``), but the
+hot inner decisions of construction — which neighbors a new vertex takes
+(Alg. 3 with scheme A-D selection and Alg. 2 occlusion checks), which edges
+of a refined vertex are MRNG-conform, and which swap Alg. 4's first search
+proposes — are pure functions of a graph snapshot.  This module implements
+them as jitted, wave-batched device programs over the
+:meth:`GraphBuilder.device_graph` buffers, all sharing the fused
+``kernels/mrng_occlusion`` gather+distance+lune-test primitive:
+
+* :func:`extend_wave_device` — Alg. 3 steps 4-16 for a whole insert wave in
+  one fixed-shape call: candidate neighbor rows are gathered, the occlusion
+  matrix is computed once, and the sequential (b, n) pair selection runs as
+  a ``fori_loop`` of ``d/2`` masked steps.  Bit-faithful to the host
+  ``_extend_vertex`` given the same snapshot: candidate eligibility under
+  Alg. 2 is *monotone* (the selected set U only grows, and rows of
+  unselected candidates never change), so "repeatedly take the first
+  eligible candidate" reproduces the host's pass-based order, including the
+  one-way phase-2 transition that drops the occlusion check (Alg. 3 line
+  14).  Lanes that exhaust their candidates report ``ok=False`` and fall
+  back to the host path (which widens with exact candidates).
+
+* :func:`mrng_conform_batch` — Alg. 2 for every edge of a batch of existing
+  vertices (the Alg. 5 agenda test) in one call.
+
+* :func:`propose_swaps` — Alg. 4 step (2): the best
+  ``gain - d(v2, s) + w(s, n)`` swap over all (search result s, neighbor n)
+  pairs, for a whole chunk of edge tasks in one call.
+
+Float caveat, shared by all three: distances the host path reads back from
+stored edge weights are *recomputed* on device (same float32 formula, so
+divergence is confined to exact lune/argmax boundary ties), and the gain
+accumulation runs in float32 instead of host float64.  Structural decisions
+are always re-validated against the live builder before edges are written.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.mrng_occlusion import ops as occ_ops
+
+from .graph import INVALID, pow2_bucket
+
+_INF = jnp.inf
+
+
+# ---------------------------------------------------------------------------
+# Alg. 3: wave-batched vertex extension
+# ---------------------------------------------------------------------------
+@functools.partial(
+    jax.jit, static_argnames=("scheme", "rng_checks", "metric", "backend"))
+def extend_wave_device(adjacency: jax.Array, weights: jax.Array,
+                       vectors: jax.Array, cand_ids: jax.Array,
+                       cand_dists: jax.Array, queries: jax.Array,
+                       v_ids: jax.Array, *, scheme: str = "C",
+                       rng_checks: bool = True, metric: str = "l2",
+                       backend: str = "jnp"):
+    """Select the d neighbors of W new vertices in one device call.
+
+    cand_ids/cand_dists (W, K): each lane's Alg. 3 candidate search result
+    (ascending, INVALID-padded); queries (W, m): the new points; v_ids (W,):
+    the ids the new vertices will take.  Returns ``(sel_ids (W, d),
+    sel_dists (W, d), ok (W,))`` — slot 2t holds the t-th selected candidate
+    b, slot 2t+1 its surrendered neighbor n (the edge (b, n) is replaced by
+    (v, b) and (v, n)).  ``ok=False`` lanes ran out of candidates and must
+    use the host fallback.
+    """
+    W, K = cand_ids.shape
+    D = adjacency.shape[1]
+    valid = (cand_ids != INVALID) & (cand_ids < v_ids[:, None])
+    safe_cand = jnp.where(valid, cand_ids, 0)
+    nbr_ids = jnp.where(valid[:, :, None], adjacency[safe_cand], INVALID)
+    nbr_w = jnp.where(valid[:, :, None], weights[safe_cand], 0.0)
+    nbr_dist, occl = occ_ops.mrng_occlusion(
+        vectors, jnp.where(nbr_ids == INVALID, 0, nbr_ids), queries,
+        cand_dists, nbr_w, metric=metric, backend=backend)
+    nbr_valid = nbr_ids != INVALID
+    occl = occl & nbr_valid
+    nbr_dist = jnp.where(nbr_valid, nbr_dist, _INF)
+    lane = jnp.arange(W)
+
+    def step(t, state):
+        U_ids, U_d, skip, fail = state
+        cand_in_U = ((cand_ids[:, :, None] == U_ids[:, None, :]).any(-1)
+                     & valid)
+        nbr_in_U = ((nbr_ids[:, :, :, None]
+                     == U_ids[:, None, None, :]).any(-1) & nbr_valid)
+        blocked = (occl & nbr_in_U).any(-1)                 # Alg. 2 over U
+        # surrendered edges need no extra mask: both endpoints of a taken
+        # (b, n) pair joined U, so ~nbr_in_U already hides those slots
+        avail = nbr_valid & ~nbr_in_U
+        elig_base = valid & ~cand_in_U & avail.any(-1)
+        elig_mrng = elig_base & ~blocked
+        skip = skip | ~elig_mrng.any(-1)                    # phase 2 latch
+        elig = jnp.where(skip[:, None], elig_base, elig_mrng)
+        any_elig = elig.any(-1)
+        i_sel = jnp.argmax(elig, axis=1)                    # first eligible
+        row_avail = avail[lane, i_sel]
+        row_w = nbr_w[lane, i_sel]
+        row_nd = nbr_dist[lane, i_sel]
+        if scheme == "C":
+            j_sel = jnp.argmax(jnp.where(row_avail, row_w, -_INF), axis=1)
+        elif scheme == "B":
+            j_sel = jnp.argmin(jnp.where(row_avail, row_w, _INF), axis=1)
+        elif scheme == "A":
+            j_sel = jnp.argmin(jnp.where(row_avail, row_nd, _INF), axis=1)
+        elif scheme == "D":
+            j_sel = jnp.argmin(jnp.where(row_avail, row_nd - row_w, _INF),
+                               axis=1)
+        else:
+            raise ValueError(f"unknown selection scheme {scheme!r}")
+        b_sel = cand_ids[lane, i_sel]
+        b_d = cand_dists[lane, i_sel]
+        n_sel = nbr_ids[lane, i_sel, j_sel]
+        n_d = nbr_dist[lane, i_sel, j_sel]
+        do = any_elig & ~fail
+        U_ids = U_ids.at[:, 2 * t].set(
+            jnp.where(do, b_sel, U_ids[:, 2 * t]))
+        U_ids = U_ids.at[:, 2 * t + 1].set(
+            jnp.where(do, n_sel, U_ids[:, 2 * t + 1]))
+        U_d = U_d.at[:, 2 * t].set(jnp.where(do, b_d, U_d[:, 2 * t]))
+        U_d = U_d.at[:, 2 * t + 1].set(
+            jnp.where(do, n_d, U_d[:, 2 * t + 1]))
+        fail = fail | ~any_elig
+        return U_ids, U_d, skip, fail
+
+    state0 = (
+        jnp.full((W, D), INVALID, jnp.int32),
+        jnp.full((W, D), _INF, jnp.float32),
+        jnp.full((W,), not rng_checks),
+        jnp.zeros((W,), bool),
+    )
+    U_ids, U_d, _, fail = jax.lax.fori_loop(0, D // 2, step, state0)
+    return U_ids, U_d, ~fail
+
+
+def extend_wave(index, pts: np.ndarray, cand_ids: np.ndarray,
+                cand_dists: np.ndarray, start: int, *,
+                backend: str = "jnp"):
+    """Host driver for :func:`extend_wave_device`: syncs the device graph,
+    pads the wave to a power-of-two lane count (a handful of jit entries
+    across all waves of a build), returns numpy selections."""
+    W = pts.shape[0]
+    Wp = pow2_bucket(W, floor=4)
+    K = cand_ids.shape[1]
+    c_ids = np.full((Wp, K), INVALID, np.int32)
+    c_ids[:W] = cand_ids
+    c_d = np.full((Wp, K), np.inf, np.float32)
+    c_d[:W] = cand_dists
+    q = np.zeros((Wp, pts.shape[1]), np.float32)
+    q[:W] = pts
+    v_ids = np.zeros((Wp,), np.int32)
+    v_ids[:W] = start + np.arange(W)
+    g = index.builder.device_graph()
+    sel_ids, sel_d, ok = extend_wave_device(
+        g.adjacency, g.weights, index._dev_vectors, jnp.asarray(c_ids),
+        jnp.asarray(c_d), jnp.asarray(q), jnp.asarray(v_ids),
+        scheme=index.params.scheme, rng_checks=index.params.rng_checks,
+        metric=index.params.metric, backend=backend)
+    return (np.asarray(sel_ids)[:W], np.asarray(sel_d)[:W],
+            np.asarray(ok)[:W])
+
+
+# ---------------------------------------------------------------------------
+# Alg. 5: batched conformity + first-swap proposals
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("metric", "backend"))
+def mrng_conform_batch(adjacency: jax.Array, weights: jax.Array,
+                       vectors: jax.Array, v_ids: jax.Array, *,
+                       metric: str = "l2", backend: str = "jnp"):
+    """Alg. 2 for every edge of a batch of vertices: (C,) ids -> (C, d)
+    bool, True where the edge in that slot is MRNG-conform (INVALID slots
+    are True).  The batched twin of ``mrng.mrng_conform_mask``."""
+    row_ids = adjacency[v_ids]                              # (C, d)
+    row_w = weights[v_ids]
+    row_valid = row_ids != INVALID
+    safe = jnp.where(row_valid, row_ids, 0)
+    nbr2 = jnp.where(row_valid[:, :, None], adjacency[safe], INVALID)
+    w2 = weights[safe]
+    _, occl = occ_ops.mrng_occlusion(
+        vectors, jnp.where(nbr2 == INVALID, 0, nbr2), vectors[v_ids],
+        row_w, w2, metric=metric, backend=backend)
+    # only *common* neighbors (u adjacent to both endpoints) occlude
+    common = ((nbr2[:, :, :, None] == row_ids[:, None, None, :]).any(-1)
+              & (nbr2 != INVALID))
+    violated = (occl & common).any(-1)
+    return jnp.where(row_valid, ~violated, True)
+
+
+@jax.jit
+def propose_swaps(adjacency: jax.Array, weights: jax.Array, ids: jax.Array,
+                  dists: jax.Array, v1: jax.Array, v2: jax.Array,
+                  gain: jax.Array):
+    """Batched Alg. 4 step (2) first-iteration scan.
+
+    ids/dists (C, k): the prefetched candidate search around each task's
+    v2; v1/v2/gain (C,): the edge under optimization and its weight.
+    Returns ``(s (C,), n (C,), ds (C,), best (C,), found (C,))`` — the swap
+    maximizing ``gain - d(v2, s) + w(s, n)`` over admissible pairs, with
+    ``found`` iff that beats keeping the edge.  Row-major argmax matches
+    the host scan's first-strict-improvement tie-break."""
+    C, k = ids.shape
+    D = adjacency.shape[1]
+    valid_s = (ids != INVALID) & (ids != v1[:, None]) & (ids != v2[:, None])
+    v2row = adjacency[v2]
+    valid_s &= ~(ids[:, :, None] == v2row[:, None, :]).any(-1)
+    safe = jnp.where(ids == INVALID, 0, ids)
+    srow = adjacency[safe]                                  # (C, k, D)
+    srow_w = weights[safe]
+    valid_n = (valid_s[:, :, None] & (srow != INVALID)
+               & (srow != v2[:, None, None]))
+    cand = gain[:, None, None] - dists[:, :, None] + srow_w
+    flat = jnp.where(valid_n, cand, -_INF).reshape(C, k * D)
+    idx = jnp.argmax(flat, axis=1)
+    best = jnp.take_along_axis(flat, idx[:, None], axis=1)[:, 0]
+    lane = jnp.arange(C)
+    s_sel = ids[lane, idx // D]
+    n_sel = srow[lane, idx // D, idx % D]
+    ds_sel = dists[lane, idx // D]
+    return s_sel, n_sel, ds_sel, best, best > gain

@@ -25,10 +25,11 @@ from __future__ import annotations
 
 from typing import Optional, Sequence
 
+import jax.numpy as jnp
 import numpy as np
 
 from .build import DEGIndex, np_pair_dist
-from .graph import INVALID
+from .graph import INVALID, pow2_bucket
 from .mrng import check_mrng, mrng_conform_mask
 
 
@@ -68,12 +69,20 @@ def _search(index: DEGIndex, query_vertex: int, seeds, k: int, eps: float):
 
 def optimize_edge(index: DEGIndex, v1: int, v2: int, *, i_opt: int = 5,
                   k_opt: int = 20, eps_opt: float = 0.001,
-                  first_search: Optional[tuple] = None) -> bool:
+                  first_search: Optional[tuple] = None,
+                  first_found: Optional[tuple] = None) -> bool:
     """Algorithm 4. Returns True iff the graph was improved (changes kept).
 
     ``first_search`` optionally supplies a prefetched (ids, dists) result
     for the first step-(2) candidate search (the batched Alg. 5 path);
     INVALID lanes are filtered here.  Later iterations always search live.
+
+    ``first_found`` optionally supplies the *device-proposed* first swap
+    (s, n, ds, found) from ``extend.propose_swaps`` (computed from the same
+    prefetched search against the pre-chunk graph).  A no-swap proposal
+    ends the attempt before any mutation; a proposed swap is re-validated
+    against the live builder (and its gain recomputed) before being taken,
+    falling back to the host scan when stale.
     """
     b = index.builder
     metric = index.params.metric
@@ -84,28 +93,39 @@ def optimize_edge(index: DEGIndex, v1: int, v2: int, *, i_opt: int = 5,
 
     if not b.has_edge(v1, v2):
         return False
+    if first_found is not None and not first_found[3]:
+        return False                # device scan: no improving first swap
     log = ChangeLog(b)
     gain = log.remove_edge(v1, v2)
     v3, v4 = v1, v1
 
     for it in range(max(i_opt, 1)):
         # ---- step (2): find (v3', v4') maximizing the running gain --------
-        if it == 0 and first_search is not None:
-            ids, dists = first_search
-            keep = ids != INVALID
-            ids, dists = ids[keep], dists[keep]
-        else:
-            ids, dists = _search(index, v2, (v3, v4), k_opt, eps_opt)
         best, found = gain, None
-        for s, ds in zip(ids.tolist(), dists.tolist()):
-            if s in (v1, v2) or b.has_edge(v2, s):
-                continue
-            for n in b.neighbors(int(s)).tolist():
-                if n == v2:
-                    continue
-                cand = gain - ds + b.edge_weight(int(s), int(n))
+        if it == 0 and first_found is not None:
+            s, n, ds = (int(first_found[0]), int(first_found[1]),
+                        float(first_found[2]))
+            if (s not in (v1, v2) and n != v2 and not b.has_edge(v2, s)
+                    and b.has_edge(s, n)):
+                cand = gain - ds + b.edge_weight(s, n)
                 if cand > best:
-                    best, found = cand, (int(s), int(n), float(ds))
+                    best, found = cand, (s, n, ds)
+        if found is None:
+            if it == 0 and first_search is not None:
+                ids, dists = first_search
+                keep = ids != INVALID
+                ids, dists = ids[keep], dists[keep]
+            else:
+                ids, dists = _search(index, v2, (v3, v4), k_opt, eps_opt)
+            for s, ds in zip(ids.tolist(), dists.tolist()):
+                if s in (v1, v2) or b.has_edge(v2, s):
+                    continue
+                for n in b.neighbors(int(s)).tolist():
+                    if n == v2:
+                        continue
+                    cand = gain - ds + b.edge_weight(int(s), int(n))
+                    if cand > best:
+                        best, found = cand, (int(s), int(n), float(ds))
         if found is None:           # Alg. 4 lines 14-15
             break
         s, n, ds = found
@@ -155,11 +175,16 @@ def optimize_edge(index: DEGIndex, v1: int, v2: int, *, i_opt: int = 5,
     return False
 
 
-def _edge_tasks(b, v1: int) -> list:
+def _edge_tasks(b, v1: int, conform=None) -> list:
     """Alg. 5's edge agenda for one vertex: every non-MRNG-conform edge,
-    then the longest remaining edge (Alg. 5 lines 6-7)."""
+    then the longest remaining edge (Alg. 5 lines 6-7).
+
+    ``conform`` optionally supplies a precomputed per-slot conformity mask
+    (the batched Alg. 2 device call in ``refine_sweep`` — one program for a
+    whole chunk instead of a host neighbor scan per vertex)."""
     tasks: list[int] = []
-    conform = mrng_conform_mask(b, v1)
+    if conform is None:
+        conform = mrng_conform_mask(b, v1)
     nbrs = b.adjacency[v1].copy()
     for slot, v2 in enumerate(nbrs):
         if v2 == INVALID or conform[slot]:
@@ -209,14 +234,24 @@ def refine_sweep(index: DEGIndex, vertices: Sequence[int], *,
     matches the serial driver even on CPU and removes the per-edge
     host->device round-trip that dominates on accelerators.
     """
+    from .extend import mrng_conform_batch, propose_swaps
+
     b = index.builder
     if b is None or b.n <= b.degree + 1:
         return 0
     improved = 0
     verts = [int(v) for v in vertices]
     for c0 in range(0, len(verts), chunk):
-        tasks = [(v1, v2) for v1 in verts[c0:c0 + chunk]
-                 for v2 in _edge_tasks(b, v1)]
+        verts_c = verts[c0:c0 + chunk]
+        # batched Alg. 2: conformity of every chunk edge in ONE device call,
+        # cached for the chunk instead of a host neighbor scan per vertex
+        g = b.device_graph()
+        conform = np.asarray(mrng_conform_batch(
+            g.adjacency, g.weights, index._dev_vectors,
+            jnp.asarray(np.asarray(verts_c, np.int32)),
+            metric=index.params.metric))
+        tasks = [(v1, v2) for i, v1 in enumerate(verts_c)
+                 for v2 in _edge_tasks(b, v1, conform=conform[i])]
         if not tasks:
             continue
         # lane j: query = vectors[v2], seed = v1  (the (v3,v4)=(v1,v1) seeds
@@ -224,10 +259,40 @@ def refine_sweep(index: DEGIndex, vertices: Sequence[int], *,
         q = index.vectors[np.asarray([v2 for _, v2 in tasks])]
         seeds = np.asarray([[v1] for v1, _ in tasks], np.int32)
         ids, dists = index._search_from_batch(q, seeds, k_opt, eps_opt)
-        for (v1, v2), lane_ids, lane_d in zip(tasks, ids, dists):
+        # batched Alg. 4 step (2): every task's first swap decision in ONE
+        # device call against the pre-surgery chunk graph (lanes padded to
+        # a power of two so sweeps reuse a handful of jit entries)
+        T = len(tasks)
+        Tp = pow2_bucket(T, floor=4)
+        p_ids = np.full((Tp, ids.shape[1]), INVALID, np.int32)
+        p_ids[:T] = ids
+        p_d = np.full((Tp, ids.shape[1]), np.inf, np.float32)
+        p_d[:T] = dists
+        v1s = np.zeros((Tp,), np.int32)
+        v1s[:T] = [v1 for v1, _ in tasks]
+        v2s = np.zeros((Tp,), np.int32)
+        v2s[:T] = [v2 for _, v2 in tasks]
+        gains = np.zeros((Tp,), np.float32)
+        gains[:T] = [b.edge_weight(v1, v2) for v1, v2 in tasks]
+        prop = [np.asarray(x) for x in propose_swaps(
+            g.adjacency, g.weights, jnp.asarray(p_ids), jnp.asarray(p_d),
+            jnp.asarray(v1s), jnp.asarray(v2s), jnp.asarray(gains))]
+        clean = True     # no surgery since the chunk snapshot was taken
+        for t, ((v1, v2), lane_ids, lane_d) in enumerate(
+                zip(tasks, ids, dists)):
             if not b.has_edge(v1, v2):     # removed by an earlier swap
                 continue
-            improved += int(optimize_edge(
+            # a found=True proposal is re-validated live inside
+            # optimize_edge, so it stays usable on a mutated chunk; the
+            # found=False shortcut (skip the attempt entirely) is only
+            # sound while the chunk snapshot still matches the graph —
+            # a reverted attempt restores it exactly, a kept one doesn't.
+            p_found = bool(prop[4][t])
+            first_found = ((prop[0][t], prop[1][t], prop[2][t], p_found)
+                           if (p_found or clean) else None)
+            changed = optimize_edge(
                 index, v1, v2, i_opt=i_opt, k_opt=k_opt, eps_opt=eps_opt,
-                first_search=(lane_ids, lane_d)))
+                first_search=(lane_ids, lane_d), first_found=first_found)
+            improved += int(changed)
+            clean = clean and not changed
     return improved

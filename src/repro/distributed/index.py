@@ -246,6 +246,24 @@ class ShardedDEG:
             ids, dists = jax.jit(f)(*args)
         return np.asarray(ids), np.asarray(dists)
 
+    def refine(self, iterations: int, seed: Optional[int] = None) -> int:
+        """Shard-local continuous refinement (Alg. 5): each sub-DEG runs
+        ``iterations`` of the batched refine path independently (sub-DEGs
+        share no edges, so shard-local surgery is exact, not approximate),
+        then the stacked device adjacency is refreshed from the builders.
+        Returns the total number of improved edges."""
+        improved = 0
+        for s, sh in enumerate(self.shards):
+            improved += sh.refine(
+                iterations, seed=None if seed is None else seed + s)
+        if improved:
+            S, ns, d = self.adjacency.shape
+            adj = np.full((S, ns, d), INVALID, dtype=np.int32)
+            for s, sh in enumerate(self.shards):
+                adj[s, : sh.n] = sh.builder.adjacency[: sh.n]
+            self.adjacency = jnp.asarray(adj)
+        return improved
+
     def drop_shard(self, idx: int) -> "ShardedDEG":
         """Simulate losing one model shard: its sub-DEG serves nothing.
         (n=0 disables every vertex: recall degrades by ~1/S, service

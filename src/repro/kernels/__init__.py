@@ -24,5 +24,9 @@ Kernels:
                     per-dimension scale, and reduces to distances in one
                     pass (the quantized store's hot path — see
                     quant/store.py);
+* ``mrng_occlusion`` — gather each candidate's neighbor rows via
+                    scalar-prefetched ids, reduce to query distances in
+                    VMEM, and fold in the Alg. 2 lune test in one pass (the
+                    construction/refinement hot path — see core/extend.py);
 * ``bag_lookup``  — embedding-bag gather-reduce (recsys embedding tables).
 """

@@ -1,0 +1,4 @@
+from .ops import mrng_occlusion
+from .ref import mrng_occlusion_ref
+
+__all__ = ["mrng_occlusion", "mrng_occlusion_ref"]

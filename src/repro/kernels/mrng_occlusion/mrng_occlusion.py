@@ -1,0 +1,80 @@
+"""Fused neighbor-gather + distance + MRNG-occlusion Pallas TPU kernel.
+
+The inner decision of DEG construction (Alg. 2/3) and continuous refinement
+(Alg. 5) is the *lune test*: a candidate edge (v, c) at distance ``delta`` is
+occluded by a vertex ``u`` adjacent to ``c`` iff
+
+    delta > max(d(v, u), w(c, u))
+
+i.e. ``u`` lies inside the lune of the candidate edge.  Answering it for a
+batch of candidates needs, per candidate, the distances from the query
+vertex to every neighbor of the candidate — a gather of ``d`` vector rows
+followed by ``d`` distance reductions and a compare.  A naive XLA lowering
+materializes the gathered ``(B, K, d, m)`` float32 tensor in HBM before
+reducing; here each neighbor row is DMA'd HBM->VMEM directly by the
+BlockSpec index_map using the *scalar-prefetched* neighbor ids, reduced to
+a distance, and folded into the occlusion compare in one pass — the gathered
+rows never exist outside VMEM.
+
+grid = (B, K, d): step (b, i, j) pulls vector row ``nbr_ids[b, i, j]`` and
+query row ``b`` into VMEM, computes ``dist = delta(q_b, row)`` and
+``occl = cand_d[b, i] > max(dist, nbr_w[b, i, j])``, and stores both at
+``[b, i, j]``.  Both the extension path (candidates = search results,
+query = the new vertex) and the refinement path (candidates = a vertex's
+own neighbors, cand_d = its edge weights) consume the same program.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, vec_ref, q_ref, cd_ref, w_ref, dist_ref, occ_ref, *,
+            squared: bool):
+    j = pl.program_id(2)
+    row = vec_ref[0, :].astype(jnp.float32)
+    diff = row - q_ref[0, :].astype(jnp.float32)
+    d2 = jnp.maximum(jnp.sum(diff * diff), 0.0)
+    dist = d2 if squared else jnp.sqrt(d2)
+    w = w_ref[0, 0, pl.dslice(j, 1)][0]
+    occ = (cd_ref[0, 0] > jnp.maximum(dist, w)).astype(jnp.float32)
+    dist_ref[0, 0, pl.dslice(j, 1)] = dist[None]
+    occ_ref[0, 0, pl.dslice(j, 1)] = occ[None]
+
+
+@functools.partial(jax.jit, static_argnames=("squared", "interpret"))
+def mrng_occlusion_pallas(vectors: jax.Array, nbr_ids: jax.Array,
+                          queries: jax.Array, cand_dists: jax.Array,
+                          nbr_weights: jax.Array, *, squared: bool = False,
+                          interpret: bool = True):
+    """vectors (N, m) f32, nbr_ids (B, K, d) int32 in [0, N), queries (B, m)
+    f32, cand_dists (B, K) f32, nbr_weights (B, K, d) f32
+    -> (nbr_dist (B, K, d) f32, occl (B, K, d) f32 in {0, 1})."""
+    N, m = vectors.shape
+    B, K, d = nbr_ids.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, K, d),
+        in_specs=[
+            pl.BlockSpec((1, m), lambda b, i, j, ids: (ids[b, i, j], 0)),
+            pl.BlockSpec((1, m), lambda b, i, j, ids: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, i, j, ids: (b, i)),
+            pl.BlockSpec((1, 1, d), lambda b, i, j, ids: (b, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, d), lambda b, i, j, ids: (b, i, 0)),
+            pl.BlockSpec((1, 1, d), lambda b, i, j, ids: (b, i, 0)),
+        ],
+    )
+    kernel = functools.partial(_kernel, squared=squared)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((B, K, d), jnp.float32),
+                   jax.ShapeDtypeStruct((B, K, d), jnp.float32)],
+        interpret=interpret,
+    )(nbr_ids, vectors, queries, cand_dists, nbr_weights)

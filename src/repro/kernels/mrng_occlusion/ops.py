@@ -1,0 +1,53 @@
+"""Public dispatch for the fused gather + distance + occlusion kernel.
+
+Backends:
+
+* ``"jnp"``    — the pure-jnp oracle (any metric); the default inside the
+                 jitted construction programs off-TPU.
+* ``"pallas"`` — the Pallas kernel (l2 / sqeuclidean; interpret mode
+                 off-TPU).  Clamps out-of-range ids (INVALID = -1 slots are
+                 masked by the caller) and pads the feature dim to the
+                 128-lane boundary (zero vector x zero query padding
+                 contributes nothing to the distance).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .mrng_occlusion import mrng_occlusion_pallas
+from .ref import mrng_occlusion_ref
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("metric", "backend", "interpret"))
+def mrng_occlusion(vectors: jax.Array, nbr_ids: jax.Array,
+                   queries: jax.Array, cand_dists: jax.Array,
+                   nbr_weights: jax.Array, *, metric: str = "l2",
+                   backend: str = "jnp", interpret: bool | None = None):
+    """-> (nbr_dist (B, K, d) f32, occl (B, K, d) bool).  ``occl[b, i, j]``
+    answers: does neighbor j of candidate i occlude the candidate edge
+    (lune test, Alg. 2)?  Callers mask INVALID id lanes themselves."""
+    if backend == "jnp" or metric not in ("l2", "sqeuclidean"):
+        return mrng_occlusion_ref(vectors, nbr_ids, queries, cand_dists,
+                                  nbr_weights, metric=metric)
+    if backend != "pallas":
+        raise ValueError(f"unknown mrng_occlusion backend {backend!r}")
+    if interpret is None:
+        interpret = _default_interpret()
+    N, m = vectors.shape
+    pad_m = (-m) % 128
+    v = jnp.pad(vectors.astype(jnp.float32), ((0, 0), (0, pad_m)))
+    q = jnp.pad(queries.astype(jnp.float32), ((0, 0), (0, pad_m)))
+    safe_ids = jnp.clip(nbr_ids, 0, N - 1).astype(jnp.int32)
+    nd, occ = mrng_occlusion_pallas(
+        v, safe_ids, q, cand_dists.astype(jnp.float32),
+        nbr_weights.astype(jnp.float32),
+        squared=(metric == "sqeuclidean"), interpret=interpret)
+    return nd, occ.astype(bool)

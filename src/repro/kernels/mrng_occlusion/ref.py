@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the gather + distance + MRNG-occlusion kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def mrng_occlusion_ref(vectors: jax.Array, nbr_ids: jax.Array,
+                       queries: jax.Array, cand_dists: jax.Array,
+                       nbr_weights: jax.Array, *, metric: str = "l2"):
+    """vectors (N, m), nbr_ids (B, K, d), queries (B, m), cand_dists (B, K),
+    nbr_weights (B, K, d) -> (nbr_dist (B, K, d), occl (B, K, d) bool)."""
+    from repro.core.distances import get_metric
+
+    g = vectors[nbr_ids].astype(jnp.float32)               # (B, K, d, m)
+    nd = get_metric(metric).pair(
+        queries.astype(jnp.float32)[:, None, None, :], g)
+    occ = cand_dists[:, :, None] > jnp.maximum(nd, nbr_weights)
+    return nd, occ

@@ -64,9 +64,7 @@ def main() -> None:
         from repro.core.graph import GraphBuilder
 
         b = GraphBuilder(idx.capacity, int(z["degree"]))
-        b.adjacency[: z["adjacency"].shape[0]] = z["adjacency"]
-        b.weights[: z["weights"].shape[0]] = z["weights"]
-        b.n = z["adjacency"].shape[0]
+        b.load(z["adjacency"], z["weights"], z["adjacency"].shape[0])
         idx.builder = b
         base = z["vectors"]
         rng = np.random.default_rng(args.seed)

@@ -1,0 +1,276 @@
+"""Device-resident construction: the mrng_occlusion kernel, the wave-batched
+Alg. 2/3 selection (core/extend.py), the dirty-row device sync, and the
+Alg. 5 batched conformity / swap-proposal programs."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import invariants as inv
+from repro.core.build import DEGIndex, DEGParams, build_deg
+from repro.core.graph import GraphBuilder, INVALID, complete_graph
+from repro.data import make_dataset
+from repro.kernels.mrng_occlusion import mrng_occlusion, mrng_occlusion_ref
+
+
+def _params(**kw):
+    base = dict(degree=8, k_ext=16, eps_ext=0.3, k_opt=8, i_opt=5)
+    base.update(kw)
+    return DEGParams(**base)
+
+
+# ------------------------------------------------------ mrng_occlusion ------
+@pytest.mark.parametrize("N,m,B,K,d", [
+    (128, 128, 4, 8, 6),
+    (100, 33, 2, 5, 4),     # unaligned feature dim
+    (256, 48, 3, 16, 30),   # DEG degree 30
+])
+def test_mrng_occlusion_pallas_matches_ref_exactly(N, m, B, K, d):
+    """Kernel (interpret mode) vs the jnp oracle over the SAME 128-lane
+    padded operands: bitwise identical distances and masks."""
+    rng = np.random.default_rng(N + m)
+    v = jnp.asarray(rng.normal(size=(N, m)).astype(np.float32))
+    q = jnp.asarray(rng.normal(size=(B, m)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, N, size=(B, K, d)), jnp.int32)
+    cd = jnp.asarray(rng.uniform(0, 8, size=(B, K)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0, 8, size=(B, K, d)).astype(np.float32))
+    nd_p, oc_p = mrng_occlusion(v, ids, q, cd, w, backend="pallas",
+                                interpret=True)
+    pad = (-m) % 128                       # the ops-layer padding, verbatim
+    nd_r, oc_r = mrng_occlusion_ref(
+        jnp.pad(v, ((0, 0), (0, pad))), ids, jnp.pad(q, ((0, 0), (0, pad))),
+        cd, w)
+    np.testing.assert_array_equal(np.asarray(nd_p), np.asarray(nd_r))
+    np.testing.assert_array_equal(np.asarray(oc_p), np.asarray(oc_r))
+
+
+def test_mrng_occlusion_semantics():
+    """The lune test on a hand-built configuration: neighbor inside the
+    lune occludes, neighbor outside does not."""
+    v = jnp.asarray(np.array([[0.0, 0], [1, 0], [0.5, 0.1], [5, 5]],
+                             np.float32))
+    ids = jnp.asarray(np.array([[[2, 3]]]), jnp.int32)    # nbrs of cand 1
+    q = v[:1]
+    cd = jnp.asarray(np.array([[1.0]], np.float32))       # d(q, cand 1)
+    w = jnp.asarray(np.array([[[0.51, 6.0]]], np.float32))  # w(1, 2), w(1, 3)
+    nd, oc = mrng_occlusion_ref(v, ids, q, cd, w)
+    # vertex 2 sits inside the lune of (q, 1): d(q,2)~0.51, w(1,2)=0.51 < 1
+    assert bool(np.asarray(oc)[0, 0, 0])
+    # vertex 3 is far outside: max(d, w) > 1
+    assert not bool(np.asarray(oc)[0, 0, 1])
+
+
+def test_mrng_occlusion_clamps_invalid():
+    rng = np.random.default_rng(3)
+    v = jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32))
+    ids = jnp.asarray(np.array([[[0, -1], [31, -1]]]), jnp.int32)
+    nd, oc = mrng_occlusion(v, ids, v[:1], jnp.ones((1, 2)),
+                            jnp.zeros((1, 2, 2)), backend="pallas",
+                            interpret=True)
+    assert np.isfinite(np.asarray(nd)).all()
+
+
+# ------------------------------------------------- device wave extension ----
+def test_device_extend_matches_host_sequential():
+    """wave_size=1: the device Alg. 2/3 selection must reproduce the host
+    path's graph exactly (same candidates, same monotone eligibility order,
+    same scheme-C tie-breaks)."""
+    base, _ = make_dataset("gaussian", 200, 10, 16, seed=7)
+    idx_h = build_deg(base, _params(device_extend=False), wave_size=1)
+    idx_d = build_deg(base, _params(device_extend=True), wave_size=1)
+    inv.assert_valid_deg(idx_d.builder, context="device sequential build")
+    for v in range(idx_h.n):
+        assert (set(idx_h.builder.neighbors(v).tolist())
+                == set(idx_d.builder.neighbors(v).tolist())), v
+
+
+@pytest.mark.parametrize("scheme", ["A", "B", "C", "D"])
+def test_device_extend_schemes_match_host(scheme):
+    base, _ = make_dataset("gaussian", 120, 10, 12, seed=3)
+    idx_h = build_deg(base, _params(scheme=scheme, device_extend=False),
+                      wave_size=1)
+    idx_d = build_deg(base, _params(scheme=scheme, device_extend=True),
+                      wave_size=1)
+    inv.assert_valid_deg(idx_d.builder, context=f"scheme {scheme}")
+    same = sum(set(idx_h.builder.neighbors(v).tolist())
+               == set(idx_d.builder.neighbors(v).tolist())
+               for v in range(idx_h.n))
+    assert same == idx_h.n
+
+
+def test_device_extend_wave_invariants():
+    base, _ = make_dataset("gaussian", 400, 10, 16, seed=5)
+    idx = build_deg(base, _params(device_extend=True), wave_size=64)
+    inv.assert_valid_deg(idx.builder, context="device wave build")
+    assert idx.n == 400
+    # bootstrap K_{d+1} vertices don't go through _insert_wave
+    assert idx.build_stats["vertices"] == 400 - (idx.params.degree + 1)
+    assert idx.build_stats["extend_s"] > 0
+
+
+@settings(max_examples=6, deadline=None)
+@given(n=st.integers(40, 120), seed=st.integers(0, 1000),
+       wave=st.sampled_from([4, 16, 64]),
+       n_del=st.integers(1, 8))
+def test_device_build_mixed_waves_property(n, seed, wave, n_del):
+    """Paper §3 invariants after mixed add/remove waves through the
+    device-side Alg. 2/3 selection: even d-regularity, undirectedness and
+    connectivity must survive arbitrary interleavings."""
+    rng = np.random.default_rng(seed)
+    pts = rng.normal(size=(n, 12)).astype(np.float32)
+    extra = rng.normal(size=(wave, 12)).astype(np.float32)
+    idx = build_deg(pts, _params(degree=6, k_ext=12, k_opt=6,
+                                 device_extend=True), wave_size=wave)
+    inv.assert_valid_deg(idx.builder, context="after device build")
+    # remove a few vertices, then insert another device wave
+    ids = rng.choice(n, size=min(n_del, n - 8), replace=False)
+    idx.remove([int(i) for i in ids])
+    inv.assert_valid_deg(idx.builder, context="after removal")
+    idx.add(extra, wave_size=wave)
+    inv.assert_valid_deg(idx.builder, context="after re-extension wave")
+    assert inv.connected_components(idx.builder) == 1
+
+
+# ------------------------------------------------------- dirty-row sync -----
+def test_device_graph_dirty_row_sync():
+    vecs = np.random.default_rng(0).normal(size=(9, 8)).astype(np.float32)
+    b = complete_graph(vecs, 4, capacity=64)
+    g0 = b.device_graph()
+    np.testing.assert_array_equal(np.asarray(g0.adjacency), b.adjacency)
+    # mutate a couple of rows -> only those rows are scattered
+    w = b.remove_edge(0, 1)
+    b.add_edge(0, 1, w + 1.0)
+    g1 = b.device_graph()
+    np.testing.assert_array_equal(np.asarray(g1.adjacency), b.adjacency)
+    np.testing.assert_array_equal(np.asarray(g1.weights), b.weights)
+    # no pending writes: the same buffers come back (no donation churn)
+    g2 = b.device_graph()
+    assert g2.adjacency is g1.adjacency
+
+
+def test_device_graph_full_resync_after_grow():
+    vecs = np.random.default_rng(1).normal(size=(7, 8)).astype(np.float32)
+    b = complete_graph(vecs, 4, capacity=16)
+    b.device_graph()
+    b.grow(64)
+    g = b.device_graph()
+    assert g.capacity == 64
+    np.testing.assert_array_equal(np.asarray(g.adjacency), b.adjacency)
+
+
+def test_replace_edges_bulk_and_conflicts():
+    vecs = np.random.default_rng(2).normal(size=(6, 4)).astype(np.float32)
+    b = complete_graph(vecs, 4, capacity=16)
+    v = b.add_vertex()
+    assert v == 5
+    b.remove_edge(2, 3)          # make the second claim stale
+    ok = b.replace_edges(np.array([v, v]), np.array([0, 2]),
+                         np.array([0, 2]), np.array([1, 3]),
+                         np.array([0.5, 0.6], np.float32),
+                         np.array([0.7, 0.8], np.float32))
+    assert list(ok) == [True, False]
+    assert b.has_edge(v, 0) and b.has_edge(v, 1)
+    assert not b.has_edge(0, 1)
+    assert not b.has_edge(v, 2) and not b.has_edge(v, 3)
+    assert b.edge_weight(v, 0) == pytest.approx(0.5)
+    assert b.edge_weight(v, 1) == pytest.approx(0.7)
+
+
+def test_edge_slot_helper():
+    vecs = np.random.default_rng(3).normal(size=(5, 4)).astype(np.float32)
+    b = complete_graph(vecs, 4, capacity=8)
+    s = b.edge_slot(0, 3)
+    assert b.adjacency[0, s] == 3
+    assert b.edge_slot(0, 7) == -1
+    with pytest.raises(KeyError):
+        b.edge_weight(0, 7)
+
+
+# ------------------------------------------- batched Alg. 5 device calls ----
+def test_mrng_conform_batch_matches_host():
+    from repro.core.extend import mrng_conform_batch
+    from repro.core.mrng import mrng_conform_mask
+
+    base, _ = make_dataset("gaussian", 150, 10, 12, seed=9)
+    idx = build_deg(base, _params(), wave_size=16)
+    g = idx.builder.device_graph()
+    vs = np.arange(0, 150, 7, dtype=np.int32)
+    got = np.asarray(mrng_conform_batch(g.adjacency, g.weights,
+                                        idx._dev_vectors, jnp.asarray(vs)))
+    for i, v in enumerate(vs):
+        want = mrng_conform_mask(idx.builder, int(v))
+        np.testing.assert_array_equal(got[i], want, err_msg=f"vertex {v}")
+
+
+def test_propose_swaps_matches_host_scan():
+    from repro.core.extend import propose_swaps
+
+    base, _ = make_dataset("gaussian", 150, 10, 12, seed=4)
+    idx = build_deg(base, _params(), wave_size=16)
+    b = idx.builder
+    g = b.device_graph()
+    rng = np.random.default_rng(0)
+    v1s, v2s, gains, idsl, distl = [], [], [], [], []
+    for _ in range(8):
+        v1 = int(rng.integers(0, b.n))
+        v2 = int(b.neighbors(v1)[0])
+        ids, dists = idx._search_from(idx.vectors[v2], (v1,), 8, 0.001)
+        v1s.append(v1)
+        v2s.append(v2)
+        gains.append(b.edge_weight(v1, v2))
+        idsl.append(ids)
+        distl.append(dists)
+    s, n, ds, best, found = (np.asarray(x) for x in propose_swaps(
+        g.adjacency, g.weights, jnp.asarray(np.stack(idsl)),
+        jnp.asarray(np.stack(distl)), jnp.asarray(v1s, dtype=jnp.int32),
+        jnp.asarray(v2s, dtype=jnp.int32),
+        jnp.asarray(np.asarray(gains, np.float32))))
+    for t in range(8):
+        # replicate the Alg. 4 step-(2) host scan in float32
+        v1, v2, gain = v1s[t], v2s[t], np.float32(gains[t])
+        bestv, foundv = gain, None
+        for sid, sd in zip(idsl[t].tolist(), distl[t].tolist()):
+            if sid in (v1, v2, INVALID) or b.has_edge(v2, sid):
+                continue
+            for nn in b.neighbors(int(sid)).tolist():
+                if nn == v2:
+                    continue
+                cand = (gain - np.float32(sd)
+                        + np.float32(b.edge_weight(int(sid), int(nn))))
+                if cand > bestv:
+                    bestv, foundv = cand, (int(sid), int(nn))
+        assert bool(found[t]) == (foundv is not None), t
+        if foundv is not None:
+            assert (int(s[t]), int(n[t])) == foundv, t
+
+
+def test_refine_device_path_improves_and_keeps_invariants():
+    from repro.core.baselines import random_regular_index
+    from repro.core.metrics import average_neighbor_distance
+    from repro.core.optimize import refine_sweep
+
+    base, _ = make_dataset("gaussian", 200, 10, 16, seed=13)
+    idx = random_regular_index(base, _params(), seed=2)
+    nd0 = average_neighbor_distance(idx.builder)
+    improved = refine_sweep(idx, list(range(40)), i_opt=3, k_opt=8,
+                            eps_opt=0.001)
+    assert improved >= 1
+    inv.assert_valid_deg(idx.builder, context="after device refine_sweep")
+    assert average_neighbor_distance(idx.builder) < nd0
+
+
+def test_sharded_refine_shard_local():
+    from repro.distributed.index import build_sharded_deg
+
+    base, _ = make_dataset("gaussian", 240, 10, 12, seed=21)
+    sd = build_sharded_deg(base, 2, _params(degree=6, k_ext=12, k_opt=6),
+                           wave_size=16)
+    improved = sd.refine(40, seed=0)
+    for sh in sd.shards:
+        inv.assert_valid_deg(sh.builder, context="shard after refine")
+    # the stacked device adjacency reflects the refined builders
+    adj = np.asarray(sd.adjacency)
+    for s, sh in enumerate(sd.shards):
+        np.testing.assert_array_equal(adj[s, : sh.n],
+                                      sh.builder.adjacency[: sh.n])
+    assert improved >= 0
