@@ -101,6 +101,35 @@ def run(seed: int = 0) -> dict:
          arith_intensity=tc["flops"] / tc["hbm_bytes"], fits_vmem=True)
     out["mrng_occlusion"] = ok
 
+    # --- fused_hop: multi-expansion hop (gather+filter+distance+compact) ---
+    from repro.core import visited as vset
+    from repro.kernels.fused_hop import ops as fh_ops
+    from repro.kernels.fused_hop import ref as fh_ref
+
+    E, deg = 4, 16
+    adj = rng.integers(0, N, size=(N, deg)).astype(np.int32)
+    sel = rng.integers(0, N, size=(B, E)).astype(np.int32)
+    vis = vset.make_table(B, 256)
+    vis = vset.insert(vis, jnp.asarray(adj[sel[:, 0]]),
+                      jnp.ones((B, deg), bool))
+    dmax = jnp.full((B,), 15.0, jnp.float32)
+    got = fh_ops.fused_hop(jnp.asarray(adj), jnp.asarray(db),
+                           jnp.asarray(sel), jnp.asarray(qs[:B]), dmax, vis,
+                           n_valid=jnp.int32(N), backend="pallas")
+    want = fh_ref.fused_hop_ref(jnp.asarray(adj), jnp.asarray(db),
+                                jnp.asarray(sel), jnp.asarray(qs[:B]), dmax,
+                                vis, n_valid=jnp.int32(N))
+    ok = (bool(np.array_equal(np.asarray(got[0]), np.asarray(want[0])))
+          and bool(np.allclose(np.asarray(got[1]), np.asarray(want[1]),
+                               atol=1e-3))
+          and bool(np.array_equal(np.asarray(got[2]), np.asarray(want[2])))
+          and bool(np.array_equal(np.asarray(got[3]), np.asarray(want[3]))))
+    tc = kernel_tile_costs("fused_hop", E=E, d=deg, m=m, V=256)
+    emit("kernel_fused_hop", allclose=ok, block_q=1, block_n=E * deg,
+         tile_bytes=tc["hbm_bytes"], tile_flops=tc["flops"],
+         arith_intensity=tc["flops"] / tc["hbm_bytes"], fits_vmem=True)
+    out["fused_hop"] = ok
+
     # --- bag_lookup: embedding bag gather-reduce ---------------------------
     from repro.kernels.bag_lookup import ops as bl_ops
     from repro.kernels.bag_lookup import ref as bl_ref

@@ -24,6 +24,7 @@ SECTIONS = [
     ("kernels", "kernels"),
     ("kernel_beam_merge", "beam_merge"),
     ("quantized_store", "quantization"),
+    ("search_pareto", "search_pareto"),
     ("roofline", "roofline_report"),
 ]
 
@@ -39,6 +40,9 @@ QUICK_OVERRIDES = {
     "neighbor_choice": dict(n=1200, n_query=100),
     "beam_merge": dict(shapes=((64, 64, 20), (64, 128, 32))),
     "quantization": dict(n=1500, n_query=128, rerank_ks=(10, 20)),
+    "search_pareto": dict(n=1500, n_query=128, expand_widths=(1, 2),
+                          beam_widths=(32, 48), backends=("jnp",),
+                          refine=100),
 }
 
 

@@ -1,0 +1,118 @@
+"""Multi-expansion Pareto sweep: QPS <-> recall@10 over (E, beam_width,
+engine backend) on bench-small.
+
+The multi-expansion engine trades ``while_loop`` trips for per-hop width:
+expanding E beam entries per hop cuts the sequential trip count (87 -> 46
+-> 28 for E = 1/2/4 at L=48 on bench-small) while the per-trip work (E*d
+gathered neighbors, a (L + E*d) merge) grows.  Whether a given (E, L,
+backend) point wins depends on how much of the step time is per-trip
+fixed cost vs per-byte work — exactly what a Pareto frontier exposes.
+Engine backends:
+
+* ``jnp``          — composed hop, beam-broadcast dedup (E=1 = the seed
+                     program bit for bit);
+* ``jnp-visited``  — composed hop, O(probes) visited hash filter
+                     (``core/visited.py``; remembers evicted vertices, so
+                     ``evals`` drops below the broadcast engine's);
+* ``pallas``       — the fused ``kernels/fused_hop`` kernel (implies the
+                     visited filter; interpret-mode off-TPU, so only
+                     meaningful for wall-clock on real hardware).
+
+Per-hop counters from the engine (``BeamState.hops`` / ``evals``) are
+emitted per point so the frontier reads next to the work performed.
+
+The headline row (``pareto_best``) is the equal-or-better-recall gate for
+flipping the ``configs/deg.py`` presets: for each E>1 point, the baseline
+is the *strongest* E=1 configuration it matches — among E=1 points with
+recall <= the point's, those with the highest recall, and of those the
+fastest.  ``speedup > 1`` therefore means: at that recall level, no E=1
+configuration reaches the E>1 point's throughput.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.configs.deg import DEG_PAPER_CONFIGS
+from repro.core.build import build_deg
+from repro.core.metrics import recall_at_k
+
+from .common import emit, make_bench_dataset, timed_search
+
+_BACKENDS = {
+    "jnp": dict(hop_backend="jnp", visited_size=0),
+    "jnp-visited": dict(hop_backend="jnp", visited_size=2048),
+    "pallas": dict(hop_backend="pallas"),
+}
+
+
+def run(n: int = 6000, n_query: int = 256, dim: int = 32, k: int = 10,
+        eps: float = 0.1, expand_widths=(1, 2, 4),
+        beam_widths=(32, 48, 56, 64), backends=("jnp", "jnp-visited"),
+        seed: int = 0, refine: int = 300) -> dict:
+    ds = make_bench_dataset("bench-small", n, n_query, dim, "low", k=k,
+                            seed=seed)
+    params = DEG_PAPER_CONFIGS["bench-small"]
+    idx = build_deg(ds.base, params, wave_size=16)
+    if refine:
+        idx.refine(refine, seed=seed)
+
+    pts = []
+    for backend in backends:
+        kw = _BACKENDS[backend]
+        for L in beam_widths:
+            for E in expand_widths:
+                def search(q, E=E, L=L, kw=kw):
+                    res = idx.search(q, k=k, eps=eps, beam_width=L,
+                                     expand_width=E, **kw)
+                    # jax dispatch is async: block so the wall clock
+                    # measures the search, not the enqueue
+                    jax.block_until_ready(res.ids)
+                    return res
+
+                res, secs = timed_search(search, ds.queries, repeats=5)
+                rec = recall_at_k(np.asarray(res.ids)[:, :k],
+                                  ds.gt_ids[:, :k])
+                row = emit("pareto_point", dataset=ds.name, E=E,
+                           beam_width=L, backend=backend, eps=eps,
+                           recall=rec, qps=n_query / secs,
+                           hops=float(np.mean(np.asarray(res.hops))),
+                           evals=float(np.mean(np.asarray(res.evals))))
+                pts.append(row)
+
+    best = None
+    e1 = [q for q in pts if q["E"] == 1 and q["backend"] == "jnp"]
+    if not e1:          # sweep without the default backend (e.g. TPU-only)
+        e1 = [q for q in pts if q["E"] == 1]
+    for p in pts:
+        if p["E"] == 1:
+            continue
+        rivals = [q for q in e1 if q["recall"] <= p["recall"]]
+        if not rivals:
+            continue
+        top = max(q["recall"] for q in rivals)
+        base = max((q for q in rivals if q["recall"] == top),
+                   key=lambda q: q["qps"])
+        speedup = p["qps"] / base["qps"]
+        if best is None or speedup > best[0]:
+            best = (speedup, p, base)
+    summary = {}
+    if best is not None:
+        speedup, p, base = best
+        emit("pareto_best", dataset=ds.name, E=p["E"],
+             beam_width=p["beam_width"], backend=p["backend"],
+             recall=p["recall"], qps=p["qps"],
+             baseline_qps=base["qps"], baseline_recall=base["recall"],
+             baseline_L=base["beam_width"], speedup=speedup)
+        summary.update(best_E=p["E"], best_L=p["beam_width"],
+                       best_backend=p["backend"], best_qps=p["qps"],
+                       best_recall=p["recall"], baseline_qps=base["qps"],
+                       baseline_recall=base["recall"], speedup=speedup)
+    else:
+        emit("pareto_best", dataset=ds.name, E=0, speedup=0.0)
+        summary.update(speedup=0.0)
+    return summary
+
+
+if __name__ == "__main__":
+    print(run())

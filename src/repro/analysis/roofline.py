@@ -163,6 +163,7 @@ KERNEL_DIMS = {
     "gather_dist_q": dict(d=30, m=128),
     "beam_merge": dict(L=64, d=30),
     "mrng_occlusion": dict(K=60, d=30, m=128),
+    "fused_hop": dict(E=4, d=30, m=128, V=2048),
 }
 
 
@@ -177,6 +178,11 @@ def kernel_tile_costs(name: str, **dims) -> dict:
     * ``mrng_occlusion``  — K*d gathered f32 rows + query + candidate
       dists + neighbor weights in, distances + occlusion mask out; one
       distance (2m) plus the lune compare per gathered row.
+    * ``fused_hop``       — one multi-expansion hop for one lane: E
+      adjacency rows + the (1, V) visited table + query in, E*d gathered
+      f32 vector rows (worst case: nothing filtered), compacted
+      candidates + raw neighbor ids + eval count out; per gathered row
+      one distance (2m) plus the E*d-lane seen/visited row compares.
     """
     if name == "gather_dist":
         d, m = dims["d"], dims["m"]
@@ -197,6 +203,17 @@ def kernel_tile_costs(name: str, **dims) -> dict:
         # plus the K*d int32 neighbor-id array driving the gather
         return {"hbm_bytes": (K * d * m + m + K + 3 * K * d) * 4 + K * d * 4,
                 "flops": K * d * (2.0 * m + 2.0)}
+    if name == "fused_hop":
+        E, d, m, V = dims["E"], dims["d"], dims["m"], dims["V"]
+        # in: E i32 adjacency rows, (1, V) i32 visited table, f32 query;
+        # E*d f32 vector rows DMA'd (worst case: visited filters nothing);
+        # out: compacted ids+dists, raw neighbor ids, eval count.  Per
+        # gathered row: one distance (2m) + the seen/visited row compares
+        # (E*d + V lanes) + the keep/compaction select.
+        return {"hbm_bytes": ((E * d + V + E * d) * 4 + m * 4
+                              + E * d * m * 4
+                              + (E * d * 2 + E * d + 1) * 4),
+                "flops": E * d * (2.0 * m + E * d + V + 2.0)}
     raise ValueError(f"unknown kernel {name!r}; have {sorted(KERNEL_DIMS)}")
 
 

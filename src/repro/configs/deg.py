@@ -43,3 +43,35 @@ QUANT_PRESETS = {
     "sq8-compact": QuantPreset(codec="sq8", rerank_k=20),
     "sq8-serving": QuantPreset(codec="sq8", rerank_k=40),
 }
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchPreset:
+    """Query-engine configuration (orthogonal to both the build params and
+    the store codec): how many beam entries each hop expands
+    (``expand_width``), which hop implementation runs (``hop_backend``:
+    "jnp" composed | "pallas" fused ``kernels/fused_hop``), and the
+    per-lane visited-filter size (``visited_size``; None = auto — the
+    broadcast dedup unless the fused kernel, which requires the filter,
+    is selected)."""
+
+    expand_width: int = 1
+    hop_backend: str = "jnp"
+    visited_size: int | None = None
+
+
+# search-engine presets swept by benchmarks/search_pareto.py.  "classic"
+# (E=1, jnp, beam-broadcast dedup) is the seed program bit for bit and
+# stays the default everywhere; the multi-expansion points trade hop-count
+# for per-hop width (the sweep shows multi-e2 beating the strongest E=1
+# config at the saturated-recall tier on bench-small), "visited" variants
+# swap the broadcast dedup for the O(probes) hash filter, and "fused"
+# routes the hop body through the fused Pallas kernel (TPU-targeted).
+SEARCH_PRESETS = {
+    "classic": SearchPreset(),
+    "visited-e1": SearchPreset(expand_width=1, visited_size=1024),
+    "multi-e2": SearchPreset(expand_width=2),
+    "multi-e4": SearchPreset(expand_width=4),
+    "multi-e2-visited": SearchPreset(expand_width=2, visited_size=2048),
+    "multi-e4-fused": SearchPreset(expand_width=4, hop_backend="pallas"),
+}

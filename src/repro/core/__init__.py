@@ -1,5 +1,5 @@
 """Core DEG library: the paper's contribution as composable JAX modules."""
-from .beam import BeamState, beam_search
+from .beam import BeamState, beam_search, default_visited_size
 from .build import DEGIndex, DEGParams, build_deg
 from .distances import exact_knn, exact_knn_batched, get_metric
 from .graph import DEGraph, GraphBuilder, INVALID, complete_graph
@@ -9,7 +9,7 @@ from .search import (SearchResult, exact_rerank, medoid_seed, range_search,
                      search_graph)
 
 __all__ = [
-    "BeamState", "beam_search",
+    "BeamState", "beam_search", "default_visited_size",
     "DEGIndex", "DEGParams", "build_deg",
     "exact_knn", "exact_knn_batched", "get_metric",
     "DEGraph", "GraphBuilder", "INVALID", "complete_graph",

@@ -82,6 +82,16 @@ class DEGParams:
     # (dirty-row scatter), bounding selection staleness — and wave
     # conflicts — to the block instead of the whole wave.
     extend_block: int = 16
+    # -- query-path engine knobs (every search this index runs — queries,
+    # build/optimize/delete candidate searches — inherits these unless the
+    # caller overrides them per call).  expand_width=1 + jnp hop is the
+    # seed program bit for bit; E>1 widens the per-hop frontier with the
+    # broadcast dedup (see benchmarks/search_pareto); the visited filter
+    # (core/visited.py) engages via an explicit visited_size or the fused
+    # pallas hop, which requires it.
+    expand_width: int = 1
+    hop_backend: str = "jnp"          # "jnp" | "pallas" (fused hop kernel)
+    visited_size: Optional[int] = None  # None = auto (0 unless fused hop)
 
     def __post_init__(self):
         if self.k_ext < self.degree:
@@ -461,7 +471,10 @@ class DEGIndex:
                      eps: float = 0.1, beam_width: Optional[int] = None,
                      backend: str = "jnp",
                      quantized: Optional[str] = None,
-                     rerank_k: Optional[int] = None) -> SearchResult:
+                     rerank_k: Optional[int] = None,
+                     expand_width: Optional[int] = None,
+                     visited_size: Optional[int] = None,
+                     hop_backend: Optional[str] = None) -> SearchResult:
         """The one device entry point every query path funnels through.
 
         ``seed_ids`` (B, S) / ``exclude`` (B, X) go straight into the beam
@@ -475,7 +488,14 @@ class DEGIndex:
         two-stage: the beam runs over compressed distances, then the best
         ``rerank_k`` candidates (default ``4 * k``) are re-scored exactly
         against the float store and the exact top-k is returned.
+
+        ``expand_width`` / ``visited_size`` / ``hop_backend`` default to
+        the index's ``DEGParams`` engine knobs (multi-expansion config);
+        pass explicit values to override per call.
         """
+        E = self.params.expand_width if expand_width is None else expand_width
+        hb = self.params.hop_backend if hop_backend is None else hop_backend
+        vs = self.params.visited_size if visited_size is None else visited_size
         q = jnp.asarray(np.atleast_2d(np.asarray(queries, np.float32)))
         if seed_ids is None:
             seeds = jnp.full((q.shape[0], 1), self.medoid(), dtype=jnp.int32)
@@ -489,26 +509,34 @@ class DEGIndex:
             return range_search(self.frozen(), self._dev_vectors, q, seeds,
                                 k=k, eps=eps, beam_width=beam_width,
                                 metric=self.params.metric, exclude=excl,
-                                backend=backend)
+                                backend=backend, expand_width=E,
+                                visited_size=vs, hop_backend=hb)
         store = self.store_for(quantized)
         rk = int(rerank_k) if rerank_k else 4 * k
         return range_search(self.frozen(), store, q, seeds, k=k, eps=eps,
                             beam_width=beam_width,
                             metric=self.params.metric, exclude=excl,
                             backend=backend, rerank_k=max(rk, k),
-                            exact_vectors=self._dev_vectors)
+                            exact_vectors=self._dev_vectors, expand_width=E,
+                            visited_size=vs, hop_backend=hb)
 
     def search(self, queries: np.ndarray, k: int, eps: float = 0.1,
                beam_width: Optional[int] = None, seed: Optional[int] = None,
                backend: str = "jnp", quantized: Optional[str] = None,
-               rerank_k: Optional[int] = None) -> SearchResult:
+               rerank_k: Optional[int] = None,
+               expand_width: Optional[int] = None,
+               visited_size: Optional[int] = None,
+               hop_backend: Optional[str] = None) -> SearchResult:
         if seed is None:
             seed = self.medoid()
         q = np.atleast_2d(np.asarray(queries, np.float32))
         seeds = np.full((q.shape[0], 1), seed, dtype=np.int32)
         return self.search_batch(q, seeds, k=k, eps=eps,
                                  beam_width=beam_width, backend=backend,
-                                 quantized=quantized, rerank_k=rerank_k)
+                                 quantized=quantized, rerank_k=rerank_k,
+                                 expand_width=expand_width,
+                                 visited_size=visited_size,
+                                 hop_backend=hop_backend)
 
     def explore(self, seed_vertices: Sequence[int], k: int, eps: float = 0.1,
                 exclude: Optional[np.ndarray] = None,

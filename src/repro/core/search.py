@@ -2,12 +2,15 @@
 beam engine.
 
 The actual search loop lives in :mod:`repro.core.beam` (see ARCHITECTURE.md,
-"Beam engine layering"): a lock-step beam over ``B`` query lanes inside one
-``jax.lax.while_loop``, where each hop gathers the ``d`` neighbors of the
-closest unchecked beam entry, scores them (``gather_dist`` Pallas kernel on
-TPU), and folds them into the distance-sorted beam with the fused
-``beam_merge`` bitonic partial-merge kernel (bit-identical to, and cheaper
-than, the seed's full ``(B, L+d)`` argsort per hop).
+"Multi-expansion beam layering"): a lock-step beam over ``B`` query lanes
+inside one ``jax.lax.while_loop``, where each hop gathers the ``E * d``
+neighbors of the ``expand_width`` closest unchecked beam entries, dedups
+them (beam broadcast, or the O(probes) visited filter of
+``core/visited.py``), scores them (``gather_dist`` Pallas kernel on TPU —
+or the whole hop fused into ``kernels/fused_hop``), and folds them into the
+distance-sorted beam with the fused ``beam_merge`` bitonic partial-merge
+kernel (bit-identical to, and cheaper than, the seed's full ``(B, L+d)``
+argsort per hop).
 
 This module keeps the public query API: :func:`range_search` resolves the
 beam-width/hop-budget defaults and jits the engine program;
@@ -72,7 +75,8 @@ def exact_rerank(exact_vectors: Array, queries: Array, cand_ids: Array,
 @functools.partial(
     jax.jit,
     static_argnames=("k", "beam_width", "max_hops", "metric", "backend",
-                     "merge_backend", "rerank_k"),
+                     "merge_backend", "rerank_k", "expand_width",
+                     "visited_size", "hop_backend"),
 )
 def range_search(
     graph: DEGraph,
@@ -90,6 +94,9 @@ def range_search(
     merge_backend: str = "jnp",
     rerank_k: int = 0,
     exact_vectors: Optional[Array] = None,
+    expand_width: int = 1,
+    visited_size: Optional[int] = None,
+    hop_backend: str = "jnp",
 ) -> SearchResult:
     """Approximate k-NN for a batch of queries.
 
@@ -115,6 +122,17 @@ def range_search(
         ``rerank_k >= k``).  0 disables the second stage: results carry the
         store's (possibly compressed) distances.
       exact_vectors: (capacity, m) float32 exact rows for the rerank stage.
+      expand_width: E — beam entries expanded per lane per hop
+        (multi-expansion; 1 = the seed engine, bit for bit).
+      visited_size: per-lane visited hash-set slots (power of two).  None
+        auto-sizes: ``beam.default_visited_size`` when the fused hop
+        kernel is requested (which needs the filter), else 0 — the
+        beam-broadcast dedup, which benchmarks/search_pareto.py measures
+        faster than the hash ops for the jnp hop on CPU.  Pass an explicit
+        size to force the filter (e.g. the "visited" sweep variant).
+      hop_backend: "jnp" composed hop | "pallas" fused hop kernel
+        (``kernels/fused_hop``: adjacency gather -> visited filter ->
+        vector gather -> distance -> compaction in one kernel).
     """
     n_ex = exclude.shape[1] if exclude is not None else 0
     L = (beam_width if beam_width is not None
@@ -131,19 +149,26 @@ def range_search(
         L = max(L, rerank_k + n_ex)   # room for rerank_k non-excluded hits
     if max_hops <= 0:
         max_hops = beam.default_max_hops(L)
+    if visited_size is None:
+        visited_size = (beam.default_visited_size(L, graph.degree)
+                        if hop_backend == "pallas" else 0)
+    # dropped visited inserts can (rarely) duplicate a beam entry; the
+    # dedup in extract is the result-level guarantee
+    dedup = visited_size > 0
 
     state = beam.beam_search(
         graph, vectors, queries, seed_ids, k=k, eps=eps, beam_width=L,
         max_hops=max_hops, metric=metric, exclude=exclude, backend=backend,
-        merge_backend=merge_backend)
+        merge_backend=merge_backend, expand_width=expand_width,
+        visited_size=visited_size, hop_backend=hop_backend)
     if rerank_k:
-        cand_ids, _ = beam.extract(state, rerank_k)
+        cand_ids, _ = beam.extract(state, rerank_k, dedup=dedup)
         out_ids, out_d = exact_rerank(exact_vectors, queries, cand_ids,
                                       k=k, metric=metric)
         evals = state.evals + (cand_ids != INVALID).sum(axis=1,
                                                         dtype=jnp.int32)
     else:
-        out_ids, out_d = beam.extract(state, k)
+        out_ids, out_d = beam.extract(state, k, dedup=dedup)
         evals = state.evals
     return SearchResult(ids=out_ids, dists=out_d, hops=state.hops,
                         evals=evals)
@@ -163,12 +188,27 @@ def medoid_seed(vectors: Array, n: int) -> int:
 
 def search_graph(graph: DEGraph, vectors: Array, queries: Array, *,
                  k: int, eps: float = 0.1, seed: Optional[int] = None,
-                 beam_width: Optional[int] = None, metric: str = "l2",
-                 backend: str = "jnp") -> SearchResult:
-    """Convenience wrapper: single shared seed (median vertex by default)."""
+                 beam_width: Optional[int] = None, max_hops: int = 0,
+                 metric: str = "l2", exclude: Optional[Array] = None,
+                 backend: str = "jnp", merge_backend: str = "jnp",
+                 rerank_k: int = 0, exact_vectors: Optional[Array] = None,
+                 expand_width: int = 1, visited_size: Optional[int] = None,
+                 hop_backend: str = "jnp") -> SearchResult:
+    """Convenience wrapper: single shared seed (median vertex by default),
+    otherwise the full :func:`range_search` signature passed through
+    verbatim.
+
+    ``vectors`` doubles as the seed-medoid source, so when a
+    :class:`~repro.quant.VectorStore` is searched with ``rerank_k``, pass
+    the float rows via ``exact_vectors`` and an explicit ``seed``."""
     if seed is None:
         seed = medoid_seed(vectors, int(graph.n))
     B = queries.shape[0]
     seeds = jnp.full((B, 1), seed, dtype=jnp.int32)
     return range_search(graph, vectors, queries, seeds, k=k, eps=eps,
-                        beam_width=beam_width, metric=metric, backend=backend)
+                        beam_width=beam_width, max_hops=max_hops,
+                        metric=metric, exclude=exclude, backend=backend,
+                        merge_backend=merge_backend, rerank_k=rerank_k,
+                        exact_vectors=exact_vectors,
+                        expand_width=expand_width,
+                        visited_size=visited_size, hop_backend=hop_backend)

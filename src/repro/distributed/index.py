@@ -44,7 +44,9 @@ def make_sharded_search(mesh: Mesh, *, k: int, eps: float = 0.1,
                         metric: str = "l2", shard_axis: str = "model",
                         batch_axes="data", exclude_width: int = 0,
                         codec: str = "float32",
-                        rerank_k: int = 0) -> Callable:
+                        rerank_k: int = 0, expand_width: int = 1,
+                        visited_size: Optional[int] = None,
+                        hop_backend: str = "jnp") -> Callable:
     """Build the jit-able sharded search step.
 
     f(adjacency (S, Ns, d) i32, vectors (S, Ns, m) f32, n (S,) i32,
@@ -60,6 +62,11 @@ def make_sharded_search(mesh: Mesh, *, k: int, eps: float = 0.1,
     float store and a ``pmin`` over the shard axis fills every lane.  The
     extra collective volume is one (B, rerank_k) f32 pmin; the final top-k
     ordering is exactly the float ordering of the surviving candidates.
+
+    ``expand_width`` / ``visited_size`` / ``hop_backend`` configure the
+    shard-local multi-expansion engine (``visited_size=None`` auto-sizes
+    like ``range_search``); the collective protocol is unchanged — multi-
+    expansion only reshapes the per-shard ``while_loop``.
     """
     from repro.quant.store import VectorStore
 
@@ -97,11 +104,16 @@ def make_sharded_search(mesh: Mesh, *, k: int, eps: float = 0.1,
              else beam.default_beam_width(rr, g.degree, seeds.shape[1],
                                           n_ex))
         L = max(L, rr, seeds.shape[1], rr + n_ex)
+        vs = visited_size
+        if vs is None:
+            vs = (beam.default_visited_size(L, g.degree)
+                  if hop_backend == "pallas" else 0)
         state = beam.beam_search(
             g, store, queries, seeds, k=rr, eps=eps, beam_width=L,
             max_hops=beam.default_max_hops(L), metric=metric,
-            exclude=excl_local)
-        lids, ldists = beam.extract(state, rr)
+            exclude=excl_local, expand_width=expand_width,
+            visited_size=vs, hop_backend=hop_backend)
+        lids, ldists = beam.extract(state, rr, dedup=vs > 0)
         gids = jnp.where(lids == INVALID, INVALID, lids * n_shards + shard)
         dists, ids = topk_merge_allgather(ldists, gids, rr, shard_axis)
         if quantized:
@@ -233,11 +245,18 @@ class ShardedDEG:
 
     def search(self, mesh: Mesh, queries: np.ndarray, k: int,
                eps: float = 0.1, batch_axes="data",
-               rerank_k: int = 0) -> tuple:
-        f = make_sharded_search(mesh, k=k, eps=eps,
-                                metric=self.params.metric,
-                                batch_axes=batch_axes, codec=self.codec,
-                                rerank_k=rerank_k)
+               rerank_k: int = 0, expand_width: Optional[int] = None,
+               visited_size: Optional[int] = None,
+               hop_backend: Optional[str] = None) -> tuple:
+        f = make_sharded_search(
+            mesh, k=k, eps=eps, metric=self.params.metric,
+            batch_axes=batch_axes, codec=self.codec, rerank_k=rerank_k,
+            expand_width=(self.params.expand_width if expand_width is None
+                          else expand_width),
+            visited_size=(self.params.visited_size if visited_size is None
+                          else visited_size),
+            hop_backend=(self.params.hop_backend if hop_backend is None
+                         else hop_backend))
         args = [self.adjacency, self.vectors]
         if self.codec != "float32":
             args += [self.codes, self.scales]

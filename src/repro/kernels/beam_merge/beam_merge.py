@@ -109,7 +109,8 @@ def _bitonic_merge(fields):
 
 
 def merge_beam_candidates(beam_dists, beam_payload, cand_dists, cand_payload,
-                          *, out_width: int | None = None):
+                          *, out_width: int | None = None,
+                          presort: str = "auto"):
     """The fused merge on plain arrays (shared by kernel body and jnp path).
 
     Args:
@@ -118,6 +119,13 @@ def merge_beam_candidates(beam_dists, beam_payload, cand_dists, cand_payload,
       beam_payload: tuple of (..., L) arrays carried through the permutation.
       cand_dists: (..., d) f32, arbitrary order (masked lanes = +inf).
       cand_payload: tuple of (..., d) arrays (same arity as beam_payload).
+      presort: how the candidate block is sorted before the merge network.
+        "network" = the bitonic sort (the only form a Pallas TPU kernel
+        body can lower); "argsort" = one stable XLA sort + gathers — a
+        stable sort by distance IS the (dist, rank) order, so the two are
+        bit-identical; "auto" = argsort for wide multi-expansion blocks
+        (d >= 32, where log^2 d network passes lose to one sort on CPU),
+        network otherwise.
     Returns:
       (dists, payload...) each (..., out_width or L) — the first entries of
       the stable-sorted [beam | candidates] concatenation.
@@ -129,16 +137,24 @@ def merge_beam_candidates(beam_dists, beam_payload, cand_dists, cand_payload,
     dp = _next_pow2(d)
     T = _next_pow2(L + dp)
     i32 = jnp.int32
+    if presort == "auto":
+        presort = "argsort" if d >= 32 else "network"
 
-    # --- candidates: pad to dp, bitonic sort asc, reverse -> descending ----
+    # --- candidates: pad to dp, sort asc by (dist, rank), reverse -> desc --
     pad_c = dp - d
     c_dists = jnp.concatenate(
         [cand_dists, jnp.full((*lead, pad_c), _INF, cand_dists.dtype)], -1)
-    c_rank = jnp.broadcast_to(L + jnp.arange(dp, dtype=i32), (*lead, dp))
     c_pay = tuple(
         jnp.concatenate([p, jnp.zeros((*lead, pad_c), p.dtype)], -1)
         for p in cand_payload)
-    c_fields = _bitonic_sort((c_dists, c_rank) + c_pay)
+    if presort == "argsort":
+        order = jnp.argsort(c_dists, axis=-1, stable=True)
+        take = functools.partial(jnp.take_along_axis, indices=order, axis=-1)
+        c_fields = ((take(c_dists), (L + order).astype(i32))
+                    + tuple(take(p) for p in c_pay))
+    else:
+        c_rank = jnp.broadcast_to(L + jnp.arange(dp, dtype=i32), (*lead, dp))
+        c_fields = _bitonic_sort((c_dists, c_rank) + c_pay)
     c_fields = tuple(x[..., ::-1] for x in c_fields)
 
     # --- bitonic sequence: [beam asc | +inf pads | candidates desc] --------
@@ -164,7 +180,8 @@ def _kernel(bd_ref, bi_ref, bc_ref, bx_ref, cd_ref, ci_ref, cc_ref, cx_ref,
             od_ref, oi_ref, oc_ref, ox_ref):
     out = merge_beam_candidates(
         bd_ref[...], (bi_ref[...], bc_ref[...], bx_ref[...]),
-        cd_ref[...], (ci_ref[...], cc_ref[...], cx_ref[...]))
+        cd_ref[...], (ci_ref[...], cc_ref[...], cx_ref[...]),
+        presort="network")       # sort primitives don't lower in Pallas TPU
     od_ref[...], oi_ref[...], oc_ref[...], ox_ref[...] = out
 
 

@@ -1,0 +1,4 @@
+from .ops import fused_hop
+from .ref import fused_hop_ref
+
+__all__ = ["fused_hop", "fused_hop_ref"]

@@ -1,0 +1,163 @@
+"""Fused multi-expansion hop Pallas TPU kernel.
+
+One hop of the multi-expansion beam engine (``core/beam.py``,
+``expand_width=E``) is, per query lane: gather the adjacency rows of the E
+selected vertices, drop neighbors already visited, gather the surviving
+vector rows, score them against the query, and keep those inside the range
+radius.  In plain XLA that is four HBM round-trips per hop (adjacency
+gather, visited-table gather, ``(B, E*d, m)`` vector gather, compare) with
+the gathered tensors materialized between them.  Here the whole hop body
+runs in one kernel:
+
+* **adjacency-row gather** — the selected vertex ids are *scalar-prefetched*
+  (SMEM before the grid starts), so the BlockSpec index_map DMAs row
+  ``sel[b, e]`` HBM->VMEM directly (the idiomatic Pallas TPU gather);
+* **visited filter** — the lane's (1, V) visited table sits in VMEM; a
+  neighbor is dropped on a whole-row compare (an id can only ever be stored
+  at one of its own probe slots — see ``core/visited.py`` — so row
+  membership equals probe membership, branch-free);
+* **vector gather** — ``vectors`` stays in HBM (``ANY`` memory space) and
+  each *surviving* row (the DMA is gated on the filter verdict, so
+  filtered neighbors cost no HBM traffic or flops) is pulled by a manual
+  ``make_async_copy`` whose source index is the neighbor id just read
+  from the adjacency row in VMEM — the data-dependent gather BlockSpecs
+  cannot express;
+* **distance + compaction** — the distance folds into a keep test against
+  the per-lane radius bound, and kept candidates are written through a
+  monotone SMEM write pointer: the output block is *compacted* (kept
+  candidates first, discovery order), so the beam merge consumes a dense
+  prefix.  Compaction is stable, which makes the merged beam bit-identical
+  to merging the uncompacted candidate block (rank ties preserve relative
+  order).
+
+grid = (B, E): step (b, e) walks the d neighbors of selection e, revisiting
+the lane-wide output block (index_map pins it to (b, 0)) so the write
+pointer and eval counter accumulate across the E selections of a lane; a
+lane-private ``seen`` scratch row dedups neighbors shared by two selections
+of the *same hop* (matching the oracle's first-occurrence mask).
+
+Outputs: compacted (cand_ids, cand_dists), the valid-masked raw neighbor
+ids (for the caller's visited-set insertion), and the per-lane count of
+distance evaluations.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_INVALID = -1
+
+
+def _kernel(sel_ref, act_ref, nv_ref, adj_ref, vis_ref, q_ref, dmax_ref,
+            vec_hbm, cid_ref, cd_ref, nbr_ref, ev_ref,
+            seen_ref, row_ref, ptr_ref, sem, *, squared: bool):
+    b = pl.program_id(0)
+    e = pl.program_id(1)
+    d = adj_ref.shape[1]
+    n_rows = vec_hbm.shape[0]
+
+    @pl.when(e == 0)
+    def _reset():
+        cid_ref[...] = jnp.full(cid_ref.shape, _INVALID, jnp.int32)
+        cd_ref[...] = jnp.full(cd_ref.shape, jnp.inf, jnp.float32)
+        seen_ref[...] = jnp.full(seen_ref.shape, _INVALID, jnp.int32)
+        ev_ref[0, 0] = jnp.int32(0)
+        ptr_ref[0] = jnp.int32(0)
+
+    act = act_ref[b, e] != 0
+    nv = nv_ref[0]
+    dmax = dmax_ref[0, 0]
+    q = q_ref[0, :].astype(jnp.float32)
+
+    def body(j, _):
+        nid = adj_ref[0, j]
+        valid = act & (nid != _INVALID) & (nid < nv)
+        nbr_ref[0, pl.dslice(j, 1)] = jnp.where(valid, nid, _INVALID)[None]
+        dup = (seen_ref[0, :] == nid).any()
+        vis = (vis_ref[0, :] == nid).any()
+        scored = valid & ~dup & ~vis
+
+        # only surviving rows are DMA'd and scored — this gate is where
+        # the visited filter actually saves HBM traffic and flops
+        @pl.when(scored)
+        def _score():
+            cp = pltpu.make_async_copy(
+                vec_hbm.at[pl.dslice(jnp.clip(nid, 0, n_rows - 1), 1), :],
+                row_ref, sem)
+            cp.start()
+            cp.wait()
+            diff = row_ref[0, :].astype(jnp.float32) - q
+            d2 = jnp.maximum(jnp.sum(diff * diff), 0.0)
+            dist = d2 if squared else jnp.sqrt(d2)
+            seen_ref[0, pl.dslice(e * d + j, 1)] = nid[None]
+            ev_ref[0, 0] = ev_ref[0, 0] + 1
+            keep = dist <= dmax
+            ptr = ptr_ref[0]
+
+            @pl.when(keep)
+            def _write():
+                cid_ref[0, pl.dslice(ptr, 1)] = nid[None]
+                cd_ref[0, pl.dslice(ptr, 1)] = dist[None]
+
+            ptr_ref[0] = ptr + keep.astype(jnp.int32)
+
+        return 0
+
+    jax.lax.fori_loop(0, d, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("squared", "interpret"))
+def fused_hop_pallas(adjacency: jax.Array, vectors: jax.Array,
+                     sel_ids: jax.Array, act: jax.Array, queries: jax.Array,
+                     dmax: jax.Array, visited: jax.Array,
+                     n_valid: jax.Array, *, squared: bool = False,
+                     interpret: bool = True):
+    """adjacency (N, d) i32, vectors (Nv, m) float, sel_ids (B, E) i32 in
+    [0, N), act (B, E) i32 flags, queries (B, m) float, dmax (B, 1) f32,
+    visited (B, V) i32, n_valid (1,) i32
+    -> (cand_ids (B, E*d) i32, cand_dists (B, E*d) f32,
+        nbr_ids (B, E*d) i32, evals (B, 1) i32)."""
+    N, d = adjacency.shape
+    B, E = sel_ids.shape
+    m = vectors.shape[1]
+    V = visited.shape[1]
+    Ed = E * d
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, E),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda b, e, sel, act, nv: (sel[b, e], 0)),
+            pl.BlockSpec((1, V), lambda b, e, sel, act, nv: (b, 0)),
+            pl.BlockSpec((1, m), lambda b, e, sel, act, nv: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, e, sel, act, nv: (b, 0)),
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Ed), lambda b, e, sel, act, nv: (b, 0)),
+            pl.BlockSpec((1, Ed), lambda b, e, sel, act, nv: (b, 0)),
+            pl.BlockSpec((1, d), lambda b, e, sel, act, nv: (b, e)),
+            pl.BlockSpec((1, 1), lambda b, e, sel, act, nv: (b, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, Ed), jnp.int32),      # seen: scored ids this hop
+            pltpu.VMEM((1, m), vectors.dtype),   # DMA landing row
+            pltpu.SMEM((1,), jnp.int32),         # compaction write pointer
+            pltpu.SemaphoreType.DMA(()),
+        ],
+    )
+    kernel = functools.partial(_kernel, squared=squared)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Ed), jnp.int32),
+            jax.ShapeDtypeStruct((B, Ed), jnp.float32),
+            jax.ShapeDtypeStruct((B, Ed), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(sel_ids, act, n_valid, adjacency, visited, queries, dmax, vectors)

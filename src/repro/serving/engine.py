@@ -49,12 +49,20 @@ class QueryEngine:
     def __init__(self, index: DEGIndex, *, k: int = 10, eps: float = 0.1,
                  max_batch: int = 64, refine_budget: int = 0,
                  beam_width: Optional[int] = None, exclude_width: int = 8,
-                 codec: str = "float32", rerank_k: Optional[int] = None):
+                 codec: str = "float32", rerank_k: Optional[int] = None,
+                 expand_width: Optional[int] = None,
+                 visited_size: Optional[int] = None,
+                 hop_backend: Optional[str] = None):
         """``codec`` picks the vector store the beam traverses for THIS
         engine ("float32" exact | "fp16" | "sq8"); compressed codecs run
         the two-stage search (exact rerank of ``rerank_k`` candidates,
         default ``4 * k``).  Engines over the same index may choose
-        different codecs — the index caches one store per codec."""
+        different codecs — the index caches one store per codec.
+
+        ``expand_width`` / ``visited_size`` / ``hop_backend`` configure the
+        multi-expansion engine for this engine's flushes (None = inherit
+        the index's ``DEGParams`` knobs); engines over one index may serve
+        different (E, backend) points of the Pareto sweep."""
         from repro.quant.codec import CODECS
 
         if codec not in CODECS:
@@ -63,6 +71,9 @@ class QueryEngine:
         self.index = index
         self.k, self.eps, self.beam_width = k, eps, beam_width
         self.codec, self.rerank_k = codec, rerank_k
+        self.expand_width = expand_width
+        self.visited_size = visited_size
+        self.hop_backend = hop_backend
         self.max_batch = max_batch
         self.refine_budget = refine_budget
         self.stats = EngineStats()
@@ -172,7 +183,8 @@ class QueryEngine:
             qs, seeds, excl, k=self.k, eps=self.eps,
             beam_width=self.beam_width,
             quantized=None if self.codec == "float32" else self.codec,
-            rerank_k=self.rerank_k)
+            rerank_k=self.rerank_k, expand_width=self.expand_width,
+            visited_size=self.visited_size, hop_backend=self.hop_backend)
         ids, dists = np.asarray(res.ids), np.asarray(res.dists)
         self.stats.total_search_s += time.time() - t0
         self.stats.flushes += 1

@@ -1,0 +1,261 @@
+"""Multi-expansion beam engine: E=1 golden parity, visited-filter
+semantics, recall parity for E in {2, 4}, and the threading of the engine
+knobs through every driver layer."""
+import dataclasses
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DEGParams, beam, build_deg, exact_knn, recall_at_k
+from repro.core import visited as vset
+from repro.core.graph import DEGraph, INVALID
+from repro.core.search import range_search
+
+_FIXTURE = os.path.join(os.path.dirname(__file__), "data",
+                        "range_search_golden.npz")
+
+
+@pytest.fixture(scope="module")
+def golden():
+    g = np.load(_FIXTURE)
+    graph = DEGraph(adjacency=jnp.asarray(g["adjacency"]),
+                    weights=jnp.asarray(g["weights"]),
+                    n=jnp.asarray(g["n"]))
+    return g, graph, jnp.asarray(g["vectors"]), jnp.asarray(g["queries"])
+
+
+@pytest.fixture(scope="module")
+def small_index():
+    from repro.data import make_dataset
+
+    base, queries = make_dataset("gaussian", 800, 30, 16, seed=7)
+    idx = build_deg(base, DEGParams(degree=8, k_ext=16, eps_ext=0.3,
+                                    k_opt=8), wave_size=32)
+    return base, queries, idx
+
+
+# ------------------------------------------------------------- visited set --
+def test_visited_insert_contains_roundtrip():
+    rng = np.random.default_rng(0)
+    tab = vset.make_table(4, 64)
+    ids = jnp.asarray(rng.integers(0, 500, size=(4, 12)), jnp.int32)
+    tab = vset.insert(tab, ids, jnp.ones(ids.shape, bool))
+    assert bool(vset.contains(tab, ids).all())
+    others = jnp.asarray(rng.integers(500, 900, size=(4, 12)), jnp.int32)
+    assert not bool(vset.contains(tab, others).any())
+
+
+def test_visited_insert_idempotent_and_superset():
+    """Re-inserting members is a strict no-op — the property that makes the
+    jnp hop (inserts scored ids) and the fused hop (inserts all valid ids)
+    produce bit-identical tables."""
+    rng = np.random.default_rng(1)
+    tab = vset.make_table(2, 32)
+    a = jnp.asarray(rng.integers(0, 100, size=(2, 6)), jnp.int32)
+    b = jnp.asarray(rng.integers(100, 200, size=(2, 6)), jnp.int32)
+    tab1 = vset.insert(tab, a, jnp.ones(a.shape, bool))
+    again = vset.insert(tab1, a, jnp.ones(a.shape, bool))
+    assert bool((again == tab1).all())
+    # inserting the superset [a | b] onto tab1 == inserting just b
+    sup = vset.insert(tab1, jnp.concatenate([a, b], 1),
+                      jnp.ones((2, 12), bool))
+    only_b = vset.insert(tab1, b, jnp.ones(b.shape, bool))
+    assert bool((sup == only_b).all())
+
+
+def test_visited_mask_and_invalid():
+    tab = vset.make_table(1, 16)
+    ids = jnp.asarray([[3, 7, INVALID, 9]], jnp.int32)
+    mask = jnp.asarray([[True, False, True, True]])
+    tab = vset.insert(tab, ids, mask)
+    got = vset.contains(tab, ids)
+    assert got.tolist() == [[True, False, False, True]]
+
+
+def test_visited_full_table_drops_gracefully():
+    """A saturated table drops inserts (never corrupts existing members)."""
+    rng = np.random.default_rng(2)
+    tab = vset.make_table(1, 8)
+    first = jnp.asarray(rng.choice(1000, size=(1, 8), replace=False),
+                        jnp.int32)
+    tab = vset.insert(tab, first, jnp.ones(first.shape, bool))
+    members = vset.contains(tab, first)
+    more = jnp.asarray(rng.integers(1000, 2000, size=(1, 16)), jnp.int32)
+    tab2 = vset.insert(tab, more, jnp.ones(more.shape, bool))
+    assert bool((vset.contains(tab2, first) == members).all())
+
+
+def test_probe_positions_in_range():
+    ids = jnp.arange(100, dtype=jnp.int32).reshape(4, 25)
+    pos = vset.probe_positions(ids, 64, 4)
+    assert pos.shape == (4, 25, 4)
+    assert bool(((pos >= 0) & (pos < 64)).all())
+
+
+# ---------------------------------------------------- selection equivalence --
+def test_select_unchecked_e1_matches_argmax():
+    rng = np.random.default_rng(3)
+    for _ in range(20):
+        B, L = 5, 16
+        checked = rng.random(size=(B, L)) < 0.6
+        st = beam.BeamState(
+            ids=jnp.asarray(rng.integers(0, 99, (B, L)), jnp.int32),
+            dists=jnp.sort(jnp.asarray(rng.random((B, L)), jnp.float32), 1),
+            checked=jnp.asarray(checked), excluded=jnp.zeros((B, L), bool),
+            hops=jnp.zeros((B,), jnp.int32), evals=jnp.zeros((B,), jnp.int32))
+        pos1, un1 = beam._select_unchecked(st, 1)
+        posk, unk = beam._select_unchecked(st, 2)
+        np.testing.assert_array_equal(np.asarray(pos1[:, 0]),
+                                      np.asarray(posk[:, 0]))
+        np.testing.assert_array_equal(np.asarray(un1[:, 0]),
+                                      np.asarray(unk[:, 0]))
+        # E=2 second pick: the next unchecked position after the first
+        for b in range(B):
+            unchecked = [i for i in range(L) if not checked[b][i]]
+            if len(unchecked) >= 2:
+                assert int(posk[b, 1]) == unchecked[1] and bool(unk[b, 1])
+            else:
+                assert not bool(unk[b, 1])
+
+
+# ------------------------------------------------------------ golden parity --
+def test_golden_explicit_e1_bit_identical(golden):
+    """range_search with the multi-expansion knobs at their E=1 defaults
+    replays the seed fixture bit for bit — hops and evals included."""
+    g, graph, vecs, qs = golden
+    res = range_search(graph, vecs, qs, jnp.asarray(g["seeds_a"]),
+                       k=10, eps=0.1, expand_width=1, visited_size=0,
+                       hop_backend="jnp")
+    np.testing.assert_array_equal(np.asarray(res.ids), g["a_ids"])
+    np.testing.assert_array_equal(np.asarray(res.dists), g["a_dists"])
+    np.testing.assert_array_equal(np.asarray(res.hops), g["a_hops"])
+    np.testing.assert_array_equal(np.asarray(res.evals), g["a_evals"])
+
+
+def test_golden_visited_same_trajectory_fewer_evals(golden):
+    """The visited filter remembers evicted vertices, so at E=1 it follows
+    the identical trajectory (ids/dists/hops) while performing strictly no
+    more distance evaluations than the beam-broadcast dedup."""
+    g, graph, vecs, qs = golden
+    res = range_search(graph, vecs, qs, jnp.asarray(g["seeds_a"]),
+                       k=10, eps=0.1, expand_width=1, visited_size=1024)
+    np.testing.assert_array_equal(np.asarray(res.ids), g["a_ids"])
+    np.testing.assert_array_equal(np.asarray(res.dists), g["a_dists"])
+    np.testing.assert_array_equal(np.asarray(res.hops), g["a_hops"])
+    assert (np.asarray(res.evals) <= g["a_evals"]).all()
+    assert np.asarray(res.evals).mean() < g["a_evals"].mean()
+
+
+# ------------------------------------------------------------ recall parity --
+def test_multi_expansion_recall_parity(small_index):
+    base, queries, idx = small_index
+    _, ti = exact_knn(queries, base, 10)
+    ti = np.asarray(ti)
+    base_rec = recall_at_k(
+        np.asarray(idx.search(queries, k=10, eps=0.2, beam_width=48).ids),
+        ti)
+    for E in (2, 4):
+        res = idx.search(queries, k=10, eps=0.2, beam_width=48,
+                         expand_width=E)
+        rec = recall_at_k(np.asarray(res.ids), ti)
+        assert rec >= base_rec - 0.02, (E, rec, base_rec)
+        assert (np.asarray(res.hops) > 0).all()
+        assert (np.asarray(res.evals) >= np.asarray(res.hops)).all()
+
+
+def test_no_duplicates_even_with_tiny_visited_table(small_index):
+    """Dropped hash inserts must never surface as duplicate results — the
+    extract-time dedup is the guarantee."""
+    _, queries, idx = small_index
+    for E in (2, 4):
+        res = idx.search(queries, k=10, eps=0.2, beam_width=64,
+                         expand_width=E, visited_size=64)
+        for row in np.asarray(res.ids):
+            valid = row[row != INVALID]
+            assert len(set(valid.tolist())) == len(valid)
+
+
+def test_visited_results_sorted_and_true_metric(small_index):
+    base, queries, idx = small_index
+    res = idx.search(queries, k=5, eps=0.2, expand_width=4)
+    d = np.asarray(res.dists)
+    assert (np.diff(d, axis=1) >= -1e-6).all()
+    ids = np.asarray(res.ids)
+    for qi in range(4):
+        for j in range(3):
+            v = ids[qi, j]
+            if v == INVALID:
+                continue
+            true = np.linalg.norm(idx.vectors[v] - np.asarray(queries[qi]))
+            assert d[qi, j] == pytest.approx(true, rel=1e-4, abs=1e-4)
+
+
+# --------------------------------------------------------------- threading --
+def test_params_engine_knobs_inherited(small_index):
+    """DEGParams.expand_width flows through search_batch by default and
+    per-call overrides win."""
+    base, queries, idx = small_index
+    p2 = dataclasses.replace(idx.params, expand_width=2)
+    old = idx.params
+    try:
+        idx.params = p2
+        r_inherit = idx.search(queries[:8], k=10, eps=0.2, beam_width=48)
+        r_explicit = idx.search(queries[:8], k=10, eps=0.2, beam_width=48,
+                                expand_width=2)
+        np.testing.assert_array_equal(np.asarray(r_inherit.ids),
+                                      np.asarray(r_explicit.ids))
+        np.testing.assert_array_equal(np.asarray(r_inherit.evals),
+                                      np.asarray(r_explicit.evals))
+        # override back to classic E=1 must reproduce the classic engine
+        r_override = idx.search(queries[:8], k=10, eps=0.2, beam_width=48,
+                                expand_width=1, visited_size=0)
+        idx.params = old
+        r_classic = idx.search(queries[:8], k=10, eps=0.2, beam_width=48)
+        np.testing.assert_array_equal(np.asarray(r_override.ids),
+                                      np.asarray(r_classic.ids))
+        np.testing.assert_array_equal(np.asarray(r_override.evals),
+                                      np.asarray(r_classic.evals))
+    finally:
+        idx.params = old
+
+
+def test_exploration_with_multi_expansion(small_index):
+    """Exclusions (the browsing protocol) compose with E>1 + visited."""
+    base, _, idx = small_index
+    v = 17
+    ring = [int(u) for u in idx.builder.neighbors(v)]
+    excl = np.asarray([[v] + ring], np.int32)
+    res = idx.search_batch(base[v][None], np.asarray([[v]], np.int32), excl,
+                           k=8, eps=0.2, expand_width=2)
+    ids = [int(x) for x in np.asarray(res.ids)[0] if x != INVALID]
+    assert ids and not (set(ids) & set([v] + ring))
+
+
+def test_quantized_two_stage_with_multi_expansion(small_index):
+    base, queries, idx = small_index
+    _, ti = exact_knn(queries, base, 10)
+    res = idx.search_batch(queries, k=10, eps=0.2, quantized="sq8",
+                           rerank_k=30, expand_width=2)
+    rec = recall_at_k(np.asarray(res.ids), np.asarray(ti))
+    assert rec >= 0.85
+
+
+def test_serving_engine_expand_width(small_index):
+    from repro.serving.engine import QueryEngine
+
+    base, queries, idx = small_index
+    eng = QueryEngine(idx, k=10, eps=0.2, max_batch=8, expand_width=2)
+    ids, dists = eng.search(queries[:8])
+    ref = idx.search_batch(queries[:8], k=10, eps=0.2, expand_width=2)
+    np.testing.assert_array_equal(ids, np.asarray(ref.ids))
+
+
+def test_search_presets_registry():
+    from repro.configs.deg import SEARCH_PRESETS
+
+    assert SEARCH_PRESETS["classic"].expand_width == 1
+    assert SEARCH_PRESETS["classic"].hop_backend == "jnp"
+    assert any(p.expand_width > 1 for p in SEARCH_PRESETS.values())
+    assert any(p.hop_backend == "pallas" for p in SEARCH_PRESETS.values())

@@ -154,6 +154,100 @@ def test_exploration_excluded_traversed_not_returned(small_index):
     assert float(np.asarray(res.dists)[0, 0]) <= best * 1.5
 
 
+def test_extract_stable_on_duplicate_distances():
+    """Tie-determinism (satellite): ``beam.extract`` must resolve duplicate
+    distances by beam position (stable sort), exactly like
+    ``search.exact_rerank`` — not by whatever a non-stable argsort does."""
+    import jax.numpy as jnp
+
+    from repro.core import beam
+
+    ids = jnp.asarray([[5, 3, 9, 2], [8, 1, 4, 6]], jnp.int32)
+    dists = jnp.asarray([[1.0, 1.0, 1.0, 2.0], [0.5, 0.5, 0.5, 0.5]],
+                        jnp.float32)
+    st = beam.BeamState(ids=ids, dists=dists,
+                        checked=jnp.ones((2, 4), bool),
+                        excluded=jnp.zeros((2, 4), bool),
+                        hops=jnp.zeros((2,), jnp.int32),
+                        evals=jnp.zeros((2,), jnp.int32))
+    out_ids, out_d = beam.extract(st, 3)
+    np.testing.assert_array_equal(np.asarray(out_ids),
+                                  [[5, 3, 9], [8, 1, 4]])
+    # and it agrees with exact_rerank's stable tie order on the same data
+    from repro.core.search import exact_rerank
+
+    vecs = jnp.zeros((10, 4), jnp.float32)        # all-equal -> all ties
+    r_ids, _ = exact_rerank(vecs, jnp.zeros((2, 4)), ids, k=3)
+    np.testing.assert_array_equal(np.asarray(out_ids), np.asarray(r_ids))
+
+
+def test_extract_dedup_keeps_first_occurrence():
+    import jax.numpy as jnp
+
+    from repro.core import beam
+
+    st = beam.BeamState(
+        ids=jnp.asarray([[7, 7, 3, 7]], jnp.int32),
+        dists=jnp.asarray([[1.0, 1.0, 2.0, 3.0]], jnp.float32),
+        checked=jnp.ones((1, 4), bool), excluded=jnp.zeros((1, 4), bool),
+        hops=jnp.zeros((1,), jnp.int32), evals=jnp.zeros((1,), jnp.int32))
+    out_ids, out_d = beam.extract(st, 3, dedup=True)
+    np.testing.assert_array_equal(np.asarray(out_ids), [[7, 3, INVALID]])
+    assert np.isinf(np.asarray(out_d)[0, 2])
+
+
+def test_search_graph_full_plumbing(small_index):
+    """search_graph forwards the complete range_search signature
+    (satellite): exclude, merge_backend, rerank_k/exact_vectors, engine
+    knobs — none silently dropped."""
+    import jax.numpy as jnp
+
+    from repro.core.search import search_graph
+
+    base, queries, idx = small_index
+    g = idx.frozen()
+    vecs = idx._dev_vectors
+    qs = jnp.asarray(queries[:6])
+
+    # exclude: banned vertices never in results
+    banned = np.asarray(idx.search(queries[:6], k=3, eps=0.2).ids)
+    res = search_graph(g, vecs, qs, k=5, eps=0.2,
+                       exclude=jnp.asarray(banned))
+    for row, b in zip(np.asarray(res.ids), banned):
+        assert not (set(row.tolist()) & set(b.tolist()))
+
+    # merge_backend (argsort = seed semantics) must be honored and agree
+    res_a = search_graph(g, vecs, qs, k=5, eps=0.2,
+                         merge_backend="argsort")
+    res_j = search_graph(g, vecs, qs, k=5, eps=0.2)
+    np.testing.assert_array_equal(np.asarray(res_a.ids),
+                                  np.asarray(res_j.ids))
+
+    # rerank_k + exact_vectors: two-stage over the sq8 store returns
+    # exact float distances
+    store = idx.store_for("sq8")
+    res_q = search_graph(g, store, qs, k=5, eps=0.2, seed=idx.medoid(),
+                         rerank_k=20, exact_vectors=vecs)
+    ids = np.asarray(res_q.ids)
+    d = np.asarray(res_q.dists)
+    for qi in range(ids.shape[0]):
+        for j in range(ids.shape[1]):
+            if ids[qi, j] == INVALID:
+                continue
+            true = np.linalg.norm(idx.vectors[ids[qi, j]]
+                                  - np.asarray(queries[qi]))
+            assert d[qi, j] == pytest.approx(true, rel=1e-4, abs=1e-4)
+
+    # engine knobs reach the beam engine (E>1 runs and matches range_search)
+    from repro.core import range_search as _rs
+
+    res_e = search_graph(g, vecs, qs, k=5, eps=0.2, seed=0, expand_width=2)
+    seeds = jnp.zeros((6, 1), jnp.int32)
+    ref = _rs(g, vecs, qs, seeds, k=5, eps=0.2, expand_width=2)
+    np.testing.assert_array_equal(np.asarray(res_e.ids),
+                                  np.asarray(ref.ids))
+
+
 def test_medoid_seed_cached_and_invalidated(small_index):
     """DEGIndex caches the medoid entry vertex and recomputes only after
     the vector set changes (satellite: no device reduction per query)."""

@@ -1,0 +1,172 @@
+"""fused_hop kernel validation: exact parity (interpret mode) between the
+Pallas kernel and the jnp oracle on every discrete output (compacted ids,
+raw neighbor ids, eval counts) and allclose on distances (the 128-lane
+feature padding legally reorders the f32 reduction), plus engine-level
+equivalence of the two hop backends inside ``beam_search``."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import visited as vset
+from repro.core.graph import INVALID
+from repro.kernels.fused_hop import fused_hop, fused_hop_ref
+
+
+def _setup(rng, N, d, m, B, E, n_tab=64):
+    adj = rng.integers(0, N, size=(N, d)).astype(np.int32)
+    adj[rng.random(size=(N, d)) < 0.1] = INVALID       # ragged rows
+    vecs = rng.normal(size=(N, m)).astype(np.float32)
+    qs = rng.normal(size=(B, m)).astype(np.float32)
+    sel = rng.integers(0, N, size=(B, E)).astype(np.int32)
+    vis = vset.make_table(B, n_tab)
+    return (jnp.asarray(adj), jnp.asarray(vecs), jnp.asarray(sel),
+            jnp.asarray(qs), vis)
+
+
+def _both(adj, vecs, sel, qs, dmax, vis, n_valid):
+    ref = fused_hop_ref(adj, vecs, sel, qs, dmax, vis, n_valid=n_valid)
+    got = fused_hop(adj, vecs, sel, qs, dmax, vis, n_valid=n_valid,
+                    backend="pallas", interpret=True)
+    return ref, got
+
+
+def _assert_parity(ref, got):
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(ref[0]))
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(ref[1]),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(got[2]), np.asarray(ref[2]))
+    np.testing.assert_array_equal(np.asarray(got[3]), np.asarray(ref[3]))
+
+
+@pytest.mark.parametrize("N,d,m,B,E", [
+    (64, 6, 20, 5, 3),
+    (128, 16, 33, 3, 1),     # E=1, unaligned feature dim
+    (100, 8, 128, 2, 4),     # aligned feature dim
+])
+def test_kernel_matches_ref(N, d, m, B, E):
+    rng = np.random.default_rng(N + d + E)
+    adj, vecs, sel, qs, vis = _setup(rng, N, d, m, B, E)
+    vis = vset.insert(vis, adj[sel[:, 0]], jnp.ones((B, d), bool))
+    dmax = jnp.asarray(rng.uniform(5.0, 12.0, size=(B,)).astype(np.float32))
+    ref, got = _both(adj, vecs, sel, qs, dmax, vis, jnp.int32(N))
+    _assert_parity(ref, got)
+
+
+def test_visited_members_never_scored():
+    rng = np.random.default_rng(0)
+    adj, vecs, sel, qs, vis = _setup(rng, 80, 8, 16, 4, 2)
+    banned = adj[sel[:, 0]]                       # every neighbor of sel 0
+    vis = vset.insert(vis, banned, jnp.ones(banned.shape, bool))
+    dmax = jnp.full((4,), jnp.inf, jnp.float32)
+    for backend in ("jnp", "pallas"):
+        cid, _, _, ev = fused_hop(adj, vecs, sel, qs, dmax, vis,
+                                  n_valid=jnp.int32(80), backend=backend)
+        cid = np.asarray(cid)
+        for b in range(4):
+            bb = set(int(x) for x in np.asarray(banned)[b] if x != INVALID)
+            assert not (set(cid[b][cid[b] != INVALID].tolist()) & bb)
+
+
+def test_inactive_and_invalid_lanes():
+    rng = np.random.default_rng(1)
+    adj, vecs, sel, qs, vis = _setup(rng, 60, 5, 12, 3, 3)
+    sel = sel.at[0, :].set(INVALID)               # fully inactive lane
+    sel = sel.at[1, 2].set(INVALID)
+    dmax = jnp.full((3,), jnp.inf, jnp.float32)
+    ref, got = _both(adj, vecs, sel, qs, dmax, vis, jnp.int32(60))
+    _assert_parity(ref, got)
+    assert (np.asarray(got[0])[0] == INVALID).all()
+    assert int(np.asarray(got[3])[0]) == 0
+
+
+def test_n_valid_masks_high_ids():
+    rng = np.random.default_rng(2)
+    adj, vecs, sel, qs, vis = _setup(rng, 90, 6, 10, 4, 2)
+    sel = jnp.clip(sel, 0, 39)                    # keep selections valid
+    n_valid = jnp.int32(40)                       # half the rows invalid
+    dmax = jnp.full((4,), jnp.inf, jnp.float32)
+    ref, got = _both(adj, vecs, sel, qs, dmax, vis, n_valid)
+    _assert_parity(ref, got)
+    kept = np.asarray(got[0])
+    assert (kept[kept != INVALID] < 40).all()
+
+
+def test_compaction_is_stable_prefix():
+    """Kept candidates occupy a dense INVALID-free prefix, in discovery
+    (e-major, j-minor) order; everything after is INVALID/inf."""
+    rng = np.random.default_rng(3)
+    adj, vecs, sel, qs, vis = _setup(rng, 70, 7, 14, 4, 3)
+    dmax = jnp.asarray(rng.uniform(3.0, 6.0, size=(4,)).astype(np.float32))
+    cid, cd, nbr, _ = fused_hop(adj, vecs, sel, qs, dmax, vis,
+                                n_valid=jnp.int32(70), backend="pallas")
+    cid, cd, nbr = np.asarray(cid), np.asarray(cd), np.asarray(nbr)
+    for b in range(4):
+        row = cid[b]
+        n_kept = int((row != INVALID).sum())
+        assert (row[:n_kept] != INVALID).all()
+        assert (row[n_kept:] == INVALID).all()
+        assert np.isinf(cd[b][n_kept:]).all()
+        # discovery order: kept ids appear in the same relative order as in
+        # the raw neighbor stream
+        stream = [int(x) for x in nbr[b] if x != INVALID]
+        pos = [stream.index(int(x)) for x in row[:n_kept]]
+        assert pos == sorted(pos)
+
+
+def test_duplicate_selections_dedup():
+    """Two selections of the same vertex score its neighborhood once."""
+    rng = np.random.default_rng(4)
+    adj, vecs, sel, qs, vis = _setup(rng, 50, 6, 8, 2, 3)
+    sel = jnp.broadcast_to(sel[:, :1], sel.shape)       # E copies
+    dmax = jnp.full((2,), jnp.inf, jnp.float32)
+    ref, got = _both(adj, vecs, sel, qs, dmax, vis, jnp.int32(50))
+    _assert_parity(ref, got)
+    cid = np.asarray(got[0])
+    for b in range(2):
+        v = cid[b][cid[b] != INVALID]
+        assert len(set(v.tolist())) == len(v)
+    # evals bounded by the unique valid neighbors of ONE selection
+    uniq = [len({int(x) for x in np.asarray(adj)[int(s)] if x != INVALID})
+            for s in np.asarray(sel)[:, 0]]
+    assert (np.asarray(got[3]) <= np.asarray(uniq)).all()
+
+
+def test_engine_hop_backends_agree():
+    """beam_search with hop_backend='pallas' must traverse exactly like the
+    jnp composition (ids/hops/evals identical; distances to f32 tolerance)."""
+    from repro.core import DEGParams, beam, build_deg
+    from repro.data import make_dataset
+
+    base, queries = make_dataset("gaussian", 400, 12, 16, seed=11)
+    idx = build_deg(base, DEGParams(degree=8, k_ext=16), wave_size=16)
+    g = idx.frozen()
+    qs = jnp.asarray(queries)
+    seeds = jnp.full((qs.shape[0], 1), idx.medoid(), jnp.int32)
+    for E in (1, 2, 4):
+        kw = dict(k=8, eps=0.15, beam_width=32, max_hops=200,
+                  expand_width=E, visited_size=512)
+        st_j = beam.beam_search(g, idx._dev_vectors, qs, seeds,
+                                hop_backend="jnp", **kw)
+        st_p = beam.beam_search(g, idx._dev_vectors, qs, seeds,
+                                hop_backend="pallas", **kw)
+        np.testing.assert_array_equal(np.asarray(st_j.ids),
+                                      np.asarray(st_p.ids))
+        np.testing.assert_array_equal(np.asarray(st_j.hops),
+                                      np.asarray(st_p.hops))
+        np.testing.assert_array_equal(np.asarray(st_j.evals),
+                                      np.asarray(st_p.evals))
+        np.testing.assert_allclose(np.asarray(st_j.dists),
+                                   np.asarray(st_p.dists),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_fused_requires_visited():
+    from repro.core import beam
+    from repro.core.graph import DEGraph
+
+    g = DEGraph(adjacency=jnp.zeros((8, 4), jnp.int32),
+                weights=jnp.zeros((8, 4), jnp.float32), n=jnp.int32(8))
+    with pytest.raises(ValueError, match="visited"):
+        beam.beam_search(g, jnp.zeros((8, 4)), jnp.zeros((2, 4)),
+                         jnp.zeros((2, 1), jnp.int32), k=2, eps=0.1,
+                         beam_width=8, max_hops=4, hop_backend="pallas")
