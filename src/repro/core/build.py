@@ -124,6 +124,13 @@ class DEGIndex:
         # per-stage wall time of _insert_wave (candidate search vs vertex
         # extension) — benchmarks/build_cost.py reports both
         self.build_stats = {"search_s": 0.0, "extend_s": 0.0, "vertices": 0}
+        # mid-build checkpointing (persist/snapshot.py): every insert wave
+        # and refine chunk ticks the counter; when due, the full index state
+        # is snapshotted at the wave boundary (the only mid-build points
+        # where the graph invariants hold)
+        self._ckpt_path = None
+        self._ckpt_every = 0
+        self._wave_counter = 0
 
     # -- sizes -------------------------------------------------------------
     @property
@@ -254,6 +261,7 @@ class DEGIndex:
         self.build_stats["search_s"] += t1 - t0
         self.build_stats["extend_s"] += time.perf_counter() - t1
         self.build_stats["vertices"] += W
+        self._checkpoint_tick()
 
     def _post_insert(self, v: int, new_edges, cand_ids) -> None:
         if not self.params.optimize_new:
@@ -463,6 +471,48 @@ class DEGIndex:
             out[f"{name}_bytes"] = b
             out[f"{name}_ratio"] = exact / b if b else 0.0
         return out
+
+    # -- persistence (persist/snapshot.py owns the format) -------------------
+    def save(self, path) -> None:
+        """Snapshot the complete index state (graph, vectors, materialized
+        quant stores, params, RNG/build counters, medoid cache) to one
+        versioned npz.  ``DEGIndex.load(path)`` restores a search-identical,
+        immediately mutable index."""
+        from repro.persist import save_index
+
+        save_index(self, path)
+
+    @classmethod
+    def load(cls, path, params: "DEGParams | None" = None,
+             capacity: Optional[int] = None) -> "DEGIndex":
+        """Restore an index saved by :meth:`save`.  The device caches
+        (graph adjacency, vector buffer, quant stores) are rebuilt lazily
+        from the restored host state — see persist/snapshot.py."""
+        from repro.persist import load_index
+
+        return load_index(path, params=params, capacity=capacity)
+
+    def enable_checkpoints(self, path, every_waves: int = 1) -> None:
+        """Snapshot the full index to ``path`` every ``every_waves``
+        insert waves / refine chunks (at wave boundaries, where the graph
+        invariants hold).  ``path`` may contain ``{waves}`` / ``{n}``
+        placeholders to keep a checkpoint series instead of overwriting.
+        ``every_waves=0`` disables."""
+        try:
+            str(path).format(waves=0, n=0)   # fail at config time, not
+        except (KeyError, IndexError) as e:  # waves deep into the build
+            raise ValueError(
+                f"bad checkpoint path template {path!r}: only {{waves}} and "
+                f"{{n}} placeholders are supported ({e!r})")
+        self._ckpt_path = path
+        self._ckpt_every = int(every_waves)
+
+    def _checkpoint_tick(self) -> None:
+        self._wave_counter += 1
+        if (self._ckpt_path is not None and self._ckpt_every > 0
+                and self._wave_counter % self._ckpt_every == 0):
+            self.save(str(self._ckpt_path).format(
+                waves=self._wave_counter, n=self.n))
 
     # -- queries --------------------------------------------------------------
     def search_batch(self, queries: np.ndarray,

@@ -242,6 +242,10 @@ def refine_sweep(index: DEGIndex, vertices: Sequence[int], *,
     improved = 0
     verts = [int(v) for v in vertices]
     for c0 in range(0, len(verts), chunk):
+        if c0:
+            # chunk boundary = invariant-clean point; same checkpoint
+            # cadence as _insert_wave (persist/snapshot.py)
+            index._checkpoint_tick()
         verts_c = verts[c0:c0 + chunk]
         # batched Alg. 2: conformity of every chunk edge in ONE device call,
         # cached for the chunk instead of a host neighbor scan per vertex
@@ -295,4 +299,6 @@ def refine_sweep(index: DEGIndex, vertices: Sequence[int], *,
                 first_search=(lane_ids, lane_d), first_found=first_found)
             improved += int(changed)
             clean = clean and not changed
+    if verts:
+        index._checkpoint_tick()
     return improved

@@ -283,6 +283,22 @@ class ShardedDEG:
             self.adjacency = jnp.asarray(adj)
         return improved
 
+    # -- persistence (persist/sharded.py owns the format) ------------------
+    def save(self, path) -> None:
+        """Snapshot every sub-DEG (full persist sections) behind one
+        manifest; ``ShardedDEG.load`` restores exactly, or onto a different
+        shard count via reshard-on-restore."""
+        from repro.persist import save_sharded
+
+        save_sharded(self, path)
+
+    @classmethod
+    def load(cls, path, n_shards: Optional[int] = None,
+             wave_size: int = 8) -> "ShardedDEG":
+        from repro.persist import load_sharded
+
+        return load_sharded(path, n_shards=n_shards, wave_size=wave_size)
+
     def drop_shard(self, idx: int) -> "ShardedDEG":
         """Simulate losing one model shard: its sub-DEG serves nothing.
         (n=0 disables every vertex: recall degrades by ~1/S, service

@@ -60,11 +60,10 @@ def main() -> None:
           f"build {build_s:.1f}s, recall@10 {rec:.4f}, {qps:.0f} qps, "
           f"avg-hops {float(np.mean(np.asarray(res.hops))):.1f}")
     if args.out:
-        np.savez_compressed(
-            args.out, adjacency=idx.builder.adjacency[: idx.n],
-            weights=idx.builder.weights[: idx.n],
-            vectors=idx.vectors[: idx.n], degree=args.degree)
-        print(f"saved index to {args.out}")
+        # versioned full-state snapshot (persist/): serve.py warm-starts
+        # from this without rebuilding, and the restored index stays mutable
+        idx.save(args.out)
+        print(f"saved index snapshot to {args.out}")
 
 
 if __name__ == "__main__":

@@ -13,9 +13,42 @@ import time
 import numpy as np
 
 
+def _load_index(path):
+    """Warm-start: the persist snapshot format, with a fallback for the
+    legacy build_index archives (adjacency/weights/vectors/degree keys)."""
+    from repro.core.build import DEGIndex, DEGParams
+
+    with np.load(path) as z:
+        legacy = "__meta__" not in z
+        if legacy:
+            adjacency = z["adjacency"]
+            weights = z["weights"]
+            vectors = z["vectors"]
+            degree = int(z["degree"])
+    if not legacy:
+        return DEGIndex.load(path)
+    params = DEGParams(degree=degree, k_ext=max(2 * degree, 20))
+    idx = DEGIndex(vectors.shape[1], params, capacity=vectors.shape[0] + 1024)
+    idx.vectors[: vectors.shape[0]] = vectors
+    idx._put_rows(vectors, 0)
+    from repro.core.graph import GraphBuilder
+
+    b = GraphBuilder(idx.capacity, degree)
+    b.load(adjacency, weights, adjacency.shape[0])
+    idx.builder = b
+    return idx
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--index", default=None, help=".npz from build_index.py")
+    ap.add_argument("--index", default=None,
+                    help="warm-start from a persist snapshot (.npz from "
+                    "build_index.py --out / DEGIndex.save); legacy "
+                    "adjacency/vectors archives are still accepted")
+    ap.add_argument("--save-index", default=None,
+                    help="snapshot the (possibly mutated) index to this "
+                    "path after serving — the restart loop: "
+                    "--index X ... --save-index X")
     ap.add_argument("--n", type=int, default=8000)
     ap.add_argument("--dim", type=int, default=32)
     ap.add_argument("--degree", type=int, default=16)
@@ -54,19 +87,8 @@ def main() -> None:
     from repro.serving.engine import QueryEngine
 
     if args.index:
-        z = np.load(args.index)
-        params = DEGParams(degree=int(z["degree"]),
-                           k_ext=max(2 * int(z["degree"]), 20))
-        idx = DEGIndex(z["vectors"].shape[1], params,
-                       capacity=z["vectors"].shape[0] + 1024)
-        idx.vectors[: z["vectors"].shape[0]] = z["vectors"]
-        idx._put_rows(z["vectors"], 0)
-        from repro.core.graph import GraphBuilder
-
-        b = GraphBuilder(idx.capacity, int(z["degree"]))
-        b.load(z["adjacency"], z["weights"], z["adjacency"].shape[0])
-        idx.builder = b
-        base = z["vectors"]
+        idx = _load_index(args.index)
+        base = idx.vectors[: idx.n].copy()
         rng = np.random.default_rng(args.seed)
         queries = base[rng.integers(0, base.shape[0], args.queries)] + \
             0.01 * rng.normal(size=(args.queries, base.shape[1])
@@ -119,6 +141,10 @@ def main() -> None:
                 v = ids[0]
     print(f"ran {args.explore_sessions} exploration sessions "
           f"(4 hops each, exclusion verified)")
+    if args.save_index:
+        engine.save(args.save_index)
+        print(f"saved index snapshot to {args.save_index} "
+              f"(n={idx.n}; warm-start with --index)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,27 @@
+"""Versioned snapshot/restore of the full DEG index state.
+
+Layering (see ARCHITECTURE.md "Persistence layering"):
+
+* :mod:`repro.persist.format` — the self-describing npz envelope
+  (``format_version``, per-section CRC-32 checksums, typed load errors);
+* :mod:`repro.persist.snapshot` — one :class:`DEGIndex`: graph + vectors +
+  materialized quant stores + params + RNG/build counters + medoid cache,
+  plus the mid-build checkpoint contract;
+* :mod:`repro.persist.sharded` — :class:`ShardedDEG`: per-shard sections
+  behind a manifest, exact restore or reshard-on-restore.
+
+The index classes expose the ergonomic face (``DEGIndex.save/load``,
+``ShardedDEG.save/load``, ``QueryEngine.from_snapshot``); everything
+funnels through the functions here.
+"""
+from .format import (FORMAT_VERSION, SUPPORTED_VERSIONS, SnapshotChecksumError,
+                     SnapshotFormatError, read_snapshot, write_snapshot)
+from .sharded import load_sharded, save_sharded
+from .snapshot import load_index, save_index
+
+__all__ = [
+    "FORMAT_VERSION", "SUPPORTED_VERSIONS",
+    "SnapshotFormatError", "SnapshotChecksumError",
+    "read_snapshot", "write_snapshot",
+    "save_index", "load_index", "save_sharded", "load_sharded",
+]

@@ -1,0 +1,110 @@
+"""Snapshot/restore of a :class:`repro.distributed.index.ShardedDEG`.
+
+One npz holds a **manifest** (shard count, params, attached codec, per-shard
+payloads) plus the full per-shard sections of ``persist/snapshot.py`` under
+``shard{i}/...`` prefixes — each sub-DEG round-trips exactly like a single
+index, including its build RNG stream (so post-restore incremental growth
+of any shard stays bit-identical to a never-persisted one).
+
+Restore semantics (ARCHITECTURE.md "Persistence layering"):
+
+* **same shard count** — exact restore: every sub-DEG is rebuilt from its
+  sections, then the stacked device arrays (adjacency / vectors / n /
+  seeds) are refreshed from the restored builders — the same refresh
+  ``ShardedDEG.refine`` runs after shard-local surgery — and the attached
+  codec is re-encoded per shard (deterministic: same rows -> same
+  calibration -> same codes).
+* **different shard count** — the round-robin partition (global id ``g``
+  on shard ``g % S`` at row ``g // S``) is partition-specific, so graph
+  topology cannot be reused: the global vector set is reassembled in
+  global-id order and the sub-DEGs are *rebuilt* at the new count.
+  Vectors, params and codec survive; per-shard topology and build RNG
+  streams do not (they describe partitions that no longer exist).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .format import SnapshotFormatError, read_snapshot, write_snapshot
+from .snapshot import index_sections, restore_into
+
+KIND = "sharded_deg"
+
+
+def save_sharded(sharded, path) -> None:
+    sections: dict = {}
+    shard_payloads = []
+    for i, sh in enumerate(sharded.shards):
+        secs, payload = index_sections(sh)
+        for sec, entries in secs.items():
+            sections[f"shard{i}/{sec}"] = entries
+        shard_payloads.append(payload)
+    manifest = {
+        "n_shards": sharded.n_shards,
+        "params": dataclasses.asdict(sharded.params),
+        "codec": sharded.codec,
+        "shards": shard_payloads,
+    }
+    write_snapshot(path, KIND, sections, manifest)
+
+
+def load_sharded(path, n_shards: Optional[int] = None, wave_size: int = 8):
+    """Restore a ShardedDEG.  ``n_shards=None`` (or the saved count) is the
+    exact restore; a different count triggers reshard-on-restore (rebuild
+    from the persisted vectors — see module docstring)."""
+    from repro.core.build import DEGIndex, DEGParams
+    from repro.core.graph import INVALID
+    from repro.distributed.index import ShardedDEG, build_sharded_deg
+    import jax.numpy as jnp
+
+    manifest, sections = read_snapshot(path, expected_kind=KIND)
+    S = int(manifest["n_shards"])
+    params = DEGParams(**manifest["params"])
+    codec = manifest["codec"]
+
+    shards = []
+    for i, payload in enumerate(manifest["shards"]):
+        prefix = f"shard{i}/"
+        secs = {sec[len(prefix):]: entries
+                for sec, entries in sections.items()
+                if sec.startswith(prefix)}
+        if "vectors" not in secs:
+            raise SnapshotFormatError(
+                f"{path}: manifest names shard {i} but its sections are "
+                "missing")
+        sh = DEGIndex(int(payload["dim"]), params,
+                      capacity=int(payload["capacity"]))
+        restore_into(sh, payload, secs)
+        shards.append(sh)
+
+    if n_shards is not None and int(n_shards) != S:
+        # reshard-on-restore: reassemble the global id order and rebuild
+        n_per = [sh.n for sh in shards]
+        total = sum(n_per)
+        dim = shards[0].dim
+        vectors = np.zeros((total, dim), np.float32)
+        for s, sh in enumerate(shards):
+            vectors[s: s + S * sh.n: S] = sh.vectors[: sh.n]
+        return build_sharded_deg(vectors, int(n_shards), params=params,
+                                 wave_size=wave_size, codec=codec)
+
+    # exact restore: stacked-adjacency refresh from the restored builders
+    ns = max(sh.n for sh in shards)
+    d = params.degree
+    m = shards[0].dim
+    adj = np.full((S, ns, d), INVALID, dtype=np.int32)
+    vecs = np.zeros((S, ns, m), dtype=np.float32)
+    seeds = np.zeros((S,), dtype=np.int32)
+    n_arr = np.zeros((S,), dtype=np.int32)
+    for s, sh in enumerate(shards):
+        adj[s, : sh.n] = sh.builder.adjacency[: sh.n]
+        vecs[s, : sh.n] = sh.vectors[: sh.n]
+        n_arr[s] = sh.n
+        seeds[s] = sh.medoid()
+    sd = ShardedDEG(shards=shards, adjacency=jnp.asarray(adj),
+                    vectors=jnp.asarray(vecs), n=jnp.asarray(n_arr),
+                    seeds=jnp.asarray(seeds), params=params)
+    return sd.quantize(codec) if codec != "float32" else sd

@@ -1,0 +1,145 @@
+"""Full-state snapshot/restore of one :class:`repro.core.build.DEGIndex`.
+
+What a ``deg_index`` snapshot carries (sections sized by ``n``, the live
+vertices — the paper's "predictable index size" claim extends to disk):
+
+* ``graph``   — dense adjacency + weights rows of the live vertices;
+* ``vectors`` — the float32 rows the index serves from;
+* ``store_{codec}`` — every *materialized* quantized store: encoded rows
+  plus the codec's calibration state (the sq8 per-dimension scale), so a
+  restored index serves compressed searches bit-identically without
+  re-encoding (re-encoding would re-calibrate and shift codes);
+* ``pending`` — points buffered before the ``K_{d+1}`` bootstrap exists;
+* payload — ``DEGParams``, the build RNG stream state (bit-identical
+  resume), ``build_stats``, the checkpoint wave counter, and the cached
+  medoid seed.
+
+The restored index is *immediately mutable*: restore funnels through
+``GraphBuilder.load`` which drops the device cache, so the first
+post-restore ``device_graph()`` re-uploads and every later mutation goes
+back through the normal dirty-row scatter path.  Nothing device-side is
+serialized — device state is always rebuilt lazily from the host arrays.
+
+Checkpoints are ordinary snapshots taken at wave boundaries (the only
+points where the graph satisfies its invariants mid-build), written by
+``DEGIndex._checkpoint_tick`` from ``_insert_wave`` / ``refine_sweep``.
+Resuming = ``load_index(ckpt)`` + ``add(points[idx.n:])`` with the same
+wave size: the RNG stream and wave partitioning line up, so the resumed
+build is bit-identical to an uninterrupted one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .format import read_snapshot, write_snapshot
+
+KIND = "deg_index"
+
+
+def index_sections(index) -> tuple[dict, dict]:
+    """The (sections, payload) pair for one DEGIndex — shared by the
+    single-index snapshot and the per-shard sections of persist/sharded.py."""
+    n = index.n
+    sections: dict = {
+        "vectors": {"data": np.asarray(index.vectors[:n], np.float32)},
+    }
+    if index.builder is not None:
+        sections["graph"] = {
+            "adjacency": np.asarray(index.builder.adjacency[:n], np.int32),
+            "weights": np.asarray(index.builder.weights[:n], np.float32),
+        }
+    if index._pending:
+        sections["pending"] = {"data": np.stack(index._pending).astype(
+            np.float32)}
+    for codec, store in index._stores.items():
+        sections[f"store_{codec}"] = {
+            "data": np.asarray(store.data[:n]),
+            "scale": np.asarray(store.scale, np.float32),
+        }
+    payload = {
+        "dim": int(index.dim),
+        "capacity": int(index.capacity),
+        "n": int(n),
+        "params": dataclasses.asdict(index.params),
+        "rng_state": index._rng.bit_generator.state,
+        "build_stats": {k: (int(v) if isinstance(v, (int, np.integer))
+                            else float(v))
+                        for k, v in index.build_stats.items()},
+        "wave_counter": int(index._wave_counter),
+        "medoid": None if index._medoid is None else int(index._medoid),
+        "stores": sorted(index._stores),
+        "has_builder": index.builder is not None,
+    }
+    return sections, payload
+
+
+def restore_into(index, payload: dict, sections: dict) -> None:
+    """Rebuild ``index``'s state (graph, vectors, stores, counters) from a
+    verified (payload, sections) pair.  ``index`` must be freshly
+    constructed with the payload's dim/params/capacity."""
+    from repro.core.graph import GraphBuilder
+    from repro.quant.store import VectorStore
+
+    n = int(payload["n"])
+    vec = sections["vectors"]["data"]
+    if n:
+        index.vectors[:n] = vec
+        index._put_rows(vec, 0)
+    if payload["has_builder"]:
+        b = GraphBuilder(index.capacity, index.params.degree)
+        g = sections["graph"]
+        b.load(g["adjacency"], g["weights"], n)
+        index.builder = b
+    index._pending = ([row.copy() for row in sections["pending"]["data"]]
+                      if "pending" in sections else [])
+    for codec in payload["stores"]:
+        s = sections[f"store_{codec}"]
+        data = np.zeros((index.capacity, index.dim), dtype=s["data"].dtype)
+        data[:n] = s["data"]
+        index._stores[codec] = VectorStore(
+            data=jnp.asarray(data), scale=jnp.asarray(s["scale"]),
+            codec=codec)
+    rng = np.random.default_rng()
+    rng.bit_generator.state = payload["rng_state"]
+    index._rng = rng
+    index.build_stats = dict(payload["build_stats"])
+    index._wave_counter = int(payload["wave_counter"])
+    index._medoid = payload["medoid"]
+
+
+def save_index(index, path) -> None:
+    """Serialize the complete index state to one versioned npz snapshot."""
+    sections, payload = index_sections(index)
+    write_snapshot(path, KIND, sections, payload)
+
+
+def load_index(path, params: Optional[object] = None,
+               capacity: Optional[int] = None):
+    """Restore a :class:`DEGIndex` from ``path``.
+
+    ``params`` overrides the persisted *search* knobs (a restored index may
+    serve a different engine config); the structural fields (``degree``,
+    ``metric``) must match the snapshot — a mismatched graph would be
+    silently wrong, so it raises.  ``capacity`` may only grow the index.
+    """
+    from repro.core.build import DEGIndex, DEGParams
+
+    payload, sections = read_snapshot(path, expected_kind=KIND)
+    saved = DEGParams(**payload["params"])
+    if params is None:
+        params = saved
+    elif (params.degree != saved.degree or params.metric != saved.metric):
+        raise ValueError(
+            f"params override (degree={params.degree}, "
+            f"metric={params.metric!r}) is structurally incompatible with "
+            f"the snapshot (degree={saved.degree}, metric={saved.metric!r})")
+    cap = int(payload["capacity"])
+    if capacity is not None:
+        cap = max(cap, int(capacity))
+    index = DEGIndex(int(payload["dim"]), params, capacity=cap)
+    restore_into(index, payload, sections)
+    return index

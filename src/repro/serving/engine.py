@@ -85,6 +85,21 @@ class QueryEngine:
         # without one long session permanently widening every later flush.
         self._exclude_width = max(1, exclude_width)
 
+    # -- lifecycle ---------------------------------------------------------
+    @classmethod
+    def from_snapshot(cls, path, **engine_kwargs) -> "QueryEngine":
+        """Warm-start an engine from a persisted index (persist/snapshot):
+        no rebuild on boot — the restored index serves on the first flush
+        and stays fully mutable (online inserts/deletes/refinement)."""
+        return cls(DEGIndex.load(path), **engine_kwargs)
+
+    def save(self, path) -> None:
+        """Flush pending queries, then snapshot the backing index (session
+        exclude-sets are serving-process state, not index state, and are
+        deliberately not persisted)."""
+        self.flush()
+        self.index.save(path)
+
     # -- request paths ----------------------------------------------------
     def submit(self, query: np.ndarray, session: Optional[str] = None,
                seed_vertex: Optional[int] = None) -> dict:

@@ -2,10 +2,13 @@
 
 ``hypothesis`` is not available in every execution image; the property
 tests only use a tiny slice of its API (``given`` / ``settings`` /
-``strategies.integers|floats|sampled_from``), so when the real library is
-missing we install a deterministic mini-implementation that draws a fixed
-number of pseudo-random examples per test.  With the real library on the
-path this file is a no-op.
+``strategies.integers|floats|sampled_from`` and the ``stateful`` rule
+machinery), so when the real library is missing we install a deterministic
+mini-implementation: ``given`` draws a fixed number of pseudo-random
+examples per test, and ``stateful.RuleBasedStateMachine.TestCase`` runs a
+seeded random walk over the machine's rules (preconditions respected,
+invariants checked after every step — no shrinking, but the same pass/fail
+contract).  With the real library on the path this file is a no-op.
 """
 from __future__ import annotations
 
@@ -60,17 +63,131 @@ def _install_hypothesis_stub() -> None:
 
         return deco
 
-    def settings(max_examples=20, deadline=None, **_ignored):
-        def deco(fn):
-            fn._max_examples = max_examples
-            return fn
+    class settings:
+        """Decorator (``@settings(...)`` on a ``@given`` test) AND plain
+        config object (``Machine.TestCase.settings = settings(...)``) —
+        the two usages the real library supports that our tests need."""
 
-        return deco
+        def __init__(self, max_examples=20, stateful_step_count=20,
+                     deadline=None, **_ignored):
+            self.max_examples = max_examples
+            self.stateful_step_count = stateful_step_count
+            self.deadline = deadline
+
+        def __call__(self, fn):
+            fn._max_examples = self.max_examples
+            return fn
 
     mod.given, mod.settings, mod.strategies = given, settings, st
     mod.__stub__ = True
     sys.modules["hypothesis"] = mod
     sys.modules["hypothesis.strategies"] = st
+    _install_stateful_stub(mod, st)
+
+
+def _install_stateful_stub(mod, st) -> None:
+    """Minimal ``hypothesis.stateful``: rule/initialize/invariant/
+    precondition decorators + a TestCase that random-walks the machine."""
+    import unittest
+
+    sf = types.ModuleType("hypothesis.stateful")
+
+    def rule(**strategies):
+        def deco(fn):
+            fn._hyp_rule = strategies
+            return fn
+
+        return deco
+
+    def initialize(**strategies):
+        def deco(fn):
+            fn._hyp_init = strategies
+            return fn
+
+        return deco
+
+    def invariant():
+        def deco(fn):
+            fn._hyp_invariant = True
+            return fn
+
+        return deco
+
+    def precondition(pred):
+        def deco(fn):
+            preds = list(getattr(fn, "_hyp_preconditions", []))
+            preds.append(pred)
+            fn._hyp_preconditions = preds
+            return fn
+
+        return deco
+
+    def _members(cls, attr):
+        out = []
+        for name in sorted(dir(cls)):
+            f = getattr(cls, name, None)
+            if callable(f) and hasattr(f, attr):
+                out.append(f)
+        return out
+
+    def _run_machine(make_machine, cfg) -> None:
+        """``make_machine``: any zero-arg callable returning a machine —
+        covers both the class itself and the real API's factory form."""
+        n_runs = getattr(cfg, "max_examples", 5)
+        n_steps = getattr(cfg, "stateful_step_count", 20)
+        for run in range(n_runs):
+            rng = random.Random(run)
+            machine = make_machine()
+            cls = type(machine)
+            inits = _members(cls, "_hyp_init")
+            rules = _members(cls, "_hyp_rule")
+            invariants = _members(cls, "_hyp_invariant")
+            try:
+                for f in inits:
+                    f(machine, **{k: s.draw(rng)
+                                  for k, s in f._hyp_init.items()})
+                for f in invariants:
+                    f(machine)
+                for _ in range(n_steps):
+                    ready = [f for f in rules
+                             if all(p(machine) for p in
+                                    getattr(f, "_hyp_preconditions", ()))]
+                    if not ready:
+                        break
+                    f = rng.choice(ready)
+                    f(machine, **{k: s.draw(rng)
+                                  for k, s in f._hyp_rule.items()})
+                    for g in invariants:
+                        g(machine)
+            finally:
+                machine.teardown()
+
+    class RuleBasedStateMachine:
+        def teardown(self) -> None:  # same hook the real library calls
+            pass
+
+        def __init_subclass__(cls, **kw):
+            super().__init_subclass__(**kw)
+
+            class TestCase(unittest.TestCase):
+                settings = None
+
+                def runTest(self) -> None:
+                    _run_machine(cls, type(self).settings or mod.settings())
+
+            TestCase.__qualname__ = cls.__qualname__ + ".TestCase"
+            cls.TestCase = TestCase
+
+    def run_state_machine_as_test(factory, settings=None):
+        _run_machine(factory, settings or mod.settings())
+
+    sf.RuleBasedStateMachine = RuleBasedStateMachine
+    sf.rule, sf.initialize = rule, initialize
+    sf.invariant, sf.precondition = invariant, precondition
+    sf.run_state_machine_as_test = run_state_machine_as_test
+    sf.__stub__ = True
+    mod.stateful = sf
+    sys.modules["hypothesis.stateful"] = sf
 
 
 try:  # pragma: no cover - depends on the execution image

@@ -1,0 +1,48 @@
+"""Generate the pinned v1 index snapshot fixture.
+
+    PYTHONPATH=src python tests/data/gen_index_snapshot_golden.py
+
+Builds a small deterministic index (sq8 store materialized), snapshots it
+through the persist format, and embeds the expected ``search_batch``
+outputs (exact + sq8 two-stage) as an extra ``expected`` section —
+``tests/test_snapshot_golden.py`` asserts any future build keeps loading
+this v1 file AND serves bit-identical results from it.  Regenerate ONLY on
+a deliberate format-version bump (and keep a reader for v1).
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+
+def main():
+    from repro.core.build import DEGParams, build_deg
+    from repro.persist.format import write_snapshot
+    from repro.persist.snapshot import KIND, index_sections
+
+    rng = np.random.default_rng(7)
+    vecs = rng.normal(size=(120, 8)).astype(np.float32)
+    idx = build_deg(vecs, DEGParams(degree=8, k_ext=16), wave_size=8,
+                    refine_iterations=30)
+    idx.store_for("sq8")
+    queries = (vecs[:8] + 0.05 * rng.normal(size=(8, 8))).astype(np.float32)
+    exact = idx.search_batch(queries, k=10, eps=0.1)
+    quant = idx.search_batch(queries, k=10, eps=0.1, quantized="sq8")
+
+    sections, payload = index_sections(idx)
+    sections["expected"] = {
+        "queries": queries,
+        "exact_ids": np.asarray(exact.ids),
+        "exact_dists": np.asarray(exact.dists),
+        "sq8_ids": np.asarray(quant.ids),
+        "sq8_dists": np.asarray(quant.dists),
+    }
+    path = os.path.join(os.path.dirname(__file__),
+                        "index_snapshot_golden.npz")
+    write_snapshot(path, KIND, sections, payload)
+    print(f"wrote {path}: n={idx.n}, sections={sorted(sections)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+"""Stateful lifecycle suite: a rule machine interleaving the full index
+lifecycle — add / delete / refine / search / save / load — asserting the
+DEG structural invariants (Table 1) after EVERY step and bit-identical
+``search_batch`` results across every save→load round trip.
+
+Runs under real Hypothesis (``RuleBasedStateMachine``) or the deterministic
+random-walk stub in ``conftest.py`` — same rules, same pass/fail contract.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from hypothesis import settings
+from hypothesis import strategies as st
+from hypothesis.stateful import (RuleBasedStateMachine, initialize, invariant,
+                                 precondition, rule)
+
+from repro.core.build import DEGIndex, DEGParams
+from repro.core.invariants import check_invariants
+
+pytestmark = pytest.mark.slow
+
+DIM = 6
+DEGREE = 6
+MAX_N = 72          # bounds step cost; shapes stay in a few jit buckets
+
+
+def _search_sig(index: DEGIndex, queries: np.ndarray, quantized=None):
+    res = index.search_batch(queries, k=5, eps=0.1, quantized=quantized)
+    return np.asarray(res.ids).copy(), np.asarray(res.dists).copy()
+
+
+class LifecycleMachine(RuleBasedStateMachine):
+    """One live index + a persisted twin path through tmpdir snapshots."""
+
+    @initialize(seed=st.integers(0, 2**16))
+    def setup(self, seed):
+        self.rng = np.random.default_rng(seed)
+        self.tmp = Path(tempfile.mkdtemp(prefix="deg-lifecycle-"))
+        self.idx = DEGIndex(DIM, DEGParams(degree=DEGREE, k_ext=2 * DEGREE),
+                            capacity=MAX_N)
+        # past the K_{d+1} bootstrap and big enough that deletes are legal
+        self.idx.add(self._points(DEGREE + 4), wave_size=4)
+        self.queries = self.rng.normal(size=(4, DIM)).astype(np.float32)
+
+    def teardown(self):
+        if hasattr(self, "tmp"):
+            shutil.rmtree(self.tmp, ignore_errors=True)
+
+    def _points(self, k: int) -> np.ndarray:
+        return self.rng.normal(size=(k, DIM)).astype(np.float32)
+
+    # -- rules -----------------------------------------------------------
+    @precondition(lambda self: self.idx.n < MAX_N - 6)
+    @rule(count=st.integers(1, 5), wave=st.integers(1, 4))
+    def add_points(self, count, wave):
+        self.idx.add(self._points(count), wave_size=wave)
+
+    @precondition(lambda self: self.idx.n > DEGREE + 2)
+    @rule(pick=st.integers(0, 10**6))
+    def delete_vertex(self, pick):
+        n_before = self.idx.n
+        assert self.idx.remove([pick % n_before]) == 1
+        assert self.idx.n == n_before - 1
+
+    @rule(iters=st.integers(1, 3), seed=st.integers(0, 99))
+    def refine(self, iters, seed):
+        self.idx.refine(iters, seed=seed)
+
+    @rule()
+    def search_sane(self):
+        ids, dists = _search_sig(self.idx, self.queries)
+        valid = ids != -1
+        assert (ids[valid] >= 0).all() and (ids[valid] < self.idx.n).all()
+        d = np.where(valid, dists, np.inf)
+        assert (np.diff(d, axis=1) >= -1e-6).all(), "results not sorted"
+        # every row has k real results once n >= k
+        assert valid.all()
+
+    @rule(codec=st.sampled_from(["float32", "sq8"]))
+    def save_load_roundtrip(self, codec):
+        """Restore must be search-identical, exact AND quantized paths."""
+        if codec != "float32":
+            self.idx.store_for(codec)      # materialize so it persists
+        path = self.tmp / "snap.npz"
+        self.idx.save(path)
+        twin = DEGIndex.load(path)
+        assert twin.n == self.idx.n
+        q = None if codec == "float32" else codec
+        a_ids, a_d = _search_sig(self.idx, self.queries, quantized=q)
+        b_ids, b_d = _search_sig(twin, self.queries, quantized=q)
+        np.testing.assert_array_equal(a_ids, b_ids)
+        np.testing.assert_array_equal(a_d, b_d)
+
+    @rule()
+    def reload_and_continue(self):
+        """Swap the live index for its restored twin — the rest of the walk
+        exercises mutability of a freshly-restored index."""
+        path = self.tmp / "swap.npz"
+        self.idx.save(path)
+        self.idx = DEGIndex.load(path)
+
+    # -- invariants (checked after every rule) ---------------------------
+    @invariant()
+    def graph_invariants(self):
+        idx = getattr(self, "idx", None)
+        if idx is None or idx.builder is None:
+            return
+        ok, msgs = check_invariants(idx.builder)
+        assert ok, f"invariants broken at n={idx.n}: {msgs}"
+
+    @invariant()
+    def counters_consistent(self):
+        idx = getattr(self, "idx", None)
+        if idx is None or idx.builder is None:
+            return
+        assert idx.builder.n == idx.n <= idx.capacity
+
+
+LifecycleMachine.TestCase.settings = settings(
+    max_examples=3, stateful_step_count=12, deadline=None)
+TestLifecycle = LifecycleMachine.TestCase

@@ -1,0 +1,362 @@
+"""Unit suite for the persistence subsystem (src/repro/persist/).
+
+Covers the envelope (payload fidelity), the single-index snapshot contract
+(search-identical restore across codecs, immediate mutability, the
+delete-after-load device-cache regression, checkpoint/resume bit-identity,
+pre-bootstrap states), the sharded manifest (exact restore, search
+identity on a mesh, reshard-on-restore), and the serving warm-start path.
+"""
+from __future__ import annotations
+
+import glob
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.build import DEGIndex, DEGParams, build_deg
+from repro.core.delete import delete_vertex
+from repro.core.invariants import check_invariants
+from repro.persist import read_snapshot, write_snapshot
+
+DIM = 8
+
+
+def _mk(n=90, seed=0, refine=0, **params):
+    rng = np.random.default_rng(seed)
+    vecs = rng.normal(size=(n, DIM)).astype(np.float32)
+    p = DEGParams(degree=8, k_ext=16, **params)
+    return build_deg(vecs, p, wave_size=8, refine_iterations=refine), vecs
+
+
+def _queries(seed=99, b=4):
+    return np.random.default_rng(seed).normal(size=(b, DIM)).astype(
+        np.float32)
+
+
+def _sig(idx, q, **kw):
+    res = idx.search_batch(q, k=5, eps=0.1, **kw)
+    return np.asarray(res.ids), np.asarray(res.dists)
+
+
+# ---------------------------------------------------------------------------
+# envelope
+# ---------------------------------------------------------------------------
+def test_envelope_payload_fidelity(tmp_path):
+    p = tmp_path / "e.npz"
+    payload = {"a": 1, "nested": {"b": [1, 2, 3], "c": "x"}, "f": 0.5,
+               "none": None, "big": 2**100}
+    secs = {"s": {"x": np.arange(6, dtype=np.int32).reshape(2, 3)}}
+    write_snapshot(p, "test_kind", secs, payload)
+    got_payload, got_secs = read_snapshot(p, expected_kind="test_kind")
+    assert got_payload == payload
+    np.testing.assert_array_equal(got_secs["s"]["x"], secs["s"]["x"])
+    assert got_secs["s"]["x"].dtype == np.int32
+
+
+# ---------------------------------------------------------------------------
+# single-index snapshot contract
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def built():
+    idx, vecs = _mk(refine=20)
+    idx.store_for("sq8")
+    idx.store_for("fp16")
+    return idx, vecs
+
+
+@pytest.mark.parametrize("codec", [None, "fp16", "sq8"])
+def test_roundtrip_search_identical(built, tmp_path, codec):
+    idx, _ = built
+    p = tmp_path / "i.npz"
+    idx.save(p)
+    twin = DEGIndex.load(p)
+    q = _queries()
+    a = _sig(idx, q, quantized=codec)
+    b = _sig(twin, q, quantized=codec)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+
+
+def test_restored_index_immediately_mutable(built, tmp_path):
+    idx, _ = built
+    p = tmp_path / "i.npz"
+    idx.save(p)
+    twin = DEGIndex.load(p)
+    rng = np.random.default_rng(5)
+    twin.add(rng.normal(size=(7, DIM)).astype(np.float32), wave_size=4)
+    twin.refine(3, seed=0)
+    assert twin.remove([2]) == 1
+    ok, msgs = check_invariants(twin.builder)
+    assert ok, msgs
+
+
+def test_delete_immediately_after_load_no_stale_rows(built, tmp_path):
+    """Regression (satellite): deleting on a freshly-restored index must
+    re-sync the device adjacency through the invalidate/dirty-row path —
+    searches after the delete may not serve pre-delete rows.  Checked by
+    full search equality against a never-persisted twin performing the
+    identical delete, in both orders (delete-before-first-search, and
+    search-then-delete so the delete mutates a warm device cache)."""
+    idx, vecs = built
+    p = tmp_path / "i.npz"
+    idx.save(p)
+    q = _queries()
+    victim = 3
+
+    # order 1: delete before the restored index ever touches the device
+    ref = DEGIndex.load(p)
+    cold = DEGIndex.load(p)
+    assert delete_vertex(cold, victim)
+    assert delete_vertex(ref, victim)
+    np.testing.assert_array_equal(_sig(cold, q)[0], _sig(ref, q)[0])
+
+    # order 2: search first (device cache built), then delete, then search
+    warm = DEGIndex.load(p)
+    _sig(warm, q)                      # builds the device cache
+    assert delete_vertex(warm, victim)
+    ids_w, d_w = _sig(warm, q)
+    ids_r, d_r = _sig(ref, q)
+    np.testing.assert_array_equal(ids_w, ids_r)
+    np.testing.assert_array_equal(d_w, d_r)
+    assert (ids_w < warm.n).all()      # compaction visible, no stale slot
+    ok, msgs = check_invariants(warm.builder)
+    assert ok, msgs
+
+
+def test_quant_store_restored_not_reencoded(built, tmp_path):
+    """The persisted sq8 codes/scale must be reattached verbatim — a
+    re-encode would re-calibrate against a mutated buffer and shift
+    codes."""
+    idx, _ = built
+    p = tmp_path / "i.npz"
+    idx.save(p)
+    twin = DEGIndex.load(p)
+    assert set(twin._stores) == {"fp16", "sq8"}
+    n = idx.n
+    np.testing.assert_array_equal(np.asarray(idx._stores["sq8"].data[:n]),
+                                  np.asarray(twin._stores["sq8"].data[:n]))
+    np.testing.assert_array_equal(np.asarray(idx._stores["sq8"].scale),
+                                  np.asarray(twin._stores["sq8"].scale))
+
+
+def test_build_counters_and_medoid_roundtrip(built, tmp_path):
+    idx, _ = built
+    idx.medoid()                       # materialize the cache
+    p = tmp_path / "i.npz"
+    idx.save(p)
+    twin = DEGIndex.load(p)
+    assert twin.build_stats["vertices"] == idx.build_stats["vertices"]
+    assert twin._wave_counter == idx._wave_counter
+    assert twin._medoid == idx._medoid == twin.medoid()
+
+
+def test_params_override_and_structural_mismatch(built, tmp_path):
+    idx, _ = built
+    p = tmp_path / "i.npz"
+    idx.save(p)
+    fast = DEGParams(degree=8, k_ext=16, expand_width=2)
+    twin = DEGIndex.load(p, params=fast)
+    assert twin.params.expand_width == 2
+    with pytest.raises(ValueError, match="structurally incompatible"):
+        DEGIndex.load(p, params=DEGParams(degree=10, k_ext=20))
+
+
+def test_load_with_grown_capacity(built, tmp_path):
+    idx, _ = built
+    p = tmp_path / "i.npz"
+    idx.save(p)
+    twin = DEGIndex.load(p, capacity=4 * idx.capacity)
+    assert twin.capacity == 4 * idx.capacity and twin.n == idx.n
+    q = _queries()
+    np.testing.assert_array_equal(_sig(idx, q)[0], _sig(twin, q)[0])
+
+
+def test_pending_only_index_roundtrips(tmp_path):
+    """Points buffered before the K_{d+1} bootstrap survive persistence."""
+    idx = DEGIndex(DIM, DEGParams(degree=8, k_ext=16), capacity=32)
+    pts = np.random.default_rng(3).normal(size=(4, DIM)).astype(np.float32)
+    idx.add(pts)                       # 4 < degree + 1: still pending
+    assert idx.builder is None
+    p = tmp_path / "p.npz"
+    idx.save(p)
+    twin = DEGIndex.load(p)
+    assert twin.builder is None and len(twin._pending) == 4
+    more = np.random.default_rng(4).normal(size=(20, DIM)).astype(np.float32)
+    idx.add(more, wave_size=4)
+    twin.add(more, wave_size=4)
+    np.testing.assert_array_equal(idx.builder.adjacency[: idx.n],
+                                  twin.builder.adjacency[: twin.n])
+
+
+def test_empty_index_roundtrips(tmp_path):
+    idx = DEGIndex(DIM, DEGParams(degree=8, k_ext=16), capacity=32)
+    p = tmp_path / "z.npz"
+    idx.save(p)
+    twin = DEGIndex.load(p)
+    assert twin.n == 0 and twin.builder is None and not twin._pending
+
+
+# ---------------------------------------------------------------------------
+# checkpoints
+# ---------------------------------------------------------------------------
+def test_checkpoint_resume_bit_identical(tmp_path):
+    """bench-small contract: an interrupted build resumed from its last
+    checkpoint reproduces the uninterrupted build bit for bit (graph,
+    weights, vectors, RNG stream)."""
+    rng = np.random.default_rng(11)
+    vecs = rng.normal(size=(120, DIM)).astype(np.float32)
+    p = DEGParams(degree=8, k_ext=16)
+
+    a = build_deg(vecs, p, wave_size=8)
+
+    b = DEGIndex(DIM, p, capacity=120)
+    b.enable_checkpoints(tmp_path / "ck_{waves}.npz", every_waves=3)
+    b.add(vecs, wave_size=8)
+    cks = sorted(glob.glob(str(tmp_path / "ck_*.npz")),
+                 key=lambda s: int(s.rsplit("_", 1)[1].split(".")[0]))
+    assert len(cks) >= 3
+    mid = cks[len(cks) // 2]
+
+    c = DEGIndex.load(mid)             # "crash" + warm resume
+    assert 0 < c.n < 120
+    c.add(vecs[c.n:], wave_size=8)
+
+    np.testing.assert_array_equal(a.builder.adjacency[: a.n],
+                                  c.builder.adjacency[: c.n])
+    np.testing.assert_array_equal(a.builder.weights[: a.n],
+                                  c.builder.weights[: c.n])
+    np.testing.assert_array_equal(a.vectors[: a.n], c.vectors[: c.n])
+    assert a._rng.bit_generator.state == c._rng.bit_generator.state
+
+
+def test_checkpoint_overwrite_is_atomic(built, tmp_path):
+    """Fixed-name checkpoints overwrite via tmp + os.replace: after a save
+    over an existing snapshot the file is loadable and no tmp residue is
+    left (a crash mid-write keeps the predecessor instead of truncating)."""
+    idx, _ = built
+    p = tmp_path / "ck.npz"
+    idx.save(p)
+    idx.save(p)                        # overwrite the same path
+    assert DEGIndex.load(p).n == idx.n
+    assert [f.name for f in tmp_path.iterdir()] == ["ck.npz"]
+
+
+def test_bad_checkpoint_template_fails_fast(built):
+    idx, _ = built
+    with pytest.raises(ValueError, match="checkpoint path template"):
+        idx.enable_checkpoints("ck_{wave}.npz", every_waves=1)
+    with pytest.raises(ValueError, match="checkpoint path template"):
+        idx.enable_checkpoints("ck_{}.npz", every_waves=1)
+    assert idx._ckpt_path is None      # config rejected, nothing armed
+
+
+def test_refine_sweep_ticks_checkpoints(tmp_path):
+    idx, _ = _mk(n=60, seed=2)
+    idx.enable_checkpoints(tmp_path / "r_{waves}.npz", every_waves=1)
+    idx.refine(8, seed=0)
+    files = glob.glob(str(tmp_path / "r_*.npz"))
+    assert files, "refine_sweep chunks must tick the checkpoint cadence"
+    twin = DEGIndex.load(sorted(files)[-1])
+    ok, msgs = check_invariants(twin.builder)
+    assert ok, msgs
+
+
+# ---------------------------------------------------------------------------
+# sharded manifest
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def sharded():
+    from repro.distributed.index import build_sharded_deg
+
+    rng = np.random.default_rng(21)
+    vecs = rng.normal(size=(160, DIM)).astype(np.float32)
+    return build_sharded_deg(vecs, 2, params=DEGParams(degree=8, k_ext=16),
+                             wave_size=8, codec="sq8"), vecs
+
+
+def test_sharded_exact_restore(sharded, tmp_path):
+    from repro.distributed.index import ShardedDEG
+
+    sd, _ = sharded
+    p = tmp_path / "sd.npz"
+    sd.save(p)
+    sd2 = ShardedDEG.load(p)
+    assert sd2.n_shards == sd.n_shards and sd2.codec == "sq8"
+    np.testing.assert_array_equal(np.asarray(sd.adjacency),
+                                  np.asarray(sd2.adjacency))
+    np.testing.assert_array_equal(np.asarray(sd.vectors),
+                                  np.asarray(sd2.vectors))
+    np.testing.assert_array_equal(np.asarray(sd.codes),
+                                  np.asarray(sd2.codes))
+    np.testing.assert_array_equal(np.asarray(sd.seeds),
+                                  np.asarray(sd2.seeds))
+    for sh in sd2.shards:
+        ok, msgs = check_invariants(sh.builder)
+        assert ok, msgs
+
+
+@pytest.mark.skipif(jax.device_count() < 4, reason="needs a 2x2 mesh")
+def test_sharded_restore_search_identical(sharded, tmp_path):
+    from jax.sharding import Mesh
+
+    from repro.distributed.index import ShardedDEG
+
+    sd, _ = sharded
+    p = tmp_path / "sd.npz"
+    sd.save(p)
+    sd2 = ShardedDEG.load(p)
+    mesh = Mesh(np.array(jax.devices()[:4]).reshape(2, 2),
+                ("model", "data"))
+    q = _queries(b=4)
+    i1, d1 = sd.search(mesh, q, k=5)
+    i2, d2 = sd2.search(mesh, q, k=5)
+    np.testing.assert_array_equal(i1, i2)
+    np.testing.assert_array_equal(d1, d2)
+
+
+def test_sharded_reshard_on_restore(sharded, tmp_path):
+    from repro.distributed.index import ShardedDEG
+
+    sd, vecs = sharded
+    p = tmp_path / "sd.npz"
+    sd.save(p)
+    sd4 = ShardedDEG.load(p, n_shards=4)
+    assert sd4.n_shards == 4 and sd4.n_total == sd.n_total
+    assert sd4.codec == "sq8"
+    # round-robin reassembly preserved the vector set exactly
+    rebuilt = np.zeros_like(vecs)
+    for s, sh in enumerate(sd4.shards):
+        rebuilt[s::4] = sh.vectors[: sh.n]
+        ok, msgs = check_invariants(sh.builder)
+        assert ok, msgs
+    np.testing.assert_array_equal(rebuilt, vecs)
+
+
+# ---------------------------------------------------------------------------
+# serving warm start
+# ---------------------------------------------------------------------------
+def test_query_engine_warm_start(built, tmp_path):
+    from repro.serving.engine import QueryEngine
+
+    idx, _ = built
+    p = tmp_path / "serve.npz"
+    eng = QueryEngine(idx, k=5, max_batch=8)
+    q = _queries(b=3)
+    ids_a, d_a = eng.search(q)
+    eng.save(p)
+    warm = QueryEngine.from_snapshot(p, k=5, max_batch=8, codec="sq8")
+    assert warm.index.n == idx.n
+    ids_b, _ = warm.search(q)
+    # same store, same graph: the sq8 engine serves from the persisted
+    # codes; its exact sibling must agree bit for bit with the original
+    exact = QueryEngine.from_snapshot(p, k=5, max_batch=8)
+    ids_c, d_c = exact.search(q)
+    np.testing.assert_array_equal(ids_a, ids_c)
+    np.testing.assert_array_equal(d_a, d_c)
+    assert (ids_b >= 0).all()
+    warm.insert(_queries(b=2))         # warm engine stays mutable
+    assert warm.index.n == idx.n + 2

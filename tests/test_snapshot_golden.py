@@ -1,0 +1,134 @@
+"""Pinned v1 snapshot fixture: forward-compat + round-trip guarantees.
+
+The fixture (``tests/data/index_snapshot_golden.npz``, see the gen script)
+is a complete persisted index with its expected search outputs embedded.
+These tests pin three contracts:
+
+* the current code keeps **reading v1** and serves bit-identical results
+  from it (on-disk compatibility is part of the index's API);
+* a snapshot with an **unknown format_version is rejected** with a clear
+  typed error — never half-loaded;
+* corruption (bad checksum, missing section, wrong kind, foreign npz)
+  fails loudly at load time.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.build import DEGIndex
+from repro.core.invariants import check_invariants
+from repro.persist import (SnapshotChecksumError, SnapshotFormatError,
+                           load_index, read_snapshot)
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "data",
+                      "index_snapshot_golden.npz")
+
+
+def _patched_copy(tmp_path, mutate):
+    """Copy the golden archive with ``mutate(meta_dict, arrays_dict)``
+    applied — the hook for forging versions / flipping bytes."""
+    with np.load(GOLDEN) as z:
+        arrays = {k: z[k].copy() for k in z.files}
+    meta = json.loads(bytes(arrays.pop("__meta__")).decode("utf-8"))
+    mutate(meta, arrays)
+    blob = np.frombuffer(json.dumps(meta).encode("utf-8"), dtype=np.uint8)
+    path = tmp_path / "patched.npz"
+    np.savez_compressed(path, __meta__=blob, **arrays)
+    return path
+
+
+@pytest.fixture(scope="module")
+def golden_index():
+    return load_index(GOLDEN)
+
+
+def test_golden_loads_and_is_valid(golden_index):
+    assert golden_index.n == 120
+    ok, msgs = check_invariants(golden_index.builder)
+    assert ok, msgs
+    assert "sq8" in golden_index._stores
+
+
+def test_golden_search_pinned_exact(golden_index):
+    _, sections = read_snapshot(GOLDEN)
+    exp = sections["expected"]
+    res = golden_index.search_batch(exp["queries"], k=10, eps=0.1)
+    np.testing.assert_array_equal(np.asarray(res.ids), exp["exact_ids"])
+    np.testing.assert_array_equal(np.asarray(res.dists), exp["exact_dists"])
+
+
+def test_golden_search_pinned_sq8(golden_index):
+    _, sections = read_snapshot(GOLDEN)
+    exp = sections["expected"]
+    res = golden_index.search_batch(exp["queries"], k=10, eps=0.1,
+                                    quantized="sq8")
+    np.testing.assert_array_equal(np.asarray(res.ids), exp["sq8_ids"])
+    np.testing.assert_array_equal(np.asarray(res.dists), exp["sq8_dists"])
+
+
+def test_golden_round_trips(golden_index, tmp_path):
+    """load -> save -> load is state-identical under the current code."""
+    p = tmp_path / "resaved.npz"
+    golden_index.save(p)
+    again = DEGIndex.load(p)
+    np.testing.assert_array_equal(
+        golden_index.builder.adjacency[: golden_index.n],
+        again.builder.adjacency[: again.n])
+    np.testing.assert_array_equal(
+        golden_index.builder.weights[: golden_index.n],
+        again.builder.weights[: again.n])
+    np.testing.assert_array_equal(golden_index.vectors[: golden_index.n],
+                                  again.vectors[: again.n])
+    np.testing.assert_array_equal(
+        np.asarray(golden_index._stores["sq8"].data),
+        np.asarray(again._stores["sq8"].data))
+    assert (golden_index._rng.bit_generator.state
+            == again._rng.bit_generator.state)
+
+
+def test_unknown_format_version_rejected(tmp_path):
+    def bump(meta, arrays):
+        meta["format_version"] = 999
+
+    path = _patched_copy(tmp_path, bump)
+    with pytest.raises(SnapshotFormatError, match="format_version 999"):
+        load_index(path)
+
+
+def test_checksum_corruption_rejected(tmp_path):
+    def flip(meta, arrays):
+        arr = arrays["graph/adjacency"]
+        arr.flat[0] = arr.flat[0] + 1
+
+    path = _patched_copy(tmp_path, flip)
+    with pytest.raises(SnapshotChecksumError, match="graph/adjacency"):
+        load_index(path)
+
+
+def test_missing_section_rejected(tmp_path):
+    def drop(meta, arrays):
+        del arrays["vectors/data"]
+
+    path = _patched_copy(tmp_path, drop)
+    with pytest.raises(SnapshotFormatError, match="vectors/data"):
+        load_index(path)
+
+
+def test_wrong_kind_rejected(tmp_path):
+    def rekind(meta, arrays):
+        meta["kind"] = "sharded_deg"
+
+    path = _patched_copy(tmp_path, rekind)
+    with pytest.raises(SnapshotFormatError, match="kind"):
+        load_index(path)
+
+
+def test_foreign_npz_rejected(tmp_path):
+    path = tmp_path / "foreign.npz"
+    np.savez(path, stuff=np.arange(3))
+    with pytest.raises(SnapshotFormatError, match="not a repro snapshot"):
+        load_index(path)
