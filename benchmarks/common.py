@@ -12,6 +12,7 @@ All results are emitted as CSV rows through :func:`emit` so
 from __future__ import annotations
 
 import dataclasses
+import os
 import sys
 import time
 from typing import Callable, Iterable, Optional
@@ -120,3 +121,36 @@ def auc_above(pts: list[dict], recall_floor: float = 0.8) -> float:
     """Scalar frontier summary: mean QPS of points with recall >= floor."""
     good = [p["qps"] for p in pts if p["recall"] >= recall_floor]
     return float(np.mean(good)) if good else 0.0
+
+
+def _git_commit() -> str:
+    import subprocess
+
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def write_bench_json(name: str, payload: dict) -> str:
+    """The standing perf trajectory: write ``BENCH_<name>.json`` at the
+    repo root, stamped with the commit and wall time, so headline numbers
+    are recorded (and diffable) across PRs instead of living only in CI
+    logs.  Schema: ``{bench, commit, written_at, **payload}`` — payload
+    carries the config and the measured figures (p50/p99, QPS, recall@10,
+    ...).  Returns the path written."""
+    import json
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(root, f"BENCH_{name}.json")
+    doc = {"bench": name, "commit": _git_commit(),
+           "written_at": time.strftime("%Y-%m-%dT%H:%M:%S%z"), **payload}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True, default=float)
+        f.write("\n")
+    print(f"[bench-json] wrote {path}")
+    return path

@@ -25,6 +25,7 @@ SECTIONS = [
     ("kernel_beam_merge", "beam_merge"),
     ("quantized_store", "quantization"),
     ("search_pareto", "search_pareto"),
+    ("serving_open_loop", "serving_load"),
     ("roofline", "roofline_report"),
 ]
 
@@ -43,6 +44,9 @@ QUICK_OVERRIDES = {
     "search_pareto": dict(n=1500, n_query=128, expand_widths=(1, 2),
                           beam_widths=(32, 48), backends=("jnp",),
                           refine=100),
+    # the serving smoke shares the CI gate config so there is exactly one
+    # quick configuration (see serving_load.QUICK_CONFIG)
+    "serving_load": None,       # resolved below: serving_load.QUICK_CONFIG
 }
 
 
@@ -69,6 +73,8 @@ def main() -> int:
         try:
             mod = importlib.import_module(f"benchmarks.{mod_name}")
             kw = QUICK_OVERRIDES.get(mod_name, {}) if args.quick else {}
+            if kw is None:      # module exports its own quick config
+                kw = dict(mod.QUICK_CONFIG)
             summary = mod.run(**kw)
             print(f"--- {mod_name} done in {time.time()-t0:.1f}s: {summary}")
         except Exception as e:

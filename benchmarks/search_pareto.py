@@ -37,7 +37,7 @@ from repro.configs.deg import DEG_PAPER_CONFIGS
 from repro.core.build import build_deg
 from repro.core.metrics import recall_at_k
 
-from .common import emit, make_bench_dataset, timed_search
+from .common import emit, make_bench_dataset, timed_search, write_bench_json
 
 _BACKENDS = {
     "jnp": dict(hop_backend="jnp", visited_size=0),
@@ -111,6 +111,20 @@ def run(n: int = 6000, n_query: int = 256, dim: int = 32, k: int = 10,
     else:
         emit("pareto_best", dataset=ds.name, E=0, speedup=0.0)
         summary.update(speedup=0.0)
+
+    write_bench_json("pareto", {
+        "dataset": ds.name,
+        "config": {
+            "n": n, "n_query": n_query, "dim": dim, "k": k, "eps": eps,
+            "seed": seed, "refine": refine,
+            "expand_widths": list(expand_widths),
+            "beam_widths": list(beam_widths), "backends": list(backends),
+        },
+        "points": [{kk: p[kk] for kk in
+                    ("E", "beam_width", "backend", "recall", "qps",
+                     "hops", "evals")} for p in pts],
+        "best": summary,
+    })
     return summary
 
 

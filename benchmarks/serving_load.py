@@ -1,0 +1,222 @@
+"""Open-loop serving latency under Poisson load — the honest online
+version of ``search_pareto.py``'s offline QPS.
+
+A closed-loop benchmark (submit a batch, wait, repeat) can never observe
+queueing delay: the load adapts to the server.  This harness drives the
+continuous-batching ``AsyncQueryEngine`` **open-loop**: request arrival
+times are drawn from a Poisson process at a fixed offered rate and each
+request is submitted at its scheduled instant *regardless of how the
+server is doing* — late submission (the generator falling behind) counts
+against the measured latency, exactly like a real front end under heavy
+traffic.  Per-request latency = completion time − scheduled arrival
+time, so p50/p99/p99.9 include queueing, coalescing linger, device
+compute, and extract.
+
+Protocol:
+
+1. build the bench-small index (+refine), exact ground truth;
+2. measure the **offline closed-loop baseline**: full-batch
+   ``DEGIndex.search`` wall-clock QPS (the ``search_pareto.py`` figure
+   this engine is held to — acceptance: sustained online QPS within
+   1.3x at equal recall@10);
+3. boot the async engine, ``warmup()`` (every (bucket, variant) program
+   precompiled — no request pays a trace);
+4. offered rate = ``rate`` or ``rate_fraction`` × the offline baseline;
+   submit for ``duration`` seconds of Poisson arrivals, block for all
+   completions;
+5. report p50/p99/p99.9 latency, sustained QPS, recall@10, partial /
+   deadline-forced-flush counts; write ``BENCH_serving.json`` at the
+   repo root (the standing perf trajectory across PRs).
+
+``quick=True`` (the CI smoke gate) shrinks everything, pins the seed,
+and enforces the floors: recall@10 >= ``recall_floor`` (the
+differential-grid float32 floor) and p99 <= ``p99_floor_ms`` (a
+generous bound — the gate catches an engine that stops batching or
+retraces per request, not millisecond regressions on shared runners).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.deg import DEG_PAPER_CONFIGS
+from repro.core.build import build_deg
+from repro.core.metrics import recall_at_k
+
+from .common import emit, make_bench_dataset, write_bench_json
+
+
+#: the CI smoke configuration (deterministic seed, small index, short
+#: duration, un-overloaded rate) — shared by ``--quick`` and
+#: ``benchmarks.run``'s QUICK_OVERRIDES so the gate is one config.
+#: multi-e2-l64 is the saturated-recall preset (PR 4's headline point),
+#: which is what the 0.95 differential-grid float32 floor pins.
+QUICK_CONFIG = dict(n=1500, n_query=128, duration=1.5, refine=100,
+                    search_preset="multi-e2-l64", max_batch=64,
+                    bucket_floor=16, deadline_ms=400.0,
+                    rate_fraction=0.6, quick=True)
+
+
+def _percentiles(lats_ms: np.ndarray) -> dict:
+    return {
+        "p50_ms": float(np.percentile(lats_ms, 50)),
+        "p99_ms": float(np.percentile(lats_ms, 99)),
+        "p999_ms": float(np.percentile(lats_ms, 99.9)),
+        "max_ms": float(lats_ms.max()),
+    }
+
+
+def run(n: int = 6000, n_query: int = 256, dim: int = 32, k: int = 10,
+        eps: float = 0.1, seed: int = 0, refine: int = 300,
+        search_preset: str = "multi-e2-l64", max_batch: int = 128,
+        bucket_floor: int = 32, deadline_ms: float = 600.0,
+        linger_ms: float = 4.0, partial_hops: int = 8,
+        rate: float | None = None, rate_fraction: float = 0.85,
+        duration: float = 6.0, max_requests: int = 20000,
+        quick: bool = False, p99_floor_ms: float = 1000.0,
+        recall_floor: float = 0.95) -> dict:
+    from repro.serving.async_engine import AsyncQueryEngine
+
+    from repro.configs.deg import SEARCH_PRESETS
+
+    ds = make_bench_dataset("bench-small", n, n_query, dim, "low", k=k,
+                            seed=seed)
+    params = DEG_PAPER_CONFIGS["bench-small"]
+    idx = build_deg(ds.base, params, wave_size=16)
+    if refine:
+        idx.refine(refine, seed=seed)
+
+    # -- offline closed-loop baseline (the search_pareto protocol, same
+    # search program as the engine will serve — equal-recall comparison) --
+    sp = SEARCH_PRESETS[search_preset]
+
+    def offline(qs):
+        res = idx.search(qs, k=k, eps=eps, beam_width=sp.beam_width,
+                         expand_width=sp.expand_width,
+                         visited_size=sp.visited_size,
+                         hop_backend=sp.hop_backend)
+        jax.block_until_ready(res.ids)
+        return res
+
+    offline(ds.queries)                       # compile
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        res = offline(ds.queries)
+        best = min(best, time.perf_counter() - t0)
+    offline_qps = n_query / best
+    offline_recall = recall_at_k(np.asarray(res.ids)[:, :k],
+                                 ds.gt_ids[:, :k])
+    emit("serving_offline_baseline", dataset=ds.name, qps=offline_qps,
+         recall=offline_recall, batch=n_query)
+
+    # -- the async engine under open-loop Poisson load --------------------
+    eng = AsyncQueryEngine(idx, k=k, eps=eps, preset=search_preset,
+                           max_batch=max_batch, bucket_floor=bucket_floor,
+                           deadline_ms=deadline_ms, linger_ms=linger_ms,
+                           partial_hops=partial_hops)
+    t0 = time.perf_counter()
+    compile_times = eng.warmup()
+    warmup_s = time.perf_counter() - t0
+    emit("serving_warmup", programs=len(compile_times), seconds=warmup_s,
+         slowest_ms=max(compile_times.values()) * 1e3)
+
+    offered = rate if rate is not None else rate_fraction * offline_qps
+    rng = np.random.default_rng(seed)
+    n_req = int(min(offered * duration, max_requests))
+    if n_req < 32:
+        n_req = 32
+    inter = rng.exponential(1.0 / offered, size=n_req)
+    arrivals = np.cumsum(inter)               # scheduled instants
+    q_idx = rng.integers(0, n_query, size=n_req)
+
+    futs = []
+    t_start = time.monotonic()     # AsyncResult timestamps use monotonic
+    for i in range(n_req):
+        # open loop: sleep only when ahead of schedule; when behind, fire
+        # immediately — the backlog shows up as latency, never as a lower
+        # offered rate
+        lag = arrivals[i] - (time.monotonic() - t_start)
+        if lag > 0:
+            time.sleep(lag)
+        futs.append(eng.submit(ds.queries[q_idx[i]]))
+    for f in futs:
+        f.result(timeout=300.0)
+    t_last = time.monotonic() - t_start
+    eng.close()
+
+    # latency vs the *scheduled* arrival (open-loop convention)
+    lats_ms = np.array([
+        (f.completed_at - (t_start + arrivals[i])) * 1e3
+        for i, f in enumerate(futs)])
+    pct = _percentiles(lats_ms)
+    sustained = n_req / t_last
+    full = [i for i, f in enumerate(futs) if not f.partial]
+    if full:       # partial (deadline-shed) results are load-shedding by
+        got = np.stack([futs[i].ids for i in full])   # design, not recall
+        rec = recall_at_k(got[:, :k], ds.gt_ids[q_idx[full]][:, :k])
+    else:
+        rec = 0.0
+    st = eng.stats
+    row = emit("serving_open_loop", dataset=ds.name,
+               preset=search_preset, offered_qps=offered,
+               sustained_qps=sustained, recall=rec,
+               online_vs_offline=offline_qps / max(sustained, 1e-9),
+               partials=st.partials, forced_flushes=st.forced_flushes,
+               flushes=st.flushes, requests=n_req, **pct)
+
+    write_bench_json("serving", {
+        "dataset": ds.name,
+        "config": {
+            "n": n, "n_query": n_query, "dim": dim, "k": k, "eps": eps,
+            "seed": seed, "refine": refine, "search_preset": search_preset,
+            "max_batch": max_batch, "bucket_floor": bucket_floor,
+            "deadline_ms": deadline_ms, "linger_ms": linger_ms,
+            "partial_hops": partial_hops, "duration": duration,
+            "quick": quick,
+        },
+        "offered_qps": offered, "sustained_qps": sustained,
+        "offline_qps": offline_qps, "offline_recall": offline_recall,
+        "online_vs_offline": offline_qps / max(sustained, 1e-9),
+        "recall_at_10": rec, "requests": n_req,
+        "partials": st.partials, "forced_flushes": st.forced_flushes,
+        "flushes": st.flushes, "bucket_hist": {
+            str(b): c for b, c in sorted(st.bucket_hist.items())},
+        "warmup_programs": len(compile_times), "warmup_s": warmup_s,
+        **pct,
+    })
+
+    summary = dict(offered_qps=offered, sustained_qps=sustained,
+                   offline_qps=offline_qps, recall=rec,
+                   p50_ms=pct["p50_ms"], p99_ms=pct["p99_ms"],
+                   p999_ms=pct["p999_ms"], partials=st.partials)
+    if quick:
+        # CI smoke gates (generous floors — catch an engine that stopped
+        # batching / retraced per request, not shared-runner jitter)
+        assert rec >= recall_floor, (
+            f"serving recall@{k}={rec:.4f} under the pinned floor "
+            f"{recall_floor} (differential-grid float32 floor)")
+        assert pct["p99_ms"] <= p99_floor_ms, (
+            f"serving p99={pct['p99_ms']:.1f}ms over the {p99_floor_ms}ms "
+            f"smoke floor")
+    return summary
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small index, short duration, deterministic seed, "
+                    "recall/p99 floors enforced (the CI smoke gate)")
+    ap.add_argument("--rate", type=float, default=None,
+                    help="offered QPS (default: 0.8x the measured offline "
+                    "closed-loop baseline)")
+    ap.add_argument("--duration", type=float, default=4.0)
+    a = ap.parse_args()
+    if a.quick:
+        print(run(**dict(QUICK_CONFIG, rate=a.rate)))
+    else:
+        print(run(rate=a.rate, duration=a.duration))

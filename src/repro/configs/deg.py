@@ -50,14 +50,18 @@ class SearchPreset:
     """Query-engine configuration (orthogonal to both the build params and
     the store codec): how many beam entries each hop expands
     (``expand_width``), which hop implementation runs (``hop_backend``:
-    "jnp" composed | "pallas" fused ``kernels/fused_hop``), and the
-    per-lane visited-filter size (``visited_size``; None = auto — the
-    broadcast dedup unless the fused kernel, which requires the filter,
-    is selected)."""
+    "jnp" composed | "pallas" fused ``kernels/fused_hop``), the per-lane
+    visited-filter size (``visited_size``; None = auto — the broadcast
+    dedup unless the fused kernel, which requires the filter, is
+    selected), and the beam length L (``beam_width``; None = the engine
+    heuristic).  The serving bucket table precompiles one program per
+    (batch bucket, preset), so L/E live here rather than ad hoc per
+    call."""
 
     expand_width: int = 1
     hop_backend: str = "jnp"
     visited_size: int | None = None
+    beam_width: int | None = None
 
 
 # search-engine presets swept by benchmarks/search_pareto.py.  "classic"
@@ -71,7 +75,50 @@ SEARCH_PRESETS = {
     "classic": SearchPreset(),
     "visited-e1": SearchPreset(expand_width=1, visited_size=1024),
     "multi-e2": SearchPreset(expand_width=2),
+    # the search_pareto headline point: E=2/L=64 beats the strongest E=1
+    # config at the saturated-recall tier on bench-small (PR 4)
+    "multi-e2-l64": SearchPreset(expand_width=2, beam_width=64),
     "multi-e4": SearchPreset(expand_width=4),
     "multi-e2-visited": SearchPreset(expand_width=2, visited_size=2048),
     "multi-e4-fused": SearchPreset(expand_width=4, hop_backend="pallas"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingPreset:
+    """Continuous-batching scheduler configuration (serving/async_engine).
+
+    ``max_batch`` bounds one flush; batches are padded to power-of-two
+    buckets from ``bucket_floor`` up (``serving/buckets.py``), so the jit
+    cache stays at ``len(buckets)`` programs per search preset.
+    ``deadline_ms`` is the default per-request SLO (None = no deadline):
+    a request whose deadline minus ``slack_ms`` (plus the measured flush
+    latency) is near forces a flush; one whose deadline has already
+    expired at dispatch is searched under ``partial_hops`` expansions and
+    returned flagged partial instead of being dropped.  ``linger_ms`` is
+    the max time the scheduler holds an underfull batch waiting for
+    coalescing."""
+
+    max_batch: int = 64
+    bucket_floor: int = 8
+    deadline_ms: float | None = 50.0
+    slack_ms: float = 3.0
+    linger_ms: float = 2.0
+    partial_hops: int = 8
+    pipeline_depth: int = 2
+
+
+# SLO presets for the async serving front end (launch/serve.py --slo,
+# benchmarks/serving_load.py): interactive trades batch occupancy for
+# latency, throughput the reverse; ci-quick is the deterministic smoke
+# configuration the CI gate runs.
+SLO_PRESETS = {
+    "interactive": ServingPreset(max_batch=32, bucket_floor=4,
+                                 deadline_ms=15.0, linger_ms=1.0,
+                                 partial_hops=6),
+    "balanced": ServingPreset(),
+    "throughput": ServingPreset(max_batch=128, bucket_floor=16,
+                                deadline_ms=None, linger_ms=5.0),
+    "ci-quick": ServingPreset(max_batch=16, bucket_floor=4,
+                              deadline_ms=500.0, linger_ms=1.0),
 }

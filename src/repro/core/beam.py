@@ -212,7 +212,8 @@ def expand(state: BeamState, adjacency: Array, n_valid: Array,
            k: int,
            eps: float, metric: str, backend: str = "jnp",
            merge_backend: str = "jnp", expand_width: int = 1,
-           hop_backend: str = "jnp") -> BeamState:
+           hop_backend: str = "jnp",
+           hop_budget: Optional[Array] = None) -> BeamState:
     """One hop: expand each lane's ``expand_width`` closest unchecked
     entries (Alg. 1 lines 8-15, generalized to a multi-expansion frontier)
     and merge their scored neighbors into the beam in one pass.
@@ -222,7 +223,15 @@ def expand(state: BeamState, adjacency: Array, n_valid: Array,
     ``hop_backend="pallas"`` fuses gather→filter→gather→distance→compaction
     into ``kernels/fused_hop`` (visited filter + exact float store + l2
     only; anything else statically falls back to the jnp composition, which
-    is bit-identical)."""
+    is bit-identical).
+
+    ``hop_budget`` (B,) int32 caps each lane's expansions: a lane whose
+    ``hops`` counter has reached its budget stops expanding (its beam is
+    then extractable as a best-so-far result — the serving layer's
+    deadline early-extract).  ``None`` (the default) is the unbudgeted
+    program, bit for bit.  With ``expand_width > 1`` a lane may overshoot
+    its budget by up to E-1 expansions (the E selections of one hop are
+    committed together)."""
     B, L = state.ids.shape
     E = expand_width
     d = adjacency.shape[1]
@@ -235,6 +244,8 @@ def expand(state: BeamState, adjacency: Array, n_valid: Array,
     sel_d = jnp.take_along_axis(state.dists, cur, axis=1)
     active = (sel_unchecked & (sel_d <= (r * eps1)[:, None])
               & (sel_id != INVALID))
+    if hop_budget is not None:
+        active &= (state.hops < hop_budget)[:, None]
 
     # scatter-max == OR: marks active selections checked; inactive (or
     # duplicate, on exhausted lanes) selections are no-ops, associatively
@@ -296,14 +307,20 @@ def expand(state: BeamState, adjacency: Array, n_valid: Array,
                  merge_backend=merge_backend)
 
 
-def alive(state: BeamState, *, k: int, eps: float) -> Array:
+def alive(state: BeamState, *, k: int, eps: float,
+          hop_budget: Optional[Array] = None) -> Array:
     """(B,) bool: does the lane still have an expandable entry within the
-    range radius (Alg. 1 line 7 would NOT yet return)?"""
+    range radius (Alg. 1 line 7 would NOT yet return)?  A lane whose
+    ``hop_budget`` is spent is dead regardless — its beam is the
+    best-so-far result."""
     eps1 = jnp.float32(1.0 + eps)
     r = radius(state, k)
     nxt = jnp.argmax(~state.checked, axis=1)
     nxt_d = state.dists[jnp.arange(state.ids.shape[0]), nxt]
-    return (~state.checked.all(axis=1)) & (nxt_d <= r * eps1)
+    live = (~state.checked.all(axis=1)) & (nxt_d <= r * eps1)
+    if hop_budget is not None:
+        live &= state.hops < hop_budget
+    return live
 
 
 def extract(state: BeamState, k: int, *, dedup: bool = False
@@ -337,7 +354,8 @@ def beam_search(graph: DEGraph, vectors: Array | VectorStore, queries: Array,
                 exclude: Optional[Array] = None, backend: str = "jnp",
                 merge_backend: str = "jnp", expand_width: int = 1,
                 visited_size: int = 0,
-                hop_backend: str = "jnp") -> BeamState:
+                hop_backend: str = "jnp",
+                hop_budget: Optional[Array] = None) -> BeamState:
     """init -> while(expand) -> final BeamState.  Pure (un-jitted): callers
     embed it in their own jitted programs (``range_search``, the sharded
     search step) so every layer reuses one implementation.
@@ -350,7 +368,12 @@ def beam_search(graph: DEGraph, vectors: Array | VectorStore, queries: Array,
     ``expand_width`` (E) widens the per-hop frontier; ``visited_size``
     swaps the beam-broadcast dedup for the visited filter (required for
     ``hop_backend="pallas"``, which fuses the hop into one kernel).  The
-    defaults (E=1, no visited, jnp) are the seed program, bit for bit."""
+    defaults (E=1, no visited, jnp) are the seed program, bit for bit.
+
+    ``hop_budget`` (B,) int32 per-lane expansion caps (serving early
+    extract): a budget-exhausted lane stops hopping and its final beam is
+    its best-so-far answer.  ``None`` = unbudgeted (the golden program —
+    the budget branch is not even traced)."""
     if expand_width < 1:
         raise ValueError(f"expand_width must be >= 1, got {expand_width}")
     expand_width = min(expand_width, beam_width)
@@ -376,8 +399,10 @@ def beam_search(graph: DEGraph, vectors: Array | VectorStore, queries: Array,
         state = expand(state, adjacency, n_valid, vectors, queries, exclude,
                        k=k, eps=eps, metric=metric, backend=backend,
                        merge_backend=merge_backend,
-                       expand_width=expand_width, hop_backend=hop_backend)
-        return (state, it + 1, alive(state, k=k, eps=eps).any())
+                       expand_width=expand_width, hop_backend=hop_backend,
+                       hop_budget=hop_budget)
+        return (state, it + 1,
+                alive(state, k=k, eps=eps, hop_budget=hop_budget).any())
 
     state, _, _ = jax.lax.while_loop(
         cond, body, (state0, jnp.int32(0), jnp.asarray(True)))

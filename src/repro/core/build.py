@@ -524,7 +524,8 @@ class DEGIndex:
                      rerank_k: Optional[int] = None,
                      expand_width: Optional[int] = None,
                      visited_size: Optional[int] = None,
-                     hop_backend: Optional[str] = None) -> SearchResult:
+                     hop_backend: Optional[str] = None,
+                     hop_budget: Optional[np.ndarray] = None) -> SearchResult:
         """The one device entry point every query path funnels through.
 
         ``seed_ids`` (B, S) / ``exclude`` (B, X) go straight into the beam
@@ -542,6 +543,10 @@ class DEGIndex:
         ``expand_width`` / ``visited_size`` / ``hop_backend`` default to
         the index's ``DEGParams`` engine knobs (multi-expansion config);
         pass explicit values to override per call.
+
+        ``hop_budget`` (B,) int32 per-lane expansion caps (serving
+        deadline early-extract; a traced operand, so all budget values
+        share one compiled program per shape family).
         """
         E = self.params.expand_width if expand_width is None else expand_width
         hb = self.params.hop_backend if hop_backend is None else hop_backend
@@ -555,12 +560,15 @@ class DEGIndex:
                 seeds = seeds[:, None]
         excl = None if exclude is None else jnp.asarray(
             np.asarray(exclude, np.int32))
+        hbud = None if hop_budget is None else jnp.asarray(
+            np.asarray(hop_budget, np.int32))
         if quantized in (None, "float32"):
             return range_search(self.frozen(), self._dev_vectors, q, seeds,
                                 k=k, eps=eps, beam_width=beam_width,
                                 metric=self.params.metric, exclude=excl,
                                 backend=backend, expand_width=E,
-                                visited_size=vs, hop_backend=hb)
+                                visited_size=vs, hop_backend=hb,
+                                hop_budget=hbud)
         store = self.store_for(quantized)
         rk = int(rerank_k) if rerank_k else 4 * k
         return range_search(self.frozen(), store, q, seeds, k=k, eps=eps,
@@ -568,7 +576,8 @@ class DEGIndex:
                             metric=self.params.metric, exclude=excl,
                             backend=backend, rerank_k=max(rk, k),
                             exact_vectors=self._dev_vectors, expand_width=E,
-                            visited_size=vs, hop_backend=hb)
+                            visited_size=vs, hop_backend=hb,
+                            hop_budget=hbud)
 
     def search(self, queries: np.ndarray, k: int, eps: float = 0.1,
                beam_width: Optional[int] = None, seed: Optional[int] = None,

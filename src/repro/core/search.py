@@ -97,6 +97,7 @@ def range_search(
     expand_width: int = 1,
     visited_size: Optional[int] = None,
     hop_backend: str = "jnp",
+    hop_budget: Optional[Array] = None,
 ) -> SearchResult:
     """Approximate k-NN for a batch of queries.
 
@@ -133,6 +134,11 @@ def range_search(
       hop_backend: "jnp" composed hop | "pallas" fused hop kernel
         (``kernels/fused_hop``: adjacency gather -> visited filter ->
         vector gather -> distance -> compaction in one kernel).
+      hop_budget: optional (B,) int32 per-lane expansion caps — the
+        serving layer's deadline early-extract: a budget-exhausted lane
+        stops hopping and returns its best-so-far beam (a traced operand,
+        so every budget value shares one compiled program; ``None`` keeps
+        the unbudgeted golden program).
     """
     n_ex = exclude.shape[1] if exclude is not None else 0
     L = (beam_width if beam_width is not None
@@ -160,7 +166,8 @@ def range_search(
         graph, vectors, queries, seed_ids, k=k, eps=eps, beam_width=L,
         max_hops=max_hops, metric=metric, exclude=exclude, backend=backend,
         merge_backend=merge_backend, expand_width=expand_width,
-        visited_size=visited_size, hop_backend=hop_backend)
+        visited_size=visited_size, hop_backend=hop_backend,
+        hop_budget=hop_budget)
     if rerank_k:
         cand_ids, _ = beam.extract(state, rerank_k, dedup=dedup)
         out_ids, out_d = exact_rerank(exact_vectors, queries, cand_ids,

@@ -1,9 +1,21 @@
 """Serving launcher: ``python -m repro.launch.serve``.
 
-Loads (or builds) a DEG index, then drives the batched QueryEngine through a
-synthetic request trace mixing fresh ANN queries, exploration sessions, and
-online inserts — the interactive-browsing workload the paper targets
-(§1, §6.7).  Reports QPS and recall.
+Loads (or builds) a DEG index, then serves a synthetic request trace.
+Two front ends:
+
+* ``--engine sync`` (default) — the batched ``QueryEngine`` driven
+  closed-loop, mixing fresh ANN queries, exploration sessions, and
+  online inserts — the interactive-browsing workload the paper targets
+  (§1, §6.7).  Reports QPS and recall.
+* ``--engine async`` — the continuous-batching ``AsyncQueryEngine``:
+  single-query submits coalesced into bucketed fixed-shape programs
+  with per-request deadlines (``--deadline-ms`` / ``--slo``).  Reports
+  p50/p99 latency, sustained QPS, recall, and partial/forced-flush
+  counts.
+
+``--warmup`` precompiles every (bucket, preset) program at boot and logs
+the compile time per bucket, so a warm-started snapshot (``--index``)
+serves its first request at steady-state latency.
 """
 from __future__ import annotations
 
@@ -74,6 +86,25 @@ def main() -> None:
     ap.add_argument("--rerank-k", type=int, default=0,
                     help="exact-rerank width for compressed codecs "
                     "(0 = auto 4*k)")
+    from repro.configs.deg import SEARCH_PRESETS, SLO_PRESETS
+
+    ap.add_argument("--engine", default="sync", choices=("sync", "async"),
+                    help="sync = closed-loop batched QueryEngine (golden "
+                    "baseline); async = continuous-batching "
+                    "AsyncQueryEngine with deadlines")
+    ap.add_argument("--search-preset", default=None,
+                    choices=sorted(SEARCH_PRESETS),
+                    help="L/E search program preset from configs/deg.py "
+                    "(bucketed programs are compiled per preset)")
+    ap.add_argument("--slo", default="balanced", choices=sorted(SLO_PRESETS),
+                    help="scheduler preset (max_batch/buckets/deadline/"
+                    "linger) for --engine async")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request SLO override for --engine async "
+                    "(negative = no deadline)")
+    ap.add_argument("--warmup", action="store_true",
+                    help="precompile all (bucket, preset) programs at boot "
+                    "and log compile time per bucket")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.preset:
@@ -84,6 +115,7 @@ def main() -> None:
     from repro.core.distances import exact_knn_batched
     from repro.core.metrics import recall_at_k
     from repro.data.synthetic import make_dataset
+    from repro.serving.async_engine import AsyncQueryEngine
     from repro.serving.engine import QueryEngine
 
     if args.index:
@@ -100,10 +132,60 @@ def main() -> None:
                                         k_ext=2 * args.degree),
                         wave_size=16,
                         refine_iterations=args.build_refine)
+    if args.engine == "async":
+        dl = args.deadline_ms
+        if dl is not None and dl < 0:
+            dl = None
+        aeng = AsyncQueryEngine(idx, k=args.k, codec=args.codec,
+                                rerank_k=args.rerank_k or None,
+                                preset=args.search_preset, slo=args.slo,
+                                max_batch=args.batch,
+                                **({} if args.deadline_ms is None
+                                   else {"deadline_ms": dl}))
+        if args.warmup:
+            t0 = time.time()
+            times = aeng.warmup()
+            for (b, variant), secs in sorted(times.items()):
+                print(f"warmup: bucket={b:4d} variant={variant:6s} "
+                      f"compile+run {secs*1e3:8.1f} ms")
+            print(f"warmup: {len(times)} programs in {time.time()-t0:.2f}s "
+                  f"(buckets {list(aeng.buckets)})")
+        t0 = time.time()
+        futs = [aeng.submit(q) for q in queries]
+        outs = [f.result(120.0) for f in futs]
+        wall = time.time() - t0
+        lats = np.array([f.latency_s for f in futs]) * 1e3
+        found = np.stack([o[0] for o in outs])
+        _, gt = exact_knn_batched(queries, base, args.k)
+        rec = recall_at_k(found, gt)
+        st = aeng.stats
+        print(f"served {len(futs)} queries in {wall:.2f}s "
+              f"({len(futs)/wall:.0f} qps sustained), "
+              f"recall@{args.k}={rec:.4f}, "
+              f"p50={np.percentile(lats, 50):.2f}ms "
+              f"p99={np.percentile(lats, 99):.2f}ms, "
+              f"{st.flushes} flushes {st.partials} partial "
+              f"{st.forced_flushes} deadline-forced, "
+              f"buckets={st.bucket_hist}")
+        aeng.close()
+        if args.save_index:
+            idx.save(args.save_index)
+            print(f"saved index snapshot to {args.save_index} "
+                  f"(n={idx.n}; warm-start with --index)")
+        return
+
     engine = QueryEngine(idx, k=args.k, max_batch=args.batch,
                          refine_budget=args.refine_budget,
                          codec=args.codec,
-                         rerank_k=args.rerank_k or None)
+                         rerank_k=args.rerank_k or None,
+                         preset=args.search_preset)
+    if args.warmup:
+        t0 = time.time()
+        times = engine.warmup()
+        for (b, variant), secs in sorted(times.items()):
+            print(f"warmup: bucket={b:4d} compile+run {secs*1e3:8.1f} ms")
+        print(f"warmup: {len(times)} programs in {time.time()-t0:.2f}s "
+              f"(buckets {list(engine.buckets)})")
     if args.codec != "float32":
         ms = engine.memory_stats()
         print(f"codec={args.codec}: traversal store "

@@ -1,1 +1,13 @@
-"""Serving: batched ANN query engine over (sharded) DEG indexes."""
+"""Serving: batched ANN query engines over (sharded) DEG indexes.
+
+* ``engine.QueryEngine`` — the synchronous batch engine (the golden
+  bit-identical baseline; sessions, online inserts, refinement);
+* ``async_engine.AsyncQueryEngine`` — the continuous-batching online
+  engine (admission queue, deadline-aware flush, pipelined bucketed
+  programs);
+* ``buckets`` — the bucketed fixed-shape program table both flush
+  through; ``scheduler`` — the admission queue + request futures.
+"""
+from repro.serving.async_engine import AsyncEngineStats, AsyncQueryEngine  # noqa: F401
+from repro.serving.engine import EngineStats, QueryEngine  # noqa: F401
+from repro.serving.scheduler import AsyncResult, CancelledError  # noqa: F401

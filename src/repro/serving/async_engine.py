@@ -1,0 +1,308 @@
+"""Continuous-batching async serving engine.
+
+``AsyncQueryEngine`` turns the synchronous ``QueryEngine.flush`` batch
+call into an online serving loop:
+
+* **admission queue** — ``submit`` returns immediately with an
+  :class:`~repro.serving.scheduler.AsyncResult`; a scheduler thread
+  coalesces queued singles into dynamic batches, padded into the same
+  power-of-two **bucketed fixed-shape programs** the sync engine flushes
+  through (``serving/buckets.py``), so steady state never retraces and a
+  light load never pays the ``max_batch``-wide program;
+* **deadline-aware flush** — a request nearing its deadline (minus the
+  measured flush latency and a safety ``slack_ms``) forces a flush
+  before the batch fills; a request whose deadline already expired at
+  dispatch is searched under a ``partial_hops`` per-lane hop budget
+  (the beam engine's early-extract operand) and completes flagged
+  ``partial=True`` — best-so-far results instead of a drop;
+* **host↔device pipelining** — dispatch is asynchronous (jax enqueues
+  the program and returns), so while flush *i* computes on device, the
+  scheduler thread stages and transfers flush *i+1* and the extract
+  thread blocks on flush *i-1*'s device→host readback; a bounded
+  in-flight queue (``pipeline_depth``) is the double buffer and the
+  backpressure;
+* **bit-identity** — with no deadline fired, a flush runs the *same
+  program on the same operands* as ``QueryEngine.flush`` (both go
+  through ``buckets.dispatch``), and per-lane results are independent of
+  batch composition, so async results are bit-identical to a sync flush
+  of the same queries no matter how the scheduler grouped them (pinned
+  by tests/test_serving_async.py against the golden fixture).
+
+The engine serves a read-only view of the index: run mutations (insert /
+delete / refine) through the owning ``QueryEngine`` or the index itself
+while no async engine is live, or between ``close()``/construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue as _queue
+import threading
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.serving import buckets as _buckets
+from repro.serving.scheduler import AdmissionQueue, AsyncResult, Request
+
+
+@dataclasses.dataclass
+class AsyncEngineStats:
+    flushes: int = 0
+    queries: int = 0
+    partials: int = 0           # deadline-expired, served best-so-far
+    forced_flushes: int = 0     # flushed early for a nearing deadline
+    ema_flush_s: float = 0.0    # smoothed dispatch->extracted wall time
+    bucket_hist: dict = dataclasses.field(default_factory=dict)
+
+
+class AsyncQueryEngine:
+    def __init__(self, index, *, k: int = 10, eps: float = 0.1,
+                 beam_width: Optional[int] = None,
+                 codec: str = "float32", rerank_k: Optional[int] = None,
+                 expand_width: Optional[int] = None,
+                 visited_size: Optional[int] = None,
+                 hop_backend: Optional[str] = None,
+                 preset: Optional[str] = None,
+                 slo: "str | object | None" = None,
+                 max_batch: Optional[int] = None,
+                 bucket_floor: Optional[int] = None,
+                 deadline_ms: "float | None" = "unset",
+                 slack_ms: Optional[float] = None,
+                 linger_ms: Optional[float] = None,
+                 partial_hops: Optional[int] = None,
+                 pipeline_depth: Optional[int] = None,
+                 exclude_width: int = 8,
+                 start: bool = True):
+        """``preset`` names a ``configs.deg.SEARCH_PRESETS`` entry (the
+        L/E search program); ``slo`` a ``configs.deg.SLO_PRESETS`` entry
+        (or a ``ServingPreset`` instance) supplying the scheduler knobs —
+        explicit keyword arguments win over both.  ``deadline_ms`` is the
+        default per-request SLO (None = no deadline; requests may
+        override per ``submit``)."""
+        from repro.configs.deg import SLO_PRESETS, ServingPreset
+
+        if preset is not None:
+            from repro.configs.deg import SEARCH_PRESETS
+
+            p = SEARCH_PRESETS[preset]
+            expand_width = p.expand_width if expand_width is None \
+                else expand_width
+            hop_backend = p.hop_backend if hop_backend is None \
+                else hop_backend
+            visited_size = p.visited_size if visited_size is None \
+                else visited_size
+            beam_width = p.beam_width if beam_width is None else beam_width
+        s = SLO_PRESETS[slo] if isinstance(slo, str) else \
+            (slo or ServingPreset())
+        self.index = index
+        self.cfg = _buckets.ProgramConfig(
+            k=k, eps=eps, beam_width=beam_width, codec=codec,
+            rerank_k=rerank_k, expand_width=expand_width,
+            visited_size=visited_size, hop_backend=hop_backend)
+        self.max_batch = max_batch if max_batch is not None else s.max_batch
+        self.buckets = _buckets.bucket_sizes(
+            self.max_batch,
+            bucket_floor if bucket_floor is not None else s.bucket_floor)
+        self.default_deadline_ms = (s.deadline_ms if deadline_ms == "unset"
+                                    else deadline_ms)
+        self.slack_s = (slack_ms if slack_ms is not None else s.slack_ms) \
+            / 1e3
+        self.linger_s = (linger_ms if linger_ms is not None else s.linger_ms) \
+            / 1e3
+        self.partial_hops = (partial_hops if partial_hops is not None
+                             else s.partial_hops)
+        depth = pipeline_depth if pipeline_depth is not None \
+            else s.pipeline_depth
+        self._exclude_width = max(1, exclude_width)
+        self.stats = AsyncEngineStats()
+        self._queue = AdmissionQueue(notify_at=self.max_batch)
+        # late-binding pipeline: the scheduler takes a dispatch slot
+        # BEFORE popping the queue, so a batch is formed at the instant
+        # the pipeline can absorb it (pop early and requests arriving
+        # while the staged flush waits would miss the bus — the
+        # small-flush oscillation).  The semaphore holds ``depth`` slots
+        # (the double buffer); extract releases one per drained flush.
+        self._slots = threading.Semaphore(max(1, depth))
+        self._inflight: _queue.Queue = _queue.Queue()
+        self._stop = False
+        self._threads: list[threading.Thread] = []
+        if start:
+            self.start()
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self) -> None:
+        if self._threads:
+            return
+        self._stop = False
+        self._threads = [
+            threading.Thread(target=self._scheduler_loop,
+                             name="deg-serve-scheduler", daemon=True),
+            threading.Thread(target=self._extract_loop,
+                             name="deg-serve-extract", daemon=True),
+        ]
+        for t in self._threads:
+            t.start()
+
+    def close(self) -> None:
+        """Drain the queue (every accepted request completes), stop the
+        threads.  Idempotent."""
+        self._stop = True
+        self._queue.notify()
+        for t in self._threads:
+            t.join()
+        self._threads = []
+        # a submit that raced close() past the running check: cancel its
+        # future rather than leave it forever pending
+        for req in self._queue.pop_ready(self.max_batch):
+            req.result._try_cancel()
+
+    def __enter__(self) -> "AsyncQueryEngine":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def warmup(self) -> dict:
+        """Boot-time precompile of every (bucket, {plain, budget})
+        program this engine can dispatch — no live request ever pays a
+        trace.  Returns ``{(bucket, variant): seconds}`` compile times."""
+        return _buckets.precompile(self.index, self.cfg, self.buckets,
+                                   with_budget=True)
+
+    # -- request path ------------------------------------------------------
+    def submit(self, query: np.ndarray, *,
+               deadline_ms: "float | None" = "unset",
+               exclude: Sequence[int] = (),
+               seed_vertex: Optional[int] = None) -> AsyncResult:
+        """Queue one query; returns immediately.  ``deadline_ms`` is
+        relative to now ("unset" = the engine default; None = no SLO).
+        ``seed_vertex`` replaces the medoid seed (exploration-style
+        callers add it to ``exclude`` themselves when the protocol hides
+        it)."""
+        if self._stop or not self._threads:
+            raise RuntimeError("engine is not running (closed or never "
+                               "started)")
+        dl_ms = self.default_deadline_ms if deadline_ms == "unset" \
+            else deadline_ms
+        deadline = None if dl_ms is None else time.monotonic() + dl_ms / 1e3
+        return self._queue.push(np.asarray(query, np.float32),
+                                exclude=list(exclude),
+                                seed_vertex=seed_vertex, deadline=deadline)
+
+    def search(self, queries: np.ndarray, timeout: Optional[float] = 60.0
+               ) -> tuple[np.ndarray, np.ndarray]:
+        """Submit a batch and block for all results (convenience — the
+        closed-loop face of the async engine, used by the bit-identity
+        tests)."""
+        futs = [self.submit(q) for q in np.atleast_2d(queries)]
+        outs = [f.result(timeout) for f in futs]
+        return (np.stack([o[0] for o in outs]),
+                np.stack([o[1] for o in outs]))
+
+    # -- scheduler thread --------------------------------------------------
+    def _flush_at(self) -> tuple[Optional[float], bool]:
+        """(instant the current queue content must flush, whether a
+        deadline pulled it earlier): the oldest request's linger expiry,
+        pulled forward if a queued deadline (minus slack and the measured
+        flush latency) is nearer."""
+        oldest = self._queue.oldest_submit_t()
+        if oldest is None:
+            return None, False
+        at = oldest + self.linger_s
+        nd = self._queue.next_deadline()
+        if nd is not None:
+            dl_at = nd - self.slack_s - self.stats.ema_flush_s
+            if dl_at < at:
+                return dl_at, True
+        return at, False
+
+    def _scheduler_loop(self) -> None:
+        while True:
+            if self._stop:
+                while True:           # drain: accepted requests complete
+                    reqs = self._queue.pop_ready(self.max_batch)
+                    if not reqs:
+                        break
+                    self._dispatch(reqs)
+                self._inflight.put(None)
+                return
+            if len(self._queue) == 0:
+                self._queue.wait(0.02)
+                continue
+            if not self._slots.acquire(timeout=0.02):
+                continue              # pipeline full; recheck stop flag
+            deadline_forced = False
+            while (not self._stop
+                   and len(self._queue) < self.max_batch):
+                at, forced = self._flush_at()
+                now = time.monotonic()
+                if at is None or now >= at:
+                    deadline_forced = forced and at is not None
+                    break
+                self._queue.wait(min(at - now, 0.02))
+                if len(self._queue) == 0:
+                    break
+            reqs = self._queue.pop_ready(self.max_batch)
+            if reqs:
+                if deadline_forced:
+                    self.stats.forced_flushes += 1
+                self._dispatch(reqs)
+            else:
+                self._slots.release()
+
+    def _dispatch(self, reqs: list[Request]) -> None:
+        """Stage one bucketed flush and enqueue it (asynchronously — jax
+        returns before the device finishes) for the extract thread."""
+        B = len(reqs)
+        bucket = next(b for b in self.buckets if b >= B)
+        now = time.monotonic()
+        expired = [r.deadline is not None and now > r.deadline for r in reqs]
+        budget = None
+        if any(expired):
+            # expired lanes run the partial-hop early extract; the rest
+            # (and the padding) are uncapped.  One budgeted program per
+            # bucket regardless of which lanes expired (traced operand).
+            budget = np.full(bucket, _buckets.NO_BUDGET, np.int32)
+            for i, ex in enumerate(expired):
+                if ex:
+                    budget[i] = self.partial_hops
+        items = [_buckets.BatchItem(query=r.query, exclude=r.exclude,
+                                    seed_vertex=r.seed_vertex) for r in reqs]
+        qs, seeds, excl = _buckets.pad_batch(items, bucket,
+                                             self.index.medoid(),
+                                             self._exclude_width)
+        res = _buckets.dispatch(self.index, self.cfg, qs, seeds, excl,
+                                hop_budget=budget)
+        flush_index = self.stats.flushes
+        self.stats.flushes += 1
+        self.stats.queries += B
+        self.stats.bucket_hist[bucket] = \
+            self.stats.bucket_hist.get(bucket, 0) + 1
+        for r in reqs:
+            r.result._mark_dispatched(flush_index)
+        # in-flight count is bounded by the dispatch-slot semaphore
+        # (acquired before the batch was popped), so this never blocks;
+        # extract releases the slot once the flush is drained
+        self._inflight.put((reqs, res, expired, time.monotonic()))
+
+    # -- extract thread ----------------------------------------------------
+    def _extract_loop(self) -> None:
+        while True:
+            item = self._inflight.get()
+            if item is None:
+                return
+            reqs, res, expired, t0 = item
+            ids = np.asarray(res.ids)      # device->host: blocks until the
+            dists = np.asarray(res.dists)  # async dispatch finished
+            dt = time.monotonic() - t0
+            self.stats.ema_flush_s = dt if not self.stats.ema_flush_s \
+                else 0.8 * self.stats.ema_flush_s + 0.2 * dt
+            for i, r in enumerate(reqs):
+                if expired[i]:
+                    self.stats.partials += 1
+                r.result._complete(ids[i].copy(), dists[i].copy(),
+                                   partial=expired[i])
+            self._slots.release()     # free the dispatch slot last, so a
+            # newly formed batch sees this flush's arrivals in the queue

@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.core.build import DEGIndex
 from repro.core.graph import INVALID
+from repro.serving import buckets as _buckets
 
 
 @dataclasses.dataclass
@@ -47,12 +48,14 @@ class EngineStats:
 
 class QueryEngine:
     def __init__(self, index: DEGIndex, *, k: int = 10, eps: float = 0.1,
-                 max_batch: int = 64, refine_budget: int = 0,
+                 max_batch: int = 64, bucket_floor: int = 8,
+                 refine_budget: int = 0,
                  beam_width: Optional[int] = None, exclude_width: int = 8,
                  codec: str = "float32", rerank_k: Optional[int] = None,
                  expand_width: Optional[int] = None,
                  visited_size: Optional[int] = None,
-                 hop_backend: Optional[str] = None):
+                 hop_backend: Optional[str] = None,
+                 preset: Optional[str] = None):
         """``codec`` picks the vector store the beam traverses for THIS
         engine ("float32" exact | "fp16" | "sq8"); compressed codecs run
         the two-stage search (exact rerank of ``rerank_k`` candidates,
@@ -62,12 +65,31 @@ class QueryEngine:
         ``expand_width`` / ``visited_size`` / ``hop_backend`` configure the
         multi-expansion engine for this engine's flushes (None = inherit
         the index's ``DEGParams`` knobs); engines over one index may serve
-        different (E, backend) points of the Pareto sweep."""
+        different (E, backend) points of the Pareto sweep.  ``preset``
+        names a ``configs.deg.SEARCH_PRESETS`` entry supplying those knobs
+        (plus ``beam_width``) wholesale; explicit arguments win.
+
+        Flushes of fewer than ``max_batch`` queries are padded to the
+        power-of-two bucket >= ``bucket_floor`` that fits them
+        (``serving/buckets.py``), so the jit cache holds at most one
+        program per bucket instead of one per batch size — and a
+        single-query flush no longer pays a ``max_batch``-wide program."""
         from repro.quant.codec import CODECS
 
         if codec not in CODECS:
             raise ValueError(f"unknown codec {codec!r} "
                              f"(have {sorted(CODECS)})")
+        if preset is not None:
+            from repro.configs.deg import SEARCH_PRESETS
+
+            p = SEARCH_PRESETS[preset]
+            expand_width = p.expand_width if expand_width is None \
+                else expand_width
+            hop_backend = p.hop_backend if hop_backend is None \
+                else hop_backend
+            visited_size = p.visited_size if visited_size is None \
+                else visited_size
+            beam_width = p.beam_width if beam_width is None else beam_width
         self.index = index
         self.k, self.eps, self.beam_width = k, eps, beam_width
         self.codec, self.rerank_k = codec, rerank_k
@@ -84,6 +106,18 @@ class QueryEngine:
         # session history reuse the same jitted program (bounded entries)
         # without one long session permanently widening every later flush.
         self._exclude_width = max(1, exclude_width)
+        self.cfg = _buckets.ProgramConfig(
+            k=k, eps=eps, beam_width=beam_width, codec=codec,
+            rerank_k=rerank_k, expand_width=expand_width,
+            visited_size=visited_size, hop_backend=hop_backend)
+        self.buckets = _buckets.bucket_sizes(max_batch, bucket_floor)
+
+    def warmup(self, *, with_budget: bool = False) -> dict:
+        """Precompile every (bucket, variant) program this engine can
+        dispatch (boot-time, so no request ever pays a trace).  Returns
+        ``{(bucket, variant): seconds}`` compile wall times."""
+        return _buckets.precompile(self.index, self.cfg, self.buckets,
+                                   with_budget=with_budget)
 
     # -- lifecycle ---------------------------------------------------------
     @classmethod
@@ -161,10 +195,12 @@ class QueryEngine:
     def flush(self) -> int:
         """One fixed-shape beam-engine call for the whole pending batch.
 
-        Seed and exclude lanes go straight into ``DEGIndex.search_batch``:
-        plain queries get the cached medoid seed, exploration queries their
-        seed vertex plus session history.  A flush with no exclusions at
-        all passes ``exclude=None`` (identical program to ``index.search``,
+        Seed and exclude lanes go straight into ``DEGIndex.search_batch``
+        through the shared bucket table (``serving/buckets.py``): the
+        batch is padded to the smallest bucket that fits it, plain queries
+        get the cached medoid seed, exploration queries their seed vertex
+        plus session history.  A flush with no exclusions at all passes
+        ``exclude=None`` (identical program to ``index.search``,
         configured beam_width honored); otherwise the exclude width is the
         batch's need bucketed to a power of two, so widths — and the beam
         widening ``L >= k + X`` that comes with them — never outlive the
@@ -174,32 +210,19 @@ class QueryEngine:
         batch = self._pending[: self.max_batch]
         self._pending = self._pending[self.max_batch:]
         B = len(batch)
-        pad = self.max_batch - B           # fixed shape -> one jit entry
-        qs = np.stack([b[0] for b in batch] + [batch[0][0]] * pad)
-        max_ex = max((len(b[1]) + (b[4] is not None) for b in batch),
-                     default=0)
-        seeds = np.full((self.max_batch, 1), self.index.medoid(), np.int32)
-        if max_ex == 0:
-            excl = None
-        else:
-            xw = self._exclude_width
-            while xw < max_ex:
-                xw *= 2
-            excl = np.full((self.max_batch, xw), INVALID, np.int32)
-        for i, (_, ex, _, _, sv) in enumerate(batch):
-            if sv is not None:
-                seeds[i, 0] = sv
-                excl[i, 0] = sv            # the seed never reappears
-                excl[i, 1 : len(ex) + 1] = ex
-            elif ex:
-                excl[i, : len(ex)] = ex
+        items = [
+            _buckets.BatchItem(
+                query=q,
+                # an exploration seed never reappears in its own results
+                exclude=([sv] + list(ex) if sv is not None else ex),
+                seed_vertex=sv)
+            for (q, ex, _, _, sv) in batch]
+        bucket = next(b for b in self.buckets if b >= B)
+        qs, seeds, excl = _buckets.pad_batch(items, bucket,
+                                             self.index.medoid(),
+                                             self._exclude_width)
         t0 = time.time()
-        res = self.index.search_batch(
-            qs, seeds, excl, k=self.k, eps=self.eps,
-            beam_width=self.beam_width,
-            quantized=None if self.codec == "float32" else self.codec,
-            rerank_k=self.rerank_k, expand_width=self.expand_width,
-            visited_size=self.visited_size, hop_backend=self.hop_backend)
+        res = _buckets.dispatch(self.index, self.cfg, qs, seeds, excl)
         ids, dists = np.asarray(res.ids), np.asarray(res.dists)
         self.stats.total_search_s += time.time() - t0
         self.stats.flushes += 1

@@ -1,0 +1,220 @@
+"""Admission queue + request futures for the continuous-batching engine.
+
+The scheduler side of ``AsyncQueryEngine``: single-query submits land in
+an :class:`AdmissionQueue` as :class:`Request` records and are handed out
+strictly FIFO (queue-order fairness — a burst that overfills one bucket
+is served oldest-first across consecutive flushes, never reordered by
+deadline or arrival jitter).  Each request carries an
+:class:`AsyncResult`, a thread-safe future the extract stage completes;
+cancellation is resolved at dispatch time (a cancelled request still in
+the queue is dropped before it costs a lane).
+
+Deadlines are absolute ``time.monotonic()`` instants.  The queue only
+*accounts* for them (``next_deadline`` feeds the engine's flush-timing
+decision); the policy itself — force a flush when a request nears its
+deadline, search an already-expired request under a partial hop budget —
+lives in ``serving/async_engine.py``.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import heapq
+import threading
+import time
+from typing import Optional, Sequence
+
+
+class CancelledError(RuntimeError):
+    """Raised by :meth:`AsyncResult.result` for a cancelled request."""
+
+
+class AsyncResult:
+    """Thread-safe future for one submitted query.
+
+    States: pending -> dispatched -> done, or pending -> cancelled.
+    ``ids``/``dists`` are the per-request result rows; ``partial`` is True
+    when the request's deadline expired before dispatch and the engine
+    returned the best-so-far beam under the partial hop budget instead of
+    dropping it."""
+
+    __slots__ = ("_event", "_lock", "_state", "ids", "dists", "partial",
+                 "submitted_at", "dispatched_at", "completed_at", "deadline",
+                 "flush_index")
+
+    def __init__(self, deadline: Optional[float] = None):
+        self._event = threading.Event()
+        self._lock = threading.Lock()
+        self._state = "pending"
+        self.ids = None
+        self.dists = None
+        self.partial = False
+        self.submitted_at = time.monotonic()
+        self.dispatched_at: Optional[float] = None
+        self.completed_at: Optional[float] = None
+        self.deadline = deadline
+        self.flush_index: Optional[int] = None
+
+    # -- state transitions (engine-side) -----------------------------------
+    def _mark_dispatched(self, flush_index: int) -> None:
+        with self._lock:
+            self._state = "dispatched"
+            self.dispatched_at = time.monotonic()
+            self.flush_index = flush_index
+
+    def _complete(self, ids, dists, *, partial: bool) -> None:
+        with self._lock:
+            self.ids, self.dists = ids, dists
+            self.partial = partial
+            self.completed_at = time.monotonic()
+            self._state = "done"
+        self._event.set()
+
+    def _try_cancel(self) -> bool:
+        with self._lock:
+            if self._state != "pending":
+                return False
+            self._state = "cancelled"
+        self._event.set()
+        return True
+
+    # -- caller side -------------------------------------------------------
+    @property
+    def cancelled(self) -> bool:
+        return self._state == "cancelled"
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def cancel(self) -> bool:
+        """Cancel if still queued.  Returns False once dispatched — the
+        lane is already paid for and the result will arrive."""
+        return self._try_cancel()
+
+    def result(self, timeout: Optional[float] = None):
+        """Block for (ids, dists).  Raises :class:`CancelledError` for a
+        cancelled request, TimeoutError if the wait expires."""
+        if not self._event.wait(timeout):
+            raise TimeoutError("result not ready")
+        if self._state == "cancelled":
+            raise CancelledError("request was cancelled before dispatch")
+        return self.ids, self.dists
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.completed_at is None:
+            return None
+        return self.completed_at - self.submitted_at
+
+
+@dataclasses.dataclass
+class Request:
+    """One admitted query: operands plus scheduling metadata."""
+
+    query: "object"                      # (m,) float32 np.ndarray
+    result: AsyncResult
+    seq: int                             # admission order (FIFO key)
+    exclude: Sequence[int] = ()
+    seed_vertex: Optional[int] = None
+
+    @property
+    def deadline(self) -> Optional[float]:
+        return self.result.deadline
+
+
+class AdmissionQueue:
+    """FIFO admission queue shared by the submit side and the scheduler
+    thread.  All waits go through one condition variable.
+
+    Pushes are cheap by design — the serving host shares cores with the
+    device program (single-process jax), so per-request overhead on the
+    submit path is stolen straight from search compute.  ``push`` only
+    wakes the scheduler on the transitions it actually acts on: queue
+    went non-empty (start the linger clock) or reached ``notify_at``
+    (= the engine's ``max_batch``: a full bucket should flush now, not at
+    linger expiry).  In between, the scheduler's own timed waits poll the
+    flush instant.  Deadlines are tracked in a lazy min-heap so
+    :meth:`next_deadline` is O(log n) amortized, not a deque scan per
+    scheduler pass."""
+
+    def __init__(self, notify_at: Optional[int] = None):
+        self._dq: collections.deque[Request] = collections.deque()
+        self._cv = threading.Condition()
+        self._seq = 0
+        self._head = 0            # seq of the oldest request still queued
+        self._deadlines: list[tuple[float, int]] = []   # (deadline, seq)
+        self.notify_at = notify_at
+
+    def __len__(self) -> int:
+        with self._cv:
+            return len(self._dq)
+
+    def push(self, query, *, exclude: Sequence[int] = (),
+             seed_vertex: Optional[int] = None,
+             deadline: Optional[float] = None) -> AsyncResult:
+        res = AsyncResult(deadline=deadline)
+        with self._cv:
+            req = Request(query=query, result=res, seq=self._seq,
+                          exclude=exclude, seed_vertex=seed_vertex)
+            self._seq += 1
+            self._dq.append(req)
+            if deadline is not None:
+                heapq.heappush(self._deadlines, (deadline, req.seq))
+            n = len(self._dq)
+            if n == 1 or (self.notify_at is not None
+                          and n >= self.notify_at):
+                self._cv.notify_all()
+        return res
+
+    def pop_ready(self, max_n: int) -> list[Request]:
+        """Up to ``max_n`` oldest live requests, strict FIFO.  Requests
+        cancelled while queued are discarded here (their futures are
+        already set), so they never occupy a lane."""
+        out: list[Request] = []
+        with self._cv:
+            while self._dq and len(out) < max_n:
+                req = self._dq.popleft()
+                self._head = req.seq + 1
+                if req.result.cancelled:
+                    continue
+                out.append(req)
+        return out
+
+    def oldest_submit_t(self) -> Optional[float]:
+        with self._cv:
+            for req in self._dq:
+                if not req.result.cancelled:
+                    return req.result.submitted_at
+        return None
+
+    def next_deadline(self) -> Optional[float]:
+        """Earliest live deadline currently queued (None if none carry
+        one) — the input to the engine's deadline-aware flush timing.
+        Stale heap entries (dispatched or cancelled requests) are
+        discarded lazily here."""
+        with self._cv:
+            h = self._deadlines
+            while h and h[0][1] < self._head:
+                heapq.heappop(h)
+            # a cancelled-but-still-queued request: O(cancellations), and
+            # only when the earliest deadline is the cancelled one
+            while h and h[0][1] >= self._head:
+                dl, seq = h[0]
+                req = self._dq[seq - self._head] \
+                    if seq - self._head < len(self._dq) else None
+                if req is not None and req.seq == seq \
+                        and req.result.cancelled:
+                    heapq.heappop(h)
+                    continue
+                return dl
+        return None
+
+    def wait(self, timeout: Optional[float] = None) -> None:
+        """Sleep until a push (or timeout).  Spurious wakeups are fine —
+        the engine recomputes its flush decision every pass."""
+        with self._cv:
+            self._cv.wait(timeout)
+
+    def notify(self) -> None:
+        with self._cv:
+            self._cv.notify_all()

@@ -1,0 +1,153 @@
+"""AsyncQueryEngine: continuous batching, deadlines, fairness, cancellation.
+
+The engine's core guarantee is bit-identity with the sync flush: both go
+through ``serving/buckets.dispatch`` and per-lane results are independent
+of batch composition, so HOW the scheduler grouped the requests must not
+show in the results.  Pinned here against the live sync engine and the
+golden range_search fixture."""
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.build import DEGIndex, DEGParams, build_deg
+from repro.serving.async_engine import AsyncQueryEngine
+from repro.serving.engine import QueryEngine
+from repro.serving.scheduler import CancelledError
+
+_FIXTURE = os.path.join(os.path.dirname(__file__), "data",
+                        "range_search_golden.npz")
+
+
+@pytest.fixture(scope="module")
+def index():
+    rng = np.random.default_rng(0)
+    vecs = rng.normal(size=(400, 8)).astype(np.float32)
+    return build_deg(vecs, DEGParams(degree=8, k_ext=16), wave_size=8), vecs
+
+
+def test_async_bit_identical_to_sync_flush(index):
+    idx, vecs = index
+    rng = np.random.default_rng(1)
+    qs = vecs[:40] + 0.01 * rng.normal(size=(40, 8)).astype(np.float32)
+    sync_ids, sync_dists = QueryEngine(idx, k=5, max_batch=16).search(qs)
+    with AsyncQueryEngine(idx, k=5, max_batch=16,
+                          deadline_ms=None) as eng:
+        ids, dists = eng.search(qs)
+    # exact equality: the scheduler's grouping (however the flushes fell)
+    # must be invisible in the results
+    np.testing.assert_array_equal(ids, sync_ids)
+    np.testing.assert_array_equal(dists, sync_dists)
+    assert eng.stats.partials == 0
+
+
+def test_async_replays_golden_fixture():
+    """The async engine serving fixture case A (shared seed vertex 3,
+    k=10, eps=0.1) must reproduce the frozen seed-implementation results
+    bit for bit — continuous batching is a scheduling change, never a
+    semantic one."""
+    from repro.core.graph import GraphBuilder
+
+    g = np.load(_FIXTURE)
+    degree = g["adjacency"].shape[1]
+    cap = g["adjacency"].shape[0]
+    idx = DEGIndex(g["vectors"].shape[1],
+                   DEGParams(degree=degree, k_ext=2 * degree), capacity=cap)
+    rows = g["vectors"][:cap]
+    idx.vectors[: rows.shape[0]] = rows
+    idx._put_rows(rows, 0)
+    b = GraphBuilder(cap, degree)
+    b.load(g["adjacency"], g["weights"], int(g["n"]))
+    idx.builder = b
+
+    with AsyncQueryEngine(idx, k=10, eps=0.1, max_batch=16,
+                          deadline_ms=None) as eng:
+        futs = [eng.submit(q, seed_vertex=int(g["seeds_a"][i, 0]))
+                for i, q in enumerate(g["queries"])]
+        outs = [f.result(120.0) for f in futs]
+    np.testing.assert_array_equal(np.stack([o[0] for o in outs]),
+                                  g["a_ids"])
+    np.testing.assert_array_equal(np.stack([o[1] for o in outs]),
+                                  g["a_dists"])
+
+
+def test_deadline_expired_completes_partial(index):
+    idx, vecs = index
+    with AsyncQueryEngine(idx, k=5, max_batch=8, deadline_ms=0.0,
+                          partial_hops=4) as eng:
+        fut = eng.submit(vecs[0])
+        ids, dists = fut.result(120.0)
+    # expired at dispatch: served under the partial hop budget, flagged —
+    # best-so-far results, not a drop
+    assert fut.partial
+    assert (ids >= 0).any() and np.isfinite(dists).any()
+    assert eng.stats.partials == 1
+    assert eng.stats.forced_flushes >= 1
+
+
+def test_no_deadline_never_partial(index):
+    idx, vecs = index
+    with AsyncQueryEngine(idx, k=5, max_batch=8,
+                          deadline_ms=None) as eng:
+        futs = [eng.submit(q) for q in vecs[:20]]
+        for f in futs:
+            f.result(120.0)
+    assert all(not f.partial for f in futs)
+    assert eng.stats.partials == 0 and eng.stats.forced_flushes == 0
+
+
+def test_queue_order_fairness_under_full_bucket(index):
+    """A burst larger than max_batch is served oldest-first across
+    consecutive flushes: flush indices must be non-decreasing in
+    submission order (strict FIFO pop — never reordered by arrival
+    jitter or deadline)."""
+    idx, vecs = index
+    with AsyncQueryEngine(idx, k=5, max_batch=8, bucket_floor=8,
+                          deadline_ms=None, linger_ms=20.0) as eng:
+        futs = [eng.submit(q) for q in vecs[:30]]
+        for f in futs:
+            f.result(120.0)
+    order = [f.flush_index for f in futs]
+    assert order == sorted(order)
+    assert eng.stats.flushes >= 2          # the burst overfilled a bucket
+    assert eng.stats.queries == 30
+
+
+def test_cancel_queued_request(index):
+    idx, vecs = index
+    # long linger so the second request is still queued when cancelled
+    with AsyncQueryEngine(idx, k=5, max_batch=8, deadline_ms=None,
+                          linger_ms=200.0) as eng:
+        keep = eng.submit(vecs[0])
+        drop = eng.submit(vecs[1])
+        assert drop.cancel()
+        with pytest.raises(CancelledError):
+            drop.result(120.0)
+        ids, _ = keep.result(120.0)
+        assert (ids >= 0).any()
+    # the cancelled request never occupied a lane
+    assert eng.stats.queries == 1
+    assert not keep.partial
+
+
+def test_cancel_after_dispatch_returns_false(index):
+    idx, vecs = index
+    with AsyncQueryEngine(idx, k=5, max_batch=8,
+                          deadline_ms=None) as eng:
+        fut = eng.submit(vecs[0])
+        fut.result(120.0)
+        assert not fut.cancel()            # already done: lane was paid for
+
+
+def test_close_drains_accepted_requests(index):
+    idx, vecs = index
+    eng = AsyncQueryEngine(idx, k=5, max_batch=8, deadline_ms=None,
+                           linger_ms=500.0)
+    futs = [eng.submit(q) for q in vecs[:5]]
+    eng.close()                            # must not strand queued requests
+    for f in futs:
+        ids, _ = f.result(10.0)
+        assert (ids >= 0).any()
+    with pytest.raises(RuntimeError):
+        eng.submit(vecs[0])                # closed engine rejects submits

@@ -1,0 +1,135 @@
+"""Bucketed program table: shapes, jit-cache bounds, hop-budget operand.
+
+The retrace regression the bucket table exists to prevent: a flush per
+batch size must NOT compile a program per batch size — the jit cache is
+bounded by the bucket count (asserted against ``range_search``'s actual
+cache), and a warmed engine compiles nothing at serve time."""
+import numpy as np
+import pytest
+
+from repro.core.build import DEGParams, build_deg
+from repro.core.graph import INVALID
+from repro.core.search import range_search
+from repro.serving import buckets as _buckets
+from repro.serving.engine import QueryEngine
+
+
+@pytest.fixture(scope="module")
+def index():
+    rng = np.random.default_rng(7)
+    vecs = rng.normal(size=(400, 8)).astype(np.float32)
+    return build_deg(vecs, DEGParams(degree=8, k_ext=16), wave_size=8), vecs
+
+
+def test_bucket_sizes():
+    assert _buckets.bucket_sizes(64, 8) == (8, 16, 32, 64)
+    assert _buckets.bucket_sizes(48, 8) == (8, 16, 32, 64)
+    assert _buckets.bucket_sizes(8, 8) == (8,)
+    assert _buckets.bucket_sizes(1, 8) == (1,)      # floor clamps down
+    assert _buckets.bucket_sizes(6, 2) == (2, 4, 8)
+    with pytest.raises(ValueError):
+        _buckets.bucket_sizes(0)
+
+
+def test_pad_batch_shapes():
+    items = [_buckets.BatchItem(query=np.full(4, i, np.float32))
+             for i in range(3)]
+    qs, seeds, excl = _buckets.pad_batch(items, 8, medoid=5)
+    assert qs.shape == (8, 4) and seeds.shape == (8, 1)
+    assert excl is None                    # no exclusions -> no operand
+    assert (seeds == 5).all()
+    np.testing.assert_array_equal(qs[3:], np.broadcast_to(qs[0], (5, 4)))
+
+
+def test_pad_batch_exclude_bucketed_to_pow2():
+    items = [_buckets.BatchItem(query=np.zeros(4, np.float32),
+                                exclude=list(range(11)), seed_vertex=2),
+             _buckets.BatchItem(query=np.ones(4, np.float32))]
+    qs, seeds, excl = _buckets.pad_batch(items, 4, medoid=5,
+                                         exclude_floor=8)
+    assert seeds[0, 0] == 2 and seeds[1, 0] == 5
+    assert excl.shape == (4, 16)           # 11 needed -> pow2 above floor
+    assert (excl[0, :11] == np.arange(11)).all()
+    assert (excl[1:] == INVALID).all()
+
+
+def test_sync_flush_jit_cache_bounded_by_buckets(index):
+    """The retrace regression: flushes of every batch size 1..max_batch
+    must add at most one compiled range_search entry per bucket."""
+    idx, vecs = index
+    eng = QueryEngine(idx, k=7, eps=0.15, max_batch=16, bucket_floor=4)
+    assert eng.buckets == (4, 8, 16)
+    c0 = range_search._cache_size()
+    for B in range(1, 17):
+        eng.search(vecs[:B])
+    grown = range_search._cache_size() - c0
+    assert 0 < grown <= len(eng.buckets), (
+        f"{grown} programs compiled for 16 batch sizes; the bucket table "
+        f"bounds this at {len(eng.buckets)}")
+
+
+def test_warmup_precompiles_every_program(index):
+    """After warmup, serving any batch size compiles nothing."""
+    idx, vecs = index
+    eng = QueryEngine(idx, k=9, eps=0.12, max_batch=8, bucket_floor=2)
+    times = eng.warmup()
+    assert set(times) == {(b, "plain") for b in eng.buckets}
+    assert all(t > 0 for t in times.values())
+    c0 = range_search._cache_size()
+    for B in (1, 2, 3, 5, 8):
+        eng.search(vecs[:B])
+    assert range_search._cache_size() == c0
+
+    from repro.serving.async_engine import AsyncQueryEngine
+
+    aeng = AsyncQueryEngine(idx, k=9, eps=0.12, max_batch=8,
+                            bucket_floor=2, deadline_ms=None, start=False)
+    times = aeng.warmup()                  # budget variant included
+    assert set(times) == {(b, v) for b in aeng.buckets
+                          for v in ("plain", "budget")}
+    c0 = range_search._cache_size()
+    aeng.start()
+    with aeng:
+        aeng.search(vecs[:5])
+    assert range_search._cache_size() == c0
+
+
+def test_hop_budget_none_vs_unlimited_bit_identical(index):
+    """NO_BUDGET lanes must replay the unbudgeted golden program bit for
+    bit (the budget is a traced operand gating expansion, and a cap above
+    max_hops never binds)."""
+    idx, vecs = index
+    cfg = _buckets.ProgramConfig(k=5, eps=0.1)
+    items = [_buckets.BatchItem(query=q) for q in vecs[:8]]
+    qs, seeds, excl = _buckets.pad_batch(items, 8, idx.medoid())
+    plain = _buckets.dispatch(idx, cfg, qs, seeds, excl)
+    capped = _buckets.dispatch(idx, cfg, qs, seeds, excl,
+                               hop_budget=np.full(8, _buckets.NO_BUDGET,
+                                                  np.int32))
+    np.testing.assert_array_equal(np.asarray(plain.ids),
+                                  np.asarray(capped.ids))
+    np.testing.assert_array_equal(np.asarray(plain.dists),
+                                  np.asarray(capped.dists))
+    np.testing.assert_array_equal(np.asarray(plain.hops),
+                                  np.asarray(capped.hops))
+
+
+def test_hop_budget_caps_per_lane(index):
+    """A budgeted lane stops expanding at its cap and still returns a
+    best-so-far beam; unbudgeted lanes in the same batch are untouched."""
+    idx, vecs = index
+    cfg = _buckets.ProgramConfig(k=5, eps=0.1)
+    items = [_buckets.BatchItem(query=q) for q in vecs[:8]]
+    qs, seeds, excl = _buckets.pad_batch(items, 8, idx.medoid())
+    plain = _buckets.dispatch(idx, cfg, qs, seeds, excl)
+    budget = np.full(8, _buckets.NO_BUDGET, np.int32)
+    budget[::2] = 2                        # cap every other lane
+    capped = _buckets.dispatch(idx, cfg, qs, seeds, excl, hop_budget=budget)
+    hops = np.asarray(capped.hops)
+    assert (hops[::2] <= 2).all()
+    assert (np.asarray(capped.ids)[::2] >= 0).any(axis=1).all()
+    # odd (uncapped) lanes: identical to the unbudgeted program per-lane
+    np.testing.assert_array_equal(np.asarray(capped.ids)[1::2],
+                                  np.asarray(plain.ids)[1::2])
+    np.testing.assert_array_equal(np.asarray(capped.dists)[1::2],
+                                  np.asarray(plain.dists)[1::2])
