@@ -137,20 +137,47 @@ def _git_commit() -> str:
 
 
 def write_bench_json(name: str, payload: dict) -> str:
-    """The standing perf trajectory: write ``BENCH_<name>.json`` at the
-    repo root, stamped with the commit and wall time, so headline numbers
-    are recorded (and diffable) across PRs instead of living only in CI
-    logs.  Schema: ``{bench, commit, written_at, **payload}`` — payload
-    carries the config and the measured figures (p50/p99, QPS, recall@10,
-    ...).  Returns the path written."""
+    """The standing perf trajectory: append to the history list in
+    ``BENCH_<name>.json`` at the repo root, so headline numbers accrue
+    across PRs instead of each commit overwriting the last.
+
+    Schema: ``{"bench": name, "history": [entry, ...]}`` where each entry
+    is ``{commit, written_at, **payload}`` (config + measured figures:
+    p50/p99, QPS, recall@10, ...), oldest first.  A re-run on the same
+    commit replaces that commit's entry in place (fresher numbers, no
+    same-commit duplicates).  Pre-history single-document files (the old
+    overwrite format) are migrated as the first entry.  Returns the path
+    written."""
     import json
 
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     path = os.path.join(root, f"BENCH_{name}.json")
-    doc = {"bench": name, "commit": _git_commit(),
-           "written_at": time.strftime("%Y-%m-%dT%H:%M:%S%z"), **payload}
+    history: list[dict] = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                old = json.load(f)
+            if isinstance(old.get("history"), list):
+                history = old["history"]
+            else:                      # old single-doc format -> entry 0
+                old.pop("bench", None)
+                history = [old]
+        except (ValueError, OSError):
+            history = []               # corrupt file: restart the history
+    entry = {"commit": _git_commit(),
+             "written_at": time.strftime("%Y-%m-%dT%H:%M:%S%z"), **payload}
+    replaced = False
+    for i, e in enumerate(history):
+        if e.get("commit") == entry["commit"]:
+            history[i] = entry
+            replaced = True
+            break
+    if not replaced:
+        history.append(entry)
     with open(path, "w") as f:
-        json.dump(doc, f, indent=2, sort_keys=True, default=float)
+        json.dump({"bench": name, "history": history}, f, indent=2,
+                  sort_keys=True, default=float)
         f.write("\n")
-    print(f"[bench-json] wrote {path}")
+    print(f"[bench-json] wrote {path} "
+          f"({len(history)} history entr{'y' if len(history) == 1 else 'ies'})")
     return path

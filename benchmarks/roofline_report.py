@@ -41,13 +41,64 @@ def kernel_rows() -> int:
     return len(KERNEL_DIMS)
 
 
+def serving_attribution(
+        metrics_path: str = "reports/serving_metrics.json") -> int:
+    """Kernel-time attribution of the measured serving device time.
+
+    ``benchmarks.serving_load`` snapshots its engine's metrics registry;
+    the ``serving_flush_latency_ms`` histogram sums are the wall time the
+    engine spent inside dispatched search programs, and the hop / eval
+    counters (free device-side figures surfaced by ``SearchResult``) give
+    per-kernel tile counts.  ``attribute_kernel_time`` splits the
+    measured total across kernels by their structural roofline weights —
+    a profiler-free answer to "where did the serving milliseconds go".
+    Returns the number of attributed kernels (0 when no snapshot exists,
+    e.g. the serving bench has not run)."""
+    from repro.analysis.roofline import KERNEL_DIMS, attribute_kernel_time
+    from repro.obs import MetricsRegistry
+
+    if not os.path.exists(metrics_path):
+        emit("roofline_serving", status="no serving metrics snapshot",
+             path=metrics_path)
+        return 0
+    with open(metrics_path) as f:
+        reg = MetricsRegistry.from_snapshot(json.load(f))
+    flush_s = hops = evals = 0.0
+    for m in reg.metrics():
+        if m.name == "serving_flush_latency_ms":
+            flush_s += m.sum / 1e3
+        elif m.name == "serving_hops_total":
+            hops = m.value
+        elif m.name == "serving_evals_total":
+            evals = m.value
+    if flush_s <= 0 or (hops <= 0 and evals <= 0):
+        emit("roofline_serving", status="snapshot has no flush/hop data",
+             path=metrics_path)
+        return 0
+    # tile counts per kernel family on the multi-expansion serving path:
+    # one fused hop + one beam partial-merge per recorded hop; the int8
+    # gather covers `degree` distance evals per tile.
+    tiles = {
+        "fused_hop": hops,
+        "beam_merge": hops,
+        "gather_dist_q": evals / KERNEL_DIMS["gather_dist_q"]["d"],
+    }
+    attr = attribute_kernel_time(flush_s, tiles)
+    for name, a in sorted(attr.items(), key=lambda kv: -kv[1]["fraction"]):
+        emit("roofline_serving", kernel=name, tiles=a["tiles"],
+             seconds=a["seconds"], fraction=a["fraction"],
+             measured_flush_s=flush_s)
+    return len(attr)
+
+
 def run(root: str = "reports/dryrun", measured_deg_hops: float | None = None
         ) -> dict:
     n_kernels = kernel_rows()
+    n_serving = serving_attribution()
     recs = load_records(root)
     if not recs:
         emit("roofline", status="no dry-run records found", root=root)
-        return {"kernels": n_kernels}
+        return {"kernels": n_kernels, "serving_kernels": n_serving}
     n_ok = n_skip = n_err = 0
     worst = None
     most_coll = None
@@ -80,7 +131,7 @@ def run(root: str = "reports/dryrun", measured_deg_hops: float | None = None
          worst_mfu_cell=str(worst[0]) if worst else "-",
          most_collective_cell=str(most_coll[0]) if most_coll else "-")
     return {"ok": n_ok, "skipped": n_skip, "errors": n_err,
-            "kernels": n_kernels}
+            "kernels": n_kernels, "serving_kernels": n_serving}
 
 
 if __name__ == "__main__":

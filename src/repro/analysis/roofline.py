@@ -224,6 +224,32 @@ def kernel_roofline(name: str, **dims) -> Roofline:
                       model_flops=c["flops"])
 
 
+def attribute_kernel_time(total_s: float, tile_counts: dict) -> dict:
+    """Split a *measured* wall-time total across Pallas kernels in
+    proportion to their structural cost: weight(k) = tiles_k x the
+    single-tile roofline step time (max of the compute/memory terms).
+
+    This is the bridge between the serving telemetry (obs/ histograms
+    measure how long flushes took, but a jitted program is opaque) and
+    the structural model (which knows each kernel's relative expense but
+    not the wall clock): tile counts come from the engine's hop/eval
+    counters, the split from the model.  Returns
+    ``{kernel: {"tiles", "weight_s", "seconds", "fraction"}}``; fractions
+    sum to 1 when any weight is nonzero.
+    """
+    weights = {}
+    for name, tiles in tile_counts.items():
+        r = kernel_roofline(name, **KERNEL_DIMS[name])
+        weights[name] = float(tiles) * r.step_time
+    denom = sum(weights.values())
+    out = {}
+    for name, tiles in tile_counts.items():
+        frac = weights[name] / denom if denom > 0 else 0.0
+        out[name] = {"tiles": float(tiles), "weight_s": weights[name],
+                     "seconds": frac * total_s, "fraction": frac}
+    return out
+
+
 def deg_model_flops(meta: dict, avg_hops: float) -> float:
     """Per-query useful work: hops x (d neighbor distances) + seed + merge.
     One distance = 2m flops (paper's SIMD L2 analogue)."""

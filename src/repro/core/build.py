@@ -124,6 +124,10 @@ class DEGIndex:
         # per-stage wall time of _insert_wave (candidate search vs vertex
         # extension) — benchmarks/build_cost.py reports both
         self.build_stats = {"search_s": 0.0, "extend_s": 0.0, "vertices": 0}
+        # optional obs.MetricsRegistry: when attached (launch/serve.py,
+        # benches), insert waves and refine sweeps record their stage
+        # spans/counters into it; None (the default) costs a None check
+        self.metrics = None
         # mid-build checkpointing (persist/snapshot.py): every insert wave
         # and refine chunk ticks the counter; when due, the full index state
         # is snapshotted at the wave boundary (the only mid-build points
@@ -210,7 +214,7 @@ class DEGIndex:
             i += w
 
     def _insert_wave(self, pts: np.ndarray) -> None:
-        import time
+        from repro.obs import clock
 
         W = pts.shape[0]
         start = self.builder.n
@@ -218,13 +222,13 @@ class DEGIndex:
         self._put_rows(pts, start)
         # one batched candidate search for the whole wave (pre-wave graph),
         # through the same engine program as every other consumer
-        t0 = time.perf_counter()
+        t0 = clock.now()
         seeds = np.full((W, 1), self._entry_vertex(), dtype=np.int32)
         res = self.search_batch(pts, seeds, k=self.params.k_ext,
                                 eps=self.params.eps_ext)
         ids = np.asarray(res.ids)
         dists = np.asarray(res.dists)
-        t1 = time.perf_counter()
+        t1 = clock.now()
         use_device = self.params.device_extend
         block = max(int(self.params.extend_block), 1) if use_device else W
         for j0 in range(0, W, block):
@@ -258,9 +262,18 @@ class DEGIndex:
                         [float(x) for x in
                          self.builder.neighbor_weights(v)])
                 self._post_insert(v, new_edges, ids[j])
+        t2 = clock.now()
         self.build_stats["search_s"] += t1 - t0
-        self.build_stats["extend_s"] += time.perf_counter() - t1
+        self.build_stats["extend_s"] += t2 - t1
         self.build_stats["vertices"] += W
+        if self.metrics is not None:
+            # wave-stage spans: same timestamps build_stats accumulates,
+            # but as histograms (per-wave distribution, not just totals)
+            self.metrics.histogram("build_wave_search_ms").observe(
+                (t1 - t0) * 1e3)
+            self.metrics.histogram("build_wave_extend_ms").observe(
+                (t2 - t1) * 1e3)
+            self.metrics.counter("build_vertices_total").inc(W)
         self._checkpoint_tick()
 
     def _post_insert(self, v: int, new_edges, cand_ids) -> None:

@@ -96,6 +96,13 @@ class GraphBuilder:
         self.adjacency = np.full((capacity, degree), INVALID, dtype=np.int32)
         self.weights = np.zeros((capacity, degree), dtype=np.float32)
         self.n = 0
+        # lifetime edge-surgery counters (plain ints — two adds per edge
+        # op; obs snapshots read them, see DEGIndex metrics wiring).  The
+        # add/remove *ratio* is the churn signal: refine sweeps that swap
+        # without converging show up as counters racing with no
+        # refine_improved_edges_total growth.
+        self.edges_added = 0
+        self.edges_removed = 0
         self._init_device_state()
 
     def _init_device_state(self) -> None:
@@ -215,6 +222,7 @@ class GraphBuilder:
         self.weights[u, su] = w
         self.adjacency[v, sv] = u
         self.weights[v, sv] = w
+        self.edges_added += 1
         self.mark_dirty(u, v)
 
     def remove_edge(self, u: int, v: int) -> float:
@@ -226,6 +234,7 @@ class GraphBuilder:
             w = float(self.weights[a, s])
             self.adjacency[a, s] = INVALID
             self.weights[a, s] = 0.0
+        self.edges_removed += 1
         self.mark_dirty(u, v)
         return w
 
@@ -263,6 +272,9 @@ class GraphBuilder:
         self.weights[v_r, v_s] = w_b
         self.adjacency[v_r, v_s + 1] = ns
         self.weights[v_r, v_s + 1] = w_n
+        # each applied pair removes (b, n) and adds (v, b) + (v, n)
+        self.edges_removed += len(bs)
+        self.edges_added += 2 * len(bs)
         self.mark_dirty(*bs, *ns, *v_r)
         return ok
 

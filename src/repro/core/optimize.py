@@ -234,14 +234,17 @@ def refine_sweep(index: DEGIndex, vertices: Sequence[int], *,
     matches the serial driver even on CPU and removes the per-edge
     host->device round-trip that dominates on accelerators.
     """
+    from repro.obs import clock
     from .extend import mrng_conform_batch, propose_swaps
 
     b = index.builder
     if b is None or b.n <= b.degree + 1:
         return 0
+    metrics = index.metrics
     improved = 0
     verts = [int(v) for v in vertices]
     for c0 in range(0, len(verts), chunk):
+        t_chunk = clock.now()
         if c0:
             # chunk boundary = invariant-clean point; same checkpoint
             # cadence as _insert_wave (persist/snapshot.py)
@@ -299,6 +302,16 @@ def refine_sweep(index: DEGIndex, vertices: Sequence[int], *,
                 first_search=(lane_ids, lane_d), first_found=first_found)
             improved += int(changed)
             clean = clean and not changed
+        if metrics is not None:
+            # refine telemetry: per-chunk span + swap yield, so the
+            # continuous-refinement loop's cost/benefit shows up next to
+            # the serving metrics it shares a host with
+            metrics.histogram("refine_chunk_ms").observe(
+                (clock.now() - t_chunk) * 1e3)
+            metrics.counter("refine_edge_tasks_total").inc(len(tasks))
+    if metrics is not None and verts:
+        metrics.counter("refine_improved_edges_total").inc(improved)
+        metrics.counter("refine_vertices_total").inc(len(verts))
     if verts:
         index._checkpoint_tick()
     return improved

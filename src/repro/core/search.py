@@ -49,6 +49,12 @@ class SearchResult:
     dists: Array    # (B, k) float32, inf-padded
     hops: Array     # (B,) int32 — number of expanded vertices
     evals: Array    # (B,) int32 — number of distance evaluations (|C| analogue)
+    # (B,) float32 visited-table occupancy in [0, 1], or None when the
+    # search ran the beam-broadcast dedup (no visited set).  Saturation
+    # near 1.0 means dropped inserts — duplicate expansions and wasted
+    # evals — which the query log records per query (obs/querylog.py).
+    # One cheap reduction over state already on device: free telemetry.
+    visited_frac: Optional[Array] = None
 
 
 def exact_rerank(exact_vectors: Array, queries: Array, cand_ids: Array,
@@ -177,8 +183,12 @@ def range_search(
     else:
         out_ids, out_d = beam.extract(state, k, dedup=dedup)
         evals = state.evals
+    visited_frac = None
+    if state.visited is not None:
+        visited_frac = jnp.mean((state.visited != INVALID)
+                                .astype(jnp.float32), axis=1)
     return SearchResult(ids=out_ids, dists=out_d, hops=state.hops,
-                        evals=evals)
+                        evals=evals, visited_frac=visited_frac)
 
 
 def medoid_seed(vectors: Array, n: int) -> int:

@@ -16,10 +16,18 @@ Two front ends:
 ``--warmup`` precompiles every (bucket, preset) program at boot and logs
 the compile time per bucket, so a warm-started snapshot (``--index``)
 serves its first request at steady-state latency.
+
+Observability (obs/): ``--metrics-port P`` serves the engine registry at
+``http://127.0.0.1:P/metrics`` (Prometheus text) and ``/metrics.json``
+while the process runs (``--hold-secs`` keeps it up after the trace for
+scrapers — the CI smoke job's hook); ``--stats-every S`` prints a
+one-line registry digest every S seconds; ``--trace-sample R`` +
+``--query-log PATH`` write the sampled JSONL query log.
 """
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 
 import numpy as np
@@ -105,18 +113,72 @@ def main() -> None:
     ap.add_argument("--warmup", action="store_true",
                     help="precompile all (bucket, preset) programs at boot "
                     "and log compile time per bucket")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve the metrics registry on this port "
+                    "(/metrics Prometheus text, /metrics.json snapshot; "
+                    "0 = ephemeral, the bound port is printed)")
+    ap.add_argument("--stats-every", type=float, default=0.0,
+                    help="print a one-line registry digest every N seconds "
+                    "while serving (0 = off)")
+    ap.add_argument("--trace-sample", type=float, default=0.0,
+                    help="query-log sample rate in [0,1] (0 = tracing off, "
+                    "no per-query work)")
+    ap.add_argument("--query-log", default=None,
+                    help="rotating JSONL query log path (needs "
+                    "--trace-sample > 0)")
+    ap.add_argument("--hold-secs", type=float, default=0.0,
+                    help="keep the process (and --metrics-port endpoint) "
+                    "alive this long after the trace finishes — for "
+                    "external scrapers / the CI smoke job")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.preset:
         preset = QUANT_PRESETS[args.preset]
         args.codec, args.rerank_k = preset.codec, preset.rerank_k
 
+    from repro import obs
     from repro.core.build import DEGIndex, DEGParams, build_deg
     from repro.core.distances import exact_knn_batched
     from repro.core.metrics import recall_at_k
     from repro.data.synthetic import make_dataset
     from repro.serving.async_engine import AsyncQueryEngine
     from repro.serving.engine import QueryEngine
+
+    registry = obs.MetricsRegistry()
+    metrics_srv = None
+    if args.metrics_port is not None:
+        metrics_srv = obs.serve_metrics(registry, args.metrics_port)
+        print(f"metrics: {metrics_srv.url} (and /metrics.json)")
+    qlog = None
+    if args.query_log:
+        qlog = obs.QueryLogWriter(args.query_log)
+        print(f"query log: {args.query_log} "
+              f"(sample rate {args.trace_sample})")
+    stats_stop = threading.Event()
+    if args.stats_every > 0:
+        def _stats_loop():
+            lat = registry.histogram(obs.LATENCY_METRIC)
+            while not stats_stop.wait(args.stats_every):
+                p = lat.percentiles()
+                print(f"stats: requests="
+                      f"{registry.counter('serving_requests_total').value:.0f} "
+                      f"flushes="
+                      f"{registry.counter('serving_flushes_total').value:.0f} "
+                      f"queue={registry.gauge('serving_queue_depth').value:.0f} "
+                      f"p50={p['p50']:.2f}ms p99={p['p99']:.2f}ms")
+        threading.Thread(target=_stats_loop, name="stats-printer",
+                         daemon=True).start()
+
+    def _teardown():
+        if args.hold_secs > 0:
+            print(f"holding for {args.hold_secs}s "
+                  f"(metrics endpoint stays up)")
+            time.sleep(args.hold_secs)
+        stats_stop.set()
+        if qlog is not None:
+            qlog.close()
+        if metrics_srv is not None:
+            metrics_srv.close()
 
     if args.index:
         idx = _load_index(args.index)
@@ -132,6 +194,9 @@ def main() -> None:
                                         k_ext=2 * args.degree),
                         wave_size=16,
                         refine_iterations=args.build_refine)
+    # build-side spans (insert waves, refine chunks) land in the same
+    # registry the serving metrics export from
+    idx.metrics = registry
     if args.engine == "async":
         dl = args.deadline_ms
         if dl is not None and dl < 0:
@@ -140,6 +205,9 @@ def main() -> None:
                                 rerank_k=args.rerank_k or None,
                                 preset=args.search_preset, slo=args.slo,
                                 max_batch=args.batch,
+                                metrics=registry,
+                                trace_sample=args.trace_sample,
+                                query_log=qlog,
                                 **({} if args.deadline_ms is None
                                    else {"deadline_ms": dl}))
         if args.warmup:
@@ -168,6 +236,7 @@ def main() -> None:
               f"{st.forced_flushes} deadline-forced, "
               f"buckets={st.bucket_hist}")
         aeng.close()
+        _teardown()
         if args.save_index:
             idx.save(args.save_index)
             print(f"saved index snapshot to {args.save_index} "
@@ -178,7 +247,10 @@ def main() -> None:
                          refine_budget=args.refine_budget,
                          codec=args.codec,
                          rerank_k=args.rerank_k or None,
-                         preset=args.search_preset)
+                         preset=args.search_preset,
+                         metrics=registry,
+                         trace_sample=args.trace_sample,
+                         query_log=qlog)
     if args.warmup:
         t0 = time.time()
         times = engine.warmup()
@@ -223,6 +295,7 @@ def main() -> None:
                 v = ids[0]
     print(f"ran {args.explore_sessions} exploration sessions "
           f"(4 hops each, exclusion verified)")
+    _teardown()
     if args.save_index:
         engine.save(args.save_index)
         print(f"saved index snapshot to {args.save_index} "

@@ -1,0 +1,22 @@
+"""Observability layer: one clock, a mergeable metrics registry, per-query
+span tracing, and the structured query log that feeds continuous
+refinement (ROADMAP item 4).  See ARCHITECTURE.md "Observability
+layering" for the rules."""
+from . import clock
+from .metrics import (DEFAULT_LATENCY_BOUNDS_MS, Counter, Gauge, Histogram,
+                      MetricsRegistry, log_buckets)
+from .trace import Sampler, span, span_fields
+from .querylog import (LATENCY_METRIC, QueryLogWriter, make_record,
+                       mining_view, query_hash, read_query_log,
+                       recall_from_log, replay_registry)
+from .http import MetricsServer, serve_metrics
+
+__all__ = [
+    "clock",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "DEFAULT_LATENCY_BOUNDS_MS", "log_buckets",
+    "Sampler", "span", "span_fields",
+    "QueryLogWriter", "LATENCY_METRIC", "make_record", "mining_view",
+    "query_hash", "read_query_log", "recall_from_log", "replay_registry",
+    "MetricsServer", "serve_metrics",
+]

@@ -1,0 +1,73 @@
+"""Tiny threaded metrics endpoint for ``launch/serve.py --metrics-port``.
+
+Serves two read-only views of one :class:`~repro.obs.metrics.MetricsRegistry`:
+
+    GET /metrics        Prometheus text exposition
+    GET /metrics.json   JSON snapshot (same doc as ``registry.snapshot()``)
+
+stdlib only (``http.server`` on a daemon thread) — a scrape every few
+seconds reads registry state under its per-metric locks and never touches
+the serving hot path.  Port 0 binds an ephemeral port (tests); the bound
+port is on ``MetricsServer.port``.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+from .metrics import MetricsRegistry
+
+
+class _Handler(BaseHTTPRequestHandler):
+    registry: MetricsRegistry = None  # set per-server via subclassing
+
+    def do_GET(self):  # noqa: N802 (http.server API)
+        if self.path.split("?")[0] == "/metrics":
+            body = self.registry.to_prometheus().encode("utf-8")
+            ctype = "text/plain; version=0.0.4; charset=utf-8"
+        elif self.path.split("?")[0] == "/metrics.json":
+            body = json.dumps(self.registry.snapshot(), sort_keys=True,
+                              default=float).encode("utf-8")
+            ctype = "application/json"
+        else:
+            self.send_error(404)
+            return
+        self.send_response(200)
+        self.send_header("Content-Type", ctype)
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def log_message(self, fmt, *args):  # silence per-request stderr spam
+        pass
+
+
+class MetricsServer:
+    """Background scrape endpoint bound to ``host:port`` (port 0 = pick)."""
+
+    def __init__(self, registry: MetricsRegistry, port: int,
+                 host: str = "127.0.0.1"):
+        handler = type("_BoundHandler", (_Handler,), {"registry": registry})
+        self._httpd = ThreadingHTTPServer((host, port), handler)
+        self._httpd.daemon_threads = True
+        self.host = host
+        self.port = self._httpd.server_address[1]
+        self._thread = threading.Thread(
+            target=self._httpd.serve_forever, name="metrics-http",
+            daemon=True)
+        self._thread.start()
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}/metrics"
+
+    def close(self) -> None:
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        self._thread.join(timeout=5.0)
+
+
+def serve_metrics(registry: MetricsRegistry, port: int,
+                  host: str = "127.0.0.1") -> MetricsServer:
+    return MetricsServer(registry, port, host=host)

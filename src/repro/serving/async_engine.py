@@ -37,11 +37,14 @@ from __future__ import annotations
 import dataclasses
 import queue as _queue
 import threading
-import time
 from typing import Optional, Sequence
 
 import numpy as np
 
+from repro.obs import clock
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.querylog import LATENCY_METRIC, QueryLogWriter, make_record
+from repro.obs.trace import Sampler
 from repro.serving import buckets as _buckets
 from repro.serving.scheduler import AdmissionQueue, AsyncResult, Request
 
@@ -73,13 +76,24 @@ class AsyncQueryEngine:
                  partial_hops: Optional[int] = None,
                  pipeline_depth: Optional[int] = None,
                  exclude_width: int = 8,
+                 metrics: Optional[MetricsRegistry] = None,
+                 trace_sample: float = 0.0,
+                 query_log: Optional[QueryLogWriter] = None,
                  start: bool = True):
         """``preset`` names a ``configs.deg.SEARCH_PRESETS`` entry (the
         L/E search program); ``slo`` a ``configs.deg.SLO_PRESETS`` entry
         (or a ``ServingPreset`` instance) supplying the scheduler knobs —
         explicit keyword arguments win over both.  ``deadline_ms`` is the
         default per-request SLO (None = no deadline; requests may
-        override per ``submit``)."""
+        override per ``submit``).
+
+        ``metrics`` is the engine's :class:`MetricsRegistry` (own one by
+        default — pass a shared registry to roll several engines into one
+        export).  Flush-level metrics and the request-latency histogram
+        are always on (allocation-free observes).  ``trace_sample`` in
+        [0, 1] picks which queries get a ``query_log`` JSONL record
+        (obs/querylog.py); at 0.0 the per-query cost is one attribute
+        compare per flush — no record is built, nothing allocated."""
         from repro.configs.deg import SLO_PRESETS, ServingPreset
 
         if preset is not None:
@@ -116,6 +130,24 @@ class AsyncQueryEngine:
             else s.pipeline_depth
         self._exclude_width = max(1, exclude_width)
         self.stats = AsyncEngineStats()
+        # observability: resolve every metric object once here so the
+        # scheduler / extract threads never touch the registry dict.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._sampler = Sampler(trace_sample)
+        self._query_log = query_log
+        self._m_queries = self.metrics.counter("serving_requests_total")
+        self._m_flushes = self.metrics.counter("serving_flushes_total")
+        self._m_forced = self.metrics.counter("serving_forced_flushes_total")
+        self._m_partials = self.metrics.counter(
+            "serving_deadline_partials_total")
+        self._m_hops = self.metrics.counter("serving_hops_total")
+        self._m_evals = self.metrics.counter("serving_evals_total")
+        self._m_queue_depth = self.metrics.gauge("serving_queue_depth")
+        self._m_latency = self.metrics.histogram(LATENCY_METRIC)
+        self._m_flush_lat = {
+            b: self.metrics.histogram("serving_flush_latency_ms",
+                                      bucket=str(b))
+            for b in self.buckets}
         self._queue = AdmissionQueue(notify_at=self.max_batch)
         # late-binding pipeline: the scheduler takes a dispatch slot
         # BEFORE popping the queue, so a batch is formed at the instant
@@ -156,6 +188,8 @@ class AsyncQueryEngine:
         # future rather than leave it forever pending
         for req in self._queue.pop_ready(self.max_batch):
             req.result._try_cancel()
+        if self._query_log is not None:
+            self._query_log.flush()
 
     def __enter__(self) -> "AsyncQueryEngine":
         self.start()
@@ -186,10 +220,12 @@ class AsyncQueryEngine:
                                "started)")
         dl_ms = self.default_deadline_ms if deadline_ms == "unset" \
             else deadline_ms
-        deadline = None if dl_ms is None else time.monotonic() + dl_ms / 1e3
-        return self._queue.push(np.asarray(query, np.float32),
-                                exclude=list(exclude),
-                                seed_vertex=seed_vertex, deadline=deadline)
+        deadline = None if dl_ms is None else clock.now() + dl_ms / 1e3
+        res = self._queue.push(np.asarray(query, np.float32),
+                               exclude=list(exclude),
+                               seed_vertex=seed_vertex, deadline=deadline)
+        self._m_queue_depth.set(len(self._queue))
+        return res
 
     def search(self, queries: np.ndarray, timeout: Optional[float] = 60.0
                ) -> tuple[np.ndarray, np.ndarray]:
@@ -237,7 +273,7 @@ class AsyncQueryEngine:
             while (not self._stop
                    and len(self._queue) < self.max_batch):
                 at, forced = self._flush_at()
-                now = time.monotonic()
+                now = clock.now()
                 if at is None or now >= at:
                     deadline_forced = forced and at is not None
                     break
@@ -248,6 +284,7 @@ class AsyncQueryEngine:
             if reqs:
                 if deadline_forced:
                     self.stats.forced_flushes += 1
+                    self._m_forced.inc()
                 self._dispatch(reqs)
             else:
                 self._slots.release()
@@ -257,7 +294,7 @@ class AsyncQueryEngine:
         returns before the device finishes) for the extract thread."""
         B = len(reqs)
         bucket = next(b for b in self.buckets if b >= B)
-        now = time.monotonic()
+        now = clock.now()
         expired = [r.deadline is not None and now > r.deadline for r in reqs]
         budget = None
         if any(expired):
@@ -280,12 +317,18 @@ class AsyncQueryEngine:
         self.stats.queries += B
         self.stats.bucket_hist[bucket] = \
             self.stats.bucket_hist.get(bucket, 0) + 1
+        self._m_flushes.inc()
+        self._m_queries.inc(B)
+        self._m_queue_depth.set(len(self._queue))
+        if self._sampler.active:          # one compare per flush at 0.0
+            for r in reqs:                # single-threaded sampler use
+                r.result.sampled = self._sampler.take()
         for r in reqs:
             r.result._mark_dispatched(flush_index)
         # in-flight count is bounded by the dispatch-slot semaphore
         # (acquired before the batch was popped), so this never blocks;
         # extract releases the slot once the flush is drained
-        self._inflight.put((reqs, res, expired, time.monotonic()))
+        self._inflight.put((reqs, res, expired, bucket, clock.now()))
 
     # -- extract thread ----------------------------------------------------
     def _extract_loop(self) -> None:
@@ -293,16 +336,55 @@ class AsyncQueryEngine:
             item = self._inflight.get()
             if item is None:
                 return
-            reqs, res, expired, t0 = item
+            reqs, res, expired, bucket, t0 = item
+            B = len(reqs)
             ids = np.asarray(res.ids)      # device->host: blocks until the
             dists = np.asarray(res.dists)  # async dispatch finished
-            dt = time.monotonic() - t0
+            t_dev = clock.now()
+            dt = t_dev - t0
             self.stats.ema_flush_s = dt if not self.stats.ema_flush_s \
                 else 0.8 * self.stats.ema_flush_s + 0.2 * dt
+            self._m_flush_lat[bucket].observe(dt * 1e3)
+            # traversal counters ride the same result the flush computed
+            # anyway — surfacing them costs two tiny transfers, zero
+            # extra device work
+            hops = np.asarray(res.hops)
+            evals = np.asarray(res.evals)
+            self._m_hops.inc(int(hops[:B].sum()))
+            self._m_evals.inc(int(evals[:B].sum()))
+            vfrac = None if res.visited_frac is None \
+                else np.asarray(res.visited_frac)
+            log = self._query_log
+            any_sampled = log is not None and any(
+                r.result.sampled for r in reqs)
             for i, r in enumerate(reqs):
                 if expired[i]:
                     self.stats.partials += 1
+                    self._m_partials.inc()
+                r.result.device_done_at = t_dev
                 r.result._complete(ids[i].copy(), dists[i].copy(),
                                    partial=expired[i])
+                # observe AFTER _complete so the histogram sees the same
+                # completed_at the future exposes (log replay matches)
+                self._m_latency.observe(
+                    (r.result.completed_at - r.result.submitted_at) * 1e3)
+                if any_sampled and r.result.sampled:
+                    log.write(make_record(
+                        qid=r.seq, query=r.query, k=self.cfg.k,
+                        ids=ids[i], dists=dists[i],
+                        hops=int(hops[i]), evals=int(evals[i]),
+                        seed_vertex=r.seed_vertex,
+                        exclude_n=len(r.exclude),
+                        visited_frac=None if vfrac is None
+                        else float(vfrac[i]),
+                        budget_exhausted=bool(
+                            expired[i] and self.partial_hops is not None
+                            and hops[i] >= self.partial_hops),
+                        partial=expired[i],
+                        flush_index=r.result.flush_index, bucket=bucket,
+                        latency_ms=(r.result.completed_at
+                                    - r.result.submitted_at) * 1e3,
+                        result=r.result,
+                        t_mono=r.result.submitted_at))
             self._slots.release()     # free the dispatch slot last, so a
             # newly formed batch sees this flush's arrivals in the queue

@@ -30,12 +30,12 @@ is the middle ground both engines share:
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Optional, Sequence
 
 import numpy as np
 
 from repro.core.graph import INVALID, pow2_bucket
+from repro.obs import clock
 
 #: hop budget meaning "unlimited" for non-expired lanes in a budgeted
 #: batch (any value above the engine's max_hops bound behaves as no cap)
@@ -161,8 +161,8 @@ def precompile(index, cfg: ProgramConfig, buckets: Sequence[int], *,
         qs, seeds, excl = pad_batch(items, b, medoid)
         for name, budgeted in variants:
             budget = (np.full(b, NO_BUDGET, np.int32) if budgeted else None)
-            t0 = time.perf_counter()
+            t0 = clock.now()
             res = dispatch(index, cfg, qs, seeds, excl, hop_budget=budget)
             jax.block_until_ready(res.ids)
-            times[(b, name)] = time.perf_counter() - t0
+            times[(b, name)] = clock.now() - t0
     return times

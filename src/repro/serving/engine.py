@@ -23,13 +23,16 @@ a :class:`repro.distributed.index.ShardedDEG` (mesh) with:
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Optional, Sequence
 
 import numpy as np
 
 from repro.core.build import DEGIndex
 from repro.core.graph import INVALID
+from repro.obs import clock
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.querylog import LATENCY_METRIC, QueryLogWriter, make_record
+from repro.obs.trace import Sampler
 from repro.serving import buckets as _buckets
 
 
@@ -55,7 +58,10 @@ class QueryEngine:
                  expand_width: Optional[int] = None,
                  visited_size: Optional[int] = None,
                  hop_backend: Optional[str] = None,
-                 preset: Optional[str] = None):
+                 preset: Optional[str] = None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 trace_sample: float = 0.0,
+                 query_log: Optional[QueryLogWriter] = None):
         """``codec`` picks the vector store the beam traverses for THIS
         engine ("float32" exact | "fp16" | "sq8"); compressed codecs run
         the two-stage search (exact rerank of ``rerank_k`` candidates,
@@ -99,6 +105,25 @@ class QueryEngine:
         self.max_batch = max_batch
         self.refine_budget = refine_budget
         self.stats = EngineStats()
+        # observability (obs/): a registry is always present (own one by
+        # default) so flush-level metrics are free to keep on; per-query
+        # log records are written only for sampled queries.  Metric
+        # objects are resolved once here — flush() never touches the
+        # registry dict.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._sampler = Sampler(trace_sample)
+        self._query_log = query_log
+        self._qid = 0                     # submit order, the log's qid key
+        self._m_queries = self.metrics.counter("serving_requests_total")
+        self._m_flushes = self.metrics.counter("serving_flushes_total")
+        self._m_hops = self.metrics.counter("serving_hops_total")
+        self._m_evals = self.metrics.counter("serving_evals_total")
+        # request latency for the closed-loop engine is the flush that
+        # served it (no admission queue): observed per request so the
+        # stats digest and a query-log replay see the same metric the
+        # async engine reports
+        self._m_latency = self.metrics.histogram(LATENCY_METRIC)
+        self._m_flush_lat: dict = {}      # bucket -> flush-latency histogram
         self._pending: list = []          # (query_vec, exclude_ids, future)
         self._sessions: dict[str, set] = {}
         # minimum exclude-lane width: per-flush widths are bucketed to
@@ -140,8 +165,11 @@ class QueryEngine:
         """Queue one query; returns a 'future' dict filled at flush()."""
         fut = {"done": False, "ids": None, "dists": None}
         excl = sorted(self._sessions.get(session, ())) if session else []
+        qid = self._qid
+        self._qid += 1
+        sampled = self._sampler.take() if self._sampler.active else False
         self._pending.append((np.asarray(query, np.float32), excl, fut,
-                              session, seed_vertex))
+                              session, seed_vertex, qid, sampled))
         if len(self._pending) >= self.max_batch:
             self.flush()
         return fut
@@ -216,23 +244,49 @@ class QueryEngine:
                 # an exploration seed never reappears in its own results
                 exclude=([sv] + list(ex) if sv is not None else ex),
                 seed_vertex=sv)
-            for (q, ex, _, _, sv) in batch]
+            for (q, ex, _, _, sv, _, _) in batch]
         bucket = next(b for b in self.buckets if b >= B)
         qs, seeds, excl = _buckets.pad_batch(items, bucket,
                                              self.index.medoid(),
                                              self._exclude_width)
-        t0 = time.time()
+        t0 = clock.now()
         res = _buckets.dispatch(self.index, self.cfg, qs, seeds, excl)
         ids, dists = np.asarray(res.ids), np.asarray(res.dists)
-        self.stats.total_search_s += time.time() - t0
+        flush_s = clock.now() - t0
+        self.stats.total_search_s += flush_s
+        flush_index = self.stats.flushes
         self.stats.flushes += 1
         self.stats.queries += B
-        for i, (_, _, fut, session, _) in enumerate(batch):
+        hops = np.asarray(res.hops)
+        evals = np.asarray(res.evals)
+        vfrac = None if res.visited_frac is None \
+            else np.asarray(res.visited_frac)
+        self._m_flushes.inc()
+        self._m_queries.inc(B)
+        self._m_hops.inc(int(hops[:B].sum()))
+        self._m_evals.inc(int(evals[:B].sum()))
+        h = self._m_flush_lat.get(bucket)
+        if h is None:
+            h = self._m_flush_lat[bucket] = self.metrics.histogram(
+                "serving_flush_latency_ms", bucket=str(bucket))
+        h.observe(flush_s * 1e3)
+        for _ in range(B):
+            self._m_latency.observe(flush_s * 1e3)
+        for i, (q, _, fut, session, sv, qid, sampled) in enumerate(batch):
             fut["ids"], fut["dists"] = ids[i], dists[i]
             fut["done"] = True
             if session:
                 self._sessions.setdefault(session, set()).update(
                     int(x) for x in ids[i] if x != INVALID)
+            if sampled and self._query_log is not None:
+                self._query_log.write(make_record(
+                    qid=qid, query=q, k=self.k, ids=ids[i], dists=dists[i],
+                    hops=int(hops[i]), evals=int(evals[i]),
+                    seed_vertex=sv,
+                    exclude_n=len(items[i].exclude),
+                    visited_frac=None if vfrac is None else float(vfrac[i]),
+                    flush_index=flush_index, bucket=bucket,
+                    latency_ms=flush_s * 1e3))
         # continuous refinement between flushes (the paper's core idea);
         # refine() counts improved EDGES (can exceed the vertex budget)
         if self.refine_budget:

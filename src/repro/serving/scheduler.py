@@ -9,11 +9,12 @@ deadline or arrival jitter).  Each request carries an
 cancellation is resolved at dispatch time (a cancelled request still in
 the queue is dropped before it costs a lane).
 
-Deadlines are absolute ``time.monotonic()`` instants.  The queue only
-*accounts* for them (``next_deadline`` feeds the engine's flush-timing
-decision); the policy itself — force a flush when a request nears its
-deadline, search an already-expired request under a partial hop budget —
-lives in ``serving/async_engine.py``.
+Deadlines are absolute :func:`repro.obs.clock.now` instants (the one
+monotonic clock every serving timestamp comes from — see obs/clock.py).
+The queue only *accounts* for them (``next_deadline`` feeds the engine's
+flush-timing decision); the policy itself — force a flush when a request
+nears its deadline, search an already-expired request under a partial hop
+budget — lives in ``serving/async_engine.py``.
 """
 from __future__ import annotations
 
@@ -21,8 +22,9 @@ import collections
 import dataclasses
 import heapq
 import threading
-import time
 from typing import Optional, Sequence
+
+from repro.obs import clock
 
 
 class CancelledError(RuntimeError):
@@ -36,11 +38,19 @@ class AsyncResult:
     ``ids``/``dists`` are the per-request result rows; ``partial`` is True
     when the request's deadline expired before dispatch and the engine
     returned the best-so-far beam under the partial hop budget instead of
-    dropping it."""
+    dropping it.
+
+    The future doubles as the request's trace record: ``submitted_at`` /
+    ``dispatched_at`` / ``device_done_at`` / ``completed_at`` are
+    :func:`repro.obs.clock.now` stamps set as the request moves through
+    the pipeline (ordering invariant: each <= the next), ``seq`` its
+    admission order, ``sampled`` whether the engine's query-log sampler
+    took it.  Tracing therefore allocates nothing per query beyond this
+    object, which exists anyway."""
 
     __slots__ = ("_event", "_lock", "_state", "ids", "dists", "partial",
-                 "submitted_at", "dispatched_at", "completed_at", "deadline",
-                 "flush_index")
+                 "submitted_at", "dispatched_at", "device_done_at",
+                 "completed_at", "deadline", "flush_index", "seq", "sampled")
 
     def __init__(self, deadline: Optional[float] = None):
         self._event = threading.Event()
@@ -49,24 +59,27 @@ class AsyncResult:
         self.ids = None
         self.dists = None
         self.partial = False
-        self.submitted_at = time.monotonic()
+        self.submitted_at = clock.now()
         self.dispatched_at: Optional[float] = None
+        self.device_done_at: Optional[float] = None
         self.completed_at: Optional[float] = None
         self.deadline = deadline
         self.flush_index: Optional[int] = None
+        self.seq: Optional[int] = None
+        self.sampled = False
 
     # -- state transitions (engine-side) -----------------------------------
     def _mark_dispatched(self, flush_index: int) -> None:
         with self._lock:
             self._state = "dispatched"
-            self.dispatched_at = time.monotonic()
+            self.dispatched_at = clock.now()
             self.flush_index = flush_index
 
     def _complete(self, ids, dists, *, partial: bool) -> None:
         with self._lock:
             self.ids, self.dists = ids, dists
             self.partial = partial
-            self.completed_at = time.monotonic()
+            self.completed_at = clock.now()
             self._state = "done"
         self._event.set()
 
@@ -156,6 +169,7 @@ class AdmissionQueue:
         with self._cv:
             req = Request(query=query, result=res, seq=self._seq,
                           exclude=exclude, seed_vertex=seed_vertex)
+            res.seq = req.seq
             self._seq += 1
             self._dq.append(req)
             if deadline is not None:

@@ -1,0 +1,64 @@
+"""Regenerate ``querylog_golden.jsonl`` — the frozen query-log record of
+the async engine serving the golden ``range_search`` fixture case A.
+
+Run from the repo root when the record *schema* legitimately changes
+(bump ``SCHEMA_VERSION`` first):
+
+    PYTHONPATH=src python tests/data/gen_querylog_golden.py
+
+The replay test (``test_obs_querylog.py``) compares only the
+deterministic fields (qid / qhash / k / seed / ids / dists / hops /
+evals / partial) — timings, flush indices, and bucket choices are
+scheduling artifacts and excluded.  If ids/dists/hops drift, that is a
+*search semantics* change and must be understood before regenerating
+(same bar as ``range_search_golden.npz``).
+"""
+import os
+
+import numpy as np
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+FIXTURE = os.path.join(HERE, "range_search_golden.npz")
+OUT = os.path.join(HERE, "querylog_golden.jsonl")
+
+
+def build_fixture_index():
+    from repro.core.build import DEGIndex, DEGParams
+    from repro.core.graph import GraphBuilder
+
+    g = np.load(FIXTURE)
+    degree = g["adjacency"].shape[1]
+    cap = g["adjacency"].shape[0]
+    idx = DEGIndex(g["vectors"].shape[1],
+                   DEGParams(degree=degree, k_ext=2 * degree), capacity=cap)
+    rows = g["vectors"][:cap]
+    idx.vectors[: rows.shape[0]] = rows
+    idx._put_rows(rows, 0)
+    b = GraphBuilder(cap, degree)
+    b.load(g["adjacency"], g["weights"], int(g["n"]))
+    idx.builder = b
+    return idx, g
+
+
+def serve_and_log(path):
+    from repro.obs import MetricsRegistry, QueryLogWriter
+    from repro.serving.async_engine import AsyncQueryEngine
+
+    idx, g = build_fixture_index()
+    if os.path.exists(path):
+        os.remove(path)
+    qlog = QueryLogWriter(path)
+    with AsyncQueryEngine(idx, k=10, eps=0.1, max_batch=16,
+                          deadline_ms=None, metrics=MetricsRegistry(),
+                          trace_sample=1.0, query_log=qlog) as eng:
+        futs = [eng.submit(q, seed_vertex=int(g["seeds_a"][i, 0]))
+                for i, q in enumerate(g["queries"])]
+        for f in futs:
+            f.result(120.0)
+    qlog.close()
+    return len(futs)
+
+
+if __name__ == "__main__":
+    n = serve_and_log(OUT)
+    print(f"wrote {OUT} ({n} records)")

@@ -1,0 +1,203 @@
+"""obs/metrics: log-bucketed histograms, registry merge, exports.
+
+The histogram is the load-bearing piece: serving p50/p99 are *bucket*
+percentiles (a pure function of the counts), which is what makes them
+mergeable across engines/shards and exactly reproducible from the query
+log.  Pinned here: bucket error bounds vs exact numpy percentiles, merge
+== union of observations, and snapshot / Prometheus round trips.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.obs import (DEFAULT_LATENCY_BOUNDS_MS, MetricsRegistry,
+                       log_buckets)
+
+
+def test_log_buckets_geometric_and_sorted():
+    b = log_buckets(0.1, 1000.0, growth=2.0)
+    assert list(b) == sorted(b)
+    assert b[0] == pytest.approx(0.1)
+    assert b[-1] >= 1000.0
+    ratios = np.diff(np.log(np.asarray(b)))
+    assert np.allclose(ratios, np.log(2.0))
+
+
+def test_default_bounds_cover_serving_range():
+    b = DEFAULT_LATENCY_BOUNDS_MS
+    assert b[0] <= 0.05 and b[-1] >= 80_000.0
+    assert len(b) < 80          # coarse enough to stay cheap to export
+
+
+def test_histogram_percentile_within_bucket_error():
+    """Bucket percentiles interpolate inside the winning bucket, so the
+    worst-case relative error vs exact numpy is the bucket growth factor
+    (1.25 for the default bounds)."""
+    rng = np.random.default_rng(0)
+    samples = rng.lognormal(mean=2.5, sigma=1.0, size=20_000)  # ~12ms median
+    reg = MetricsRegistry()
+    h = reg.histogram("lat_ms")
+    for s in samples:
+        h.observe(float(s))
+    for q in (50.0, 90.0, 99.0, 99.9):
+        exact = float(np.percentile(samples, q))
+        approx = h.percentile(q)
+        assert exact / 1.25 <= approx <= exact * 1.25, (q, exact, approx)
+    assert h.count == len(samples)
+    assert h.sum == pytest.approx(samples.sum(), rel=1e-9)
+    assert h.mean == pytest.approx(samples.mean(), rel=1e-9)
+
+
+def test_histogram_merge_equals_union():
+    """Merging two histograms must be indistinguishable from one
+    histogram that saw every observation — the cross-engine /
+    cross-shard rollup contract."""
+    rng = np.random.default_rng(1)
+    a_s, b_s = rng.exponential(10.0, 5000), rng.exponential(40.0, 3000)
+    ra, rb, runion = MetricsRegistry(), MetricsRegistry(), MetricsRegistry()
+    for s in a_s:
+        ra.histogram("m").observe(float(s))
+    for s in b_s:
+        rb.histogram("m").observe(float(s))
+    for s in np.concatenate([a_s, b_s]):
+        runion.histogram("m").observe(float(s))
+    ra.merge_from(rb)
+    merged, union = ra.histogram("m"), runion.histogram("m")
+    assert merged.counts == union.counts
+    assert merged.count == union.count
+    assert merged.percentile(50) == union.percentile(50)
+    assert merged.percentile(99) == union.percentile(99)
+
+
+def test_merge_rejects_mismatched_bounds():
+    ra, rb = MetricsRegistry(), MetricsRegistry()
+    ra.histogram("m", bounds=log_buckets(0.1, 100.0)).observe(1.0)
+    rb.histogram("m", bounds=log_buckets(0.1, 200.0)).observe(1.0)
+    with pytest.raises(ValueError):
+        ra.merge_from(rb)
+
+
+def test_registry_merge_counters_and_gauges():
+    ra, rb = MetricsRegistry(), MetricsRegistry()
+    ra.counter("req_total").inc(5)
+    rb.counter("req_total").inc(7)
+    rb.counter("only_b_total").inc(2)
+    ra.gauge("depth").set(3)
+    rb.gauge("depth").set(4)            # gauges sum across shards
+    ra.merge_from(rb)
+    assert ra.counter("req_total").value == 12
+    assert ra.counter("only_b_total").value == 2
+    assert ra.gauge("depth").value == 7
+
+
+def test_labels_create_distinct_series():
+    reg = MetricsRegistry()
+    reg.counter("flushes_total", bucket="16").inc(3)
+    reg.counter("flushes_total", bucket="32").inc(1)
+    assert reg.counter("flushes_total", bucket="16").value == 3
+    assert reg.counter("flushes_total", bucket="32").value == 1
+
+
+def test_kind_conflict_raises():
+    reg = MetricsRegistry()
+    reg.counter("x")
+    with pytest.raises(TypeError):
+        reg.gauge("x")
+
+
+def test_snapshot_round_trip():
+    reg = MetricsRegistry()
+    reg.counter("req_total", engine="async").inc(9)
+    reg.gauge("depth").set(4)
+    h = reg.histogram("lat_ms")
+    for v in (0.2, 1.0, 5.0, 5.0, 50.0):
+        h.observe(v)
+    doc = json.loads(reg.snapshot_json())
+    back = MetricsRegistry.from_snapshot(doc)
+    assert back.counter("req_total", engine="async").value == 9
+    assert back.gauge("depth").value == 4
+    hb = back.histogram("lat_ms")
+    assert hb.counts == h.counts and hb.count == h.count
+    assert hb.percentile(50) == h.percentile(50)
+    # and the round trip is a fixed point
+    assert back.snapshot_json() == reg.snapshot_json()
+
+
+def test_prometheus_exposition_shape():
+    reg = MetricsRegistry()
+    reg.counter("req_total", engine="async").inc(3)
+    h = reg.histogram("lat_ms")
+    for v in (0.5, 2.0, 1000.0):
+        h.observe(v)
+    text = reg.to_prometheus()
+    assert "# TYPE req_total counter" in text
+    assert 'req_total{engine="async"} 3' in text
+    assert "# TYPE lat_ms histogram" in text
+    # cumulative buckets, closed by +Inf == _count
+    cums = [int(line.rsplit(" ", 1)[1]) for line in text.splitlines()
+            if line.startswith("lat_ms_bucket")]
+    assert cums == sorted(cums)
+    assert 'lat_ms_bucket{le="+Inf"} 3' in text
+    assert "lat_ms_count 3" in text
+
+
+def test_zero_sample_histogram_percentile():
+    h = MetricsRegistry().histogram("empty_ms")
+    assert np.isnan(h.percentile(50))
+    assert h.count == 0
+
+
+def test_metrics_http_endpoint():
+    """In-process scrape of the /metrics endpoint (ephemeral port):
+    Prometheus text and the JSON snapshot both reflect live registry
+    state; unknown paths 404."""
+    import urllib.error
+    import urllib.request
+
+    from repro.obs import serve_metrics
+
+    reg = MetricsRegistry()
+    reg.counter("req_total").inc(3)
+    reg.histogram("lat_ms").observe(2.5)
+    srv = serve_metrics(reg, 0)
+    try:
+        text = urllib.request.urlopen(srv.url, timeout=10).read().decode()
+        assert "req_total 3" in text
+        assert 'lat_ms_bucket{le="+Inf"} 1' in text
+        reg.counter("req_total").inc()       # scrapes see live state
+        text = urllib.request.urlopen(srv.url, timeout=10).read().decode()
+        assert "req_total 4" in text
+        base = srv.url.rsplit("/", 1)[0]
+        doc = json.loads(urllib.request.urlopen(
+            base + "/metrics.json", timeout=10).read())
+        assert any(m["name"] == "req_total" and m["value"] == 4
+                   for m in doc["metrics"])
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(base + "/nope", timeout=10)
+    finally:
+        srv.close()
+
+
+def test_no_wall_clock_in_serving_path():
+    """The in-repo mirror of the CI lint: serving latency math runs on
+    one clock (obs/clock.py, perf_counter).  A wall-clock read under
+    serving/ or obs/ corrupts deadlines and spans when NTP steps."""
+    import os
+
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src",
+                       "repro")
+    offenders = []
+    for sub in ("serving", "obs"):
+        for dirpath, _, names in os.walk(os.path.join(src, sub)):
+            for name in names:
+                if not name.endswith(".py"):
+                    continue
+                p = os.path.join(dirpath, name)
+                with open(p, encoding="utf-8") as f:
+                    for ln, line in enumerate(f, 1):
+                        if "time.time()" in line:
+                            offenders.append(f"{p}:{ln}")
+    assert not offenders, (
+        "wall-clock reads in the serving path (use repro.obs.clock): "
+        + ", ".join(offenders))

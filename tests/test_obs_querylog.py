@@ -1,0 +1,233 @@
+"""obs/querylog + tracing: the sampled JSONL record and its round trip.
+
+Three contracts pinned here:
+
+1. the log carries the measurement — replaying a trace_sample=1.0 log
+   through ``replay_registry`` reproduces the live engine registry's
+   latency histogram bucket-for-bucket (hence identical p50/p99), and
+   ``recall_from_log`` recomputes recall@k from the recorded ids alone;
+2. sampling is decided before a record exists — a sampled-out query
+   allocates nothing and appears nowhere; the deterministic Sampler
+   makes "1 in N" mean exactly that;
+3. span ordering — every traced request satisfies
+   ``submitted_at <= dispatched_at <= device_done_at <= completed_at``
+   (monotonic stamps from the one serving clock, obs/clock.py).
+
+Plus the golden replay: the async engine serving the frozen
+``range_search`` fixture must write the same traversal facts
+(ids/dists/hops/evals) as ``querylog_golden.jsonl`` — the query log is
+part of the engine's observable behavior, held to the same bit-stability
+bar as the results themselves.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.build import DEGIndex, DEGParams, build_deg
+from repro.obs import (LATENCY_METRIC, MetricsRegistry, QueryLogWriter,
+                       Sampler, make_record, mining_view, query_hash,
+                       read_query_log, recall_from_log, replay_registry)
+from repro.serving.async_engine import AsyncQueryEngine
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+GOLDEN_NPZ = os.path.join(DATA, "range_search_golden.npz")
+GOLDEN_LOG = os.path.join(DATA, "querylog_golden.jsonl")
+
+
+@pytest.fixture(scope="module")
+def index():
+    rng = np.random.default_rng(0)
+    vecs = rng.normal(size=(400, 8)).astype(np.float32)
+    return build_deg(vecs, DEGParams(degree=8, k_ext=16), wave_size=8), vecs
+
+
+# ---------------------------------------------------------------------------
+# Sampler
+# ---------------------------------------------------------------------------
+def test_sampler_rates():
+    assert not any(Sampler(0.0).take() for _ in range(100))
+    assert all(Sampler(1.0).take() for _ in range(100))
+    # fractional accumulator: exactly rate*n over any window, not i.i.d.
+    s = Sampler(0.25)
+    assert sum(s.take() for _ in range(1000)) == 250
+    assert not Sampler(0.0).active and Sampler(0.3).active
+
+
+# ---------------------------------------------------------------------------
+# writer / reader
+# ---------------------------------------------------------------------------
+def _rec(qid, lat=5.0, partial=False, ids=(1, 2, 3)):
+    return make_record(qid=qid, query=np.full(8, qid, np.float32), k=3,
+                       ids=np.asarray(ids), dists=np.asarray(
+                           [0.1 * (i + 1) for i in range(len(ids))]),
+                       hops=7, evals=42, latency_ms=lat, partial=partial)
+
+
+def test_writer_round_trip(tmp_path):
+    path = str(tmp_path / "q.jsonl")
+    w = QueryLogWriter(path)
+    for i in range(5):
+        w.write(_rec(i))
+    w.close()
+    recs = read_query_log(path)
+    assert [r["qid"] for r in recs] == list(range(5))
+    assert recs[0]["ids"] == [1, 2, 3] and recs[0]["hops"] == 7
+    assert recs[0]["qhash"] == query_hash(np.full(8, 0, np.float32))
+    # writes after close are dropped, not crashes (engine close() races)
+    w.write(_rec(9))
+    assert len(read_query_log(path)) == 5
+
+
+def test_invalid_padding_dropped():
+    rec = _rec(0, ids=(4, -1, -1))
+    assert rec["ids"] == [4] and len(rec["dists"]) == 1
+
+
+def test_rotation_keeps_newest(tmp_path):
+    path = str(tmp_path / "q.jsonl")
+    w = QueryLogWriter(path, max_bytes=1, max_files=2)   # 1 record/segment
+    for i in range(10):
+        w.write(_rec(i))
+    w.close()
+    recs = read_query_log(path)
+    # active + 2 rotated segments survive, oldest first, newest retained
+    assert [r["qid"] for r in recs] == [7, 8, 9]
+    assert os.path.exists(path + ".2") and not os.path.exists(path + ".3")
+    assert w.records_written == 10
+
+
+def test_reader_rejects_unknown_schema(tmp_path):
+    path = str(tmp_path / "q.jsonl")
+    with open(path, "w") as f:
+        f.write(json.dumps({"v": 999, "qid": 0}) + "\n")
+    with pytest.raises(ValueError, match="schema version"):
+        read_query_log(path)
+
+
+def test_replay_and_recall_from_log():
+    recs = [_rec(i, lat=float(i + 1)) for i in range(50)]
+    recs.append(_rec(50, lat=999.0, partial=True))
+    reg = replay_registry(recs)
+    h = reg.histogram(LATENCY_METRIC)
+    assert h.count == 51
+    assert reg.counter("serving_hops_total").value == 51 * 7
+    assert reg.counter("serving_deadline_partials_total").value == 1
+    # ids are (1,2,3) everywhere; gt hit rate is exactly 2/3
+    rec = recall_from_log(recs, lambda qid: [1, 2, 99], k=3)
+    assert rec == pytest.approx(2.0 / 3.0)
+    # partials excluded by default, included on request
+    assert recall_from_log(recs, lambda qid: [1, 2, 99], k=3,
+                           include_partial=True) == pytest.approx(2.0 / 3.0)
+
+
+def test_mining_view_groups_by_qhash():
+    recs = [_rec(0), _rec(0), _rec(1)]       # qid 0 twice -> same vector
+    recs[1]["qid"] = 5                        # same qhash, later request
+    view = mining_view(recs)
+    assert len(view) == 2
+    top = view[query_hash(np.full(8, 0, np.float32))]
+    assert top["count"] == 2 and top["hops_sum"] == 14
+    assert top["ids"] == [1, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# engine integration: sampling, spans, registry round trip
+# ---------------------------------------------------------------------------
+def test_engine_trace_full_sample_round_trip(index, tmp_path):
+    idx, vecs = index
+    path = str(tmp_path / "q.jsonl")
+    reg = MetricsRegistry()
+    qlog = QueryLogWriter(path)
+    with AsyncQueryEngine(idx, k=5, max_batch=16, deadline_ms=None,
+                          metrics=reg, trace_sample=1.0,
+                          query_log=qlog) as eng:
+        futs = [eng.submit(q) for q in vecs[:30]]
+        for f in futs:
+            f.result(120.0)
+    qlog.close()
+    recs = read_query_log(path)
+    assert len(recs) == 30
+    assert sorted(r["qid"] for r in recs) == list(range(30))
+    # span ordering invariant on every future and every record
+    for f in futs:
+        assert f.submitted_at <= f.dispatched_at <= f.device_done_at \
+            <= f.completed_at
+    for r in recs:
+        sp = r["spans"]
+        assert sp["queue_wait_ms"] >= 0 and sp["device_ms"] >= 0
+        assert sp["extract_ms"] >= 0
+        assert sp["total_ms"] == pytest.approx(
+            sp["queue_wait_ms"] + sp["device_ms"] + sp["extract_ms"],
+            abs=1e-6)
+        assert r["latency_ms"] == sp["total_ms"]
+    # the log carries the registry's measurement exactly
+    live = reg.histogram(LATENCY_METRIC)
+    replayed = replay_registry(recs).histogram(LATENCY_METRIC)
+    assert replayed.counts == live.counts
+    assert replayed.percentile(50) == live.percentile(50)
+    assert replayed.percentile(99) == live.percentile(99)
+    assert reg.counter("serving_requests_total").value == 30
+
+
+def test_engine_sampled_out_writes_nothing(index, tmp_path):
+    idx, vecs = index
+    path = str(tmp_path / "q.jsonl")
+    qlog = QueryLogWriter(path)
+    reg = MetricsRegistry()
+    with AsyncQueryEngine(idx, k=5, max_batch=16, deadline_ms=None,
+                          metrics=reg, trace_sample=0.0,
+                          query_log=qlog) as eng:
+        futs = [eng.submit(q) for q in vecs[:10]]
+        for f in futs:
+            f.result(120.0)
+    qlog.close()
+    assert read_query_log(path) == []
+    assert qlog.records_written == 0
+    # metrics still flow: sampling gates the log, never the registry
+    assert reg.counter("serving_requests_total").value == 10
+    assert reg.histogram(LATENCY_METRIC).count == 10
+
+
+def test_engine_half_sample_exact_count(index, tmp_path):
+    idx, vecs = index
+    path = str(tmp_path / "q.jsonl")
+    qlog = QueryLogWriter(path)
+    with AsyncQueryEngine(idx, k=5, max_batch=16, deadline_ms=None,
+                          trace_sample=0.5, query_log=qlog) as eng:
+        futs = [eng.submit(q) for q in vecs[:20]]
+        for f in futs:
+            f.result(120.0)
+    qlog.close()
+    # deterministic fractional sampler: exactly half, regardless of how
+    # the scheduler grouped the flushes
+    assert len(read_query_log(path)) == 10
+
+
+# ---------------------------------------------------------------------------
+# golden replay
+# ---------------------------------------------------------------------------
+def test_golden_querylog_replay(tmp_path):
+    """Serving the frozen range_search fixture must log the same
+    traversal facts as the checked-in golden record (regenerate only via
+    tests/data/gen_querylog_golden.py, same bar as the .npz golden)."""
+    import importlib.util
+
+    spec = importlib.util.spec_from_file_location(
+        "gen_querylog_golden", os.path.join(DATA, "gen_querylog_golden.py"))
+    gen = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(gen)
+
+    path = str(tmp_path / "q.jsonl")
+    n = gen.serve_and_log(path)
+    got = read_query_log(path)
+    want = read_query_log(GOLDEN_LOG)
+    assert len(got) == len(want) == n == 16
+    deterministic = ("v", "qid", "qhash", "k", "seed", "exclude_n",
+                     "ids", "hops", "evals", "partial", "budget_exhausted")
+    for g, w in zip(sorted(got, key=lambda r: r["qid"]),
+                    sorted(want, key=lambda r: r["qid"])):
+        for f in deterministic:
+            assert g[f] == w[f], f
+        np.testing.assert_allclose(g["dists"], w["dists"], rtol=1e-6)

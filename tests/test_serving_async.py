@@ -140,6 +140,81 @@ def test_cancel_after_dispatch_returns_false(index):
         assert not fut.cancel()            # already done: lane was paid for
 
 
+def test_metrics_queue_depth_and_flush_histograms(index):
+    """The engine's registry is the observable scheduler state: the
+    queue-depth gauge tracks admissions, every flush lands in the
+    per-bucket latency histogram, and the counters match .stats."""
+    from repro.obs import LATENCY_METRIC, MetricsRegistry
+
+    idx, vecs = index
+    reg = MetricsRegistry()
+    # long linger: submits accumulate before the first dispatch, so the
+    # gauge deterministically reads the pending count
+    eng = AsyncQueryEngine(idx, k=5, max_batch=16, deadline_ms=None,
+                           linger_ms=500.0, metrics=reg)
+    try:
+        futs = [eng.submit(q) for q in vecs[:12]]
+        assert reg.gauge("serving_queue_depth").value == 12
+        for f in futs:
+            f.result(120.0)
+    finally:
+        eng.close()
+    assert reg.gauge("serving_queue_depth").value == 0
+    assert reg.counter("serving_requests_total").value == 12
+    assert reg.counter("serving_flushes_total").value == eng.stats.flushes
+    # every flush observed into its bucket's latency histogram
+    per_bucket = {b: reg.histogram("serving_flush_latency_ms",
+                                   bucket=str(b)).count
+                  for b in eng.buckets}
+    assert sum(per_bucket.values()) == eng.stats.flushes
+    for b, n_flushes in eng.stats.bucket_hist.items():
+        assert per_bucket[b] == n_flushes
+    # request latency histogram saw every request
+    assert reg.histogram(LATENCY_METRIC).count == 12
+    # hop/eval counters surfaced from the device at zero extra work
+    assert reg.counter("serving_hops_total").value > 0
+    assert reg.counter("serving_evals_total").value > 0
+
+
+def test_metrics_deadline_partials_counter(index):
+    """Deadline-expired partials are a first-class metric, not just a
+    stats field — dashboards alert on shed work."""
+    from repro.obs import MetricsRegistry
+
+    idx, vecs = index
+    reg = MetricsRegistry()
+    with AsyncQueryEngine(idx, k=5, max_batch=8, deadline_ms=0.0,
+                          partial_hops=4, metrics=reg) as eng:
+        futs = [eng.submit(q) for q in vecs[:3]]
+        for f in futs:
+            f.result(120.0)
+    n_partial = sum(f.partial for f in futs)
+    assert n_partial == eng.stats.partials > 0
+    assert reg.counter("serving_deadline_partials_total").value == n_partial
+    assert reg.counter("serving_forced_flushes_total").value == \
+        eng.stats.forced_flushes
+
+
+def test_sync_engine_metrics_and_flush_clock(index):
+    """The sync QueryEngine reports through the same registry names, and
+    its flush timing comes from the monotonic serving clock (the old
+    wall-clock read could go backwards under NTP steps)."""
+    from repro.obs import LATENCY_METRIC, MetricsRegistry
+
+    idx, vecs = index
+    reg = MetricsRegistry()
+    eng = QueryEngine(idx, k=5, max_batch=16, metrics=reg)
+    eng.search(vecs[:10])
+    assert reg.counter("serving_requests_total").value == 10
+    assert reg.counter("serving_flushes_total").value >= 1
+    # closed-loop request latency == the flush that served it
+    assert reg.histogram(LATENCY_METRIC).count == 10
+    hist_counts = sum(
+        m.count for m in reg.metrics()
+        if m.name == "serving_flush_latency_ms")
+    assert hist_counts == reg.counter("serving_flushes_total").value
+
+
 def test_close_drains_accepted_requests(index):
     idx, vecs = index
     eng = AsyncQueryEngine(idx, k=5, max_batch=8, deadline_ms=None,
