@@ -136,7 +136,7 @@ def _git_commit() -> str:
         return "unknown"
 
 
-def write_bench_json(name: str, payload: dict) -> str:
+def write_bench_json(name: str, payload: dict, merge: bool = False) -> str:
     """The standing perf trajectory: append to the history list in
     ``BENCH_<name>.json`` at the repo root, so headline numbers accrue
     across PRs instead of each commit overwriting the last.
@@ -145,8 +145,11 @@ def write_bench_json(name: str, payload: dict) -> str:
     is ``{commit, written_at, **payload}`` (config + measured figures:
     p50/p99, QPS, recall@10, ...), oldest first.  A re-run on the same
     commit replaces that commit's entry in place (fresher numbers, no
-    same-commit duplicates).  Pre-history single-document files (the old
-    overwrite format) are migrated as the first entry.  Returns the path
+    same-commit duplicates); ``merge=True`` instead updates that entry's
+    keys in place, so a sibling harness (e.g. serving_load's burst mode)
+    can add its section to the commit entry without clobbering the main
+    run's figures.  Pre-history single-document files (the old overwrite
+    format) are migrated as the first entry.  Returns the path
     written."""
     import json
 
@@ -169,7 +172,7 @@ def write_bench_json(name: str, payload: dict) -> str:
     replaced = False
     for i, e in enumerate(history):
         if e.get("commit") == entry["commit"]:
-            history[i] = entry
+            history[i] = {**e, **entry} if merge else entry
             replaced = True
             break
     if not replaced:

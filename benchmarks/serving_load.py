@@ -47,6 +47,16 @@ differential-grid float32 floor), p99 <= ``p99_floor_ms`` (a generous
 bound — the gate catches an engine that stops batching or retraces per
 request, not millisecond regressions), plus the exact query-log
 round-trip equalities.
+
+``--burst`` (:func:`run_burst`) is the overload protocol: the same
+open-loop driver against a *bounded* engine (``max_queue`` +
+degradation ladder armed), first uncontended (0.5x the offline
+baseline) and then at 2x — every submission must end in exactly one of
+served / typed ``OverloadError`` shed / typed crash, nothing may hang,
+shed rejections must come back within the deadline, and the recall@10
+of degraded-mode responses must hold the 0.95 floor.  Counts and
+degraded recall land in the ``burst`` section of the commit's
+``BENCH_serving.json`` entry.
 """
 from __future__ import annotations
 
@@ -307,6 +317,187 @@ def run(n: int = 6000, n_query: int = 256, dim: int = 32, k: int = 10,
     return summary
 
 
+#: the --quick --burst configuration (the chaos-smoke CI job's gate).
+QUICK_BURST_CONFIG = dict(n=1500, n_query=128, duration=1.25, refine=100,
+                          search_preset="multi-e2-l64", max_batch=64,
+                          bucket_floor=16, deadline_ms=400.0, quick=True)
+
+
+def run_burst(n: int = 6000, n_query: int = 256, dim: int = 32, k: int = 10,
+              eps: float = 0.1, seed: int = 0, refine: int = 300,
+              search_preset: str = "multi-e2-l64", max_batch: int = 128,
+              bucket_floor: int = 32, deadline_ms: float = 600.0,
+              linger_ms: float = 4.0, partial_hops: int = 8,
+              max_queue: int | None = None, shed_policy: str = "reject",
+              burst_factor: float = 2.0, duration: float = 4.0,
+              max_requests: int = 20000, quick: bool = False,
+              degraded_recall_floor: float = 0.95) -> dict:
+    """Overload protocol: drive the bounded engine uncontended, then at
+    ``burst_factor`` x the offline closed-loop baseline, and account for
+    every submission.  See the module docstring for the gates."""
+    from repro.resilience import EngineCrashedError, OverloadError
+    from repro.serving.async_engine import AsyncQueryEngine
+
+    from repro.configs.deg import SEARCH_PRESETS
+
+    ds = make_bench_dataset("bench-small", n, n_query, dim, "low", k=k,
+                            seed=seed)
+    params = DEG_PAPER_CONFIGS["bench-small"]
+    idx = build_deg(ds.base, params, wave_size=16)
+    if refine:
+        idx.refine(refine, seed=seed)
+
+    sp = SEARCH_PRESETS[search_preset]
+
+    def offline(qs):
+        res = idx.search(qs, k=k, eps=eps, beam_width=sp.beam_width,
+                         expand_width=sp.expand_width,
+                         visited_size=sp.visited_size,
+                         hop_backend=sp.hop_backend)
+        jax.block_until_ready(res.ids)
+        return res
+
+    offline(ds.queries)
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        offline(ds.queries)
+        best = min(best, time.perf_counter() - t0)
+    offline_qps = n_query / best
+
+    if max_queue is None:
+        max_queue = 4 * max_batch
+    eng = AsyncQueryEngine(idx, k=k, eps=eps, preset=search_preset,
+                           max_batch=max_batch, bucket_floor=bucket_floor,
+                           deadline_ms=deadline_ms, linger_ms=linger_ms,
+                           partial_hops=partial_hops, max_queue=max_queue,
+                           shed_policy=shed_policy, degrade=True)
+    eng.warmup()
+
+    rng = np.random.default_rng(seed)
+
+    def drive_typed(offered):
+        """Open-loop pass where every submission is accounted to exactly
+        one typed outcome: served / shed / crashed / hung."""
+        n_req = max(32, int(min(offered * duration, max_requests)))
+        arrivals = np.cumsum(rng.exponential(1.0 / offered, size=n_req))
+        q_idx = rng.integers(0, n_query, size=n_req)
+        pend = []                      # (arrival, submit_t, future)
+        served, shed, crashed, hung = [], [], [], 0
+        t_start = clock.now()
+        for i in range(n_req):
+            lag = arrivals[i] - (clock.now() - t_start)
+            if lag > 0:
+                time.sleep(lag)
+            t_sub = clock.now()
+            try:
+                fut = eng.submit(ds.queries[q_idx[i]])
+            except OverloadError:
+                shed.append(clock.now() - t_sub)   # time to typed reject
+                continue
+            except EngineCrashedError:
+                crashed.append(i)
+                continue
+            pend.append((i, t_sub, fut))
+        for i, t_sub, fut in pend:
+            try:
+                fut.result(timeout=120.0)
+            except TimeoutError:       # a hung future — the satellite bug
+                hung += 1
+                continue
+            except OverloadError:      # drop-policy eviction from the queue
+                shed.append(fut.completed_at - t_sub)
+                continue
+            except EngineCrashedError:
+                crashed.append(i)
+                continue
+            served.append((i, q_idx[i], fut,
+                           fut.completed_at - (t_start + arrivals[i])))
+        assert len(served) + len(shed) + len(crashed) + hung == n_req, \
+            "submission accounting leak — an outcome was double/un-counted"
+        return n_req, served, shed, crashed, hung
+
+    def served_recall(served, degraded_only):
+        rows = [(qi, f) for _, qi, f, _ in served
+                if not f.partial and (f.degraded if degraded_only else True)]
+        if not rows:
+            return None
+        got = np.stack([f.ids for _, f in rows])
+        gt = ds.gt_ids[np.array([qi for qi, _ in rows])]
+        return recall_at_k(got[:, :k], gt[:, :k])
+
+    # Phase 1: uncontended — the p99 yardstick the burst is held to.
+    n0, served0, shed0, crashed0, hung0 = drive_typed(0.5 * offline_qps)
+    lats0 = np.array([s[3] for s in served0]) * 1e3
+    base_p99 = float(np.percentile(lats0, 99))
+    emit("serving_burst_uncontended", offered_qps=0.5 * offline_qps,
+         served=len(served0), shed=len(shed0), p99_ms=base_p99)
+
+    # Phase 2: the burst — burst_factor x the offline closed-loop QPS.
+    offered = burst_factor * offline_qps
+    n1, served1, shed1, crashed1, hung1 = drive_typed(offered)
+    peak_level = eng.health()["degrade_level"]
+    eng.close()
+
+    lats1 = np.array([s[3] for s in served1]) * 1e3 if served1 else \
+        np.array([0.0])
+    burst_p99 = float(np.percentile(lats1, 99))
+    degraded_served = sum(1 for _, _, f, _ in served1 if f.degraded)
+    rec_all = served_recall(served1, degraded_only=False)
+    rec_degraded = served_recall(served1, degraded_only=True)
+    max_reject_ms = max((t * 1e3 for t in shed0 + shed1), default=0.0)
+
+    row = emit("serving_burst", offered_qps=offered,
+               requests=n1, served=len(served1), shed=len(shed1),
+               crashed=len(crashed1), hung=hung1,
+               degraded=degraded_served, degrade_level=peak_level,
+               recall=rec_all, degraded_recall=rec_degraded,
+               p99_ms=burst_p99, uncontended_p99_ms=base_p99,
+               max_reject_ms=max_reject_ms)
+
+    # -- the resilience gates (every run, quick included, except the
+    # wall-clock p99 ratio which is too noisy for shared runners) --------
+    assert hung0 + hung1 == 0, (
+        f"{hung0 + hung1} requests hung past the timeout — every submit "
+        "must resolve to a result or a typed error")
+    assert not crashed0 and not crashed1, (
+        f"engine crashed under overload ({len(crashed0) + len(crashed1)} "
+        "typed crash errors) — shedding must protect the loops")
+    assert len(shed1) + degraded_served > 0, (
+        f"burst at {burst_factor}x offered neither shed nor degraded — "
+        "the bounded queue/ladder never engaged (overload not exercised)")
+    assert max_reject_ms <= deadline_ms, (
+        f"slowest typed rejection took {max_reject_ms:.1f}ms — sheds must "
+        f"come back within the {deadline_ms}ms deadline, not after it")
+    if rec_degraded is not None:
+        assert rec_degraded >= degraded_recall_floor, (
+            f"degraded-mode recall@{k}={rec_degraded:.4f} under the "
+            f"{degraded_recall_floor} floor — the ladder traded too much "
+            "accuracy for throughput")
+    if not quick:
+        assert burst_p99 <= 2.0 * base_p99, (
+            f"burst p99={burst_p99:.1f}ms > 2x uncontended "
+            f"p99={base_p99:.1f}ms — served requests must stay fast while "
+            "the overflow sheds")
+
+    write_bench_json("serving", {"burst": {
+        "offered_qps": offered, "offline_qps": offline_qps,
+        "burst_factor": burst_factor, "max_queue": max_queue,
+        "shed_policy": shed_policy, "requests": n1,
+        "served": len(served1), "shed": len(shed1),
+        "crashed": len(crashed1), "hung": hung1,
+        "degraded": degraded_served,
+        "recall_at_10": rec_all, "degraded_recall_at_10": rec_degraded,
+        "p99_ms": burst_p99, "uncontended_p99_ms": base_p99,
+        "max_reject_ms": max_reject_ms, "quick": quick,
+    }}, merge=True)
+
+    return dict(requests=n1, served=len(served1), shed=len(shed1),
+                degraded=degraded_served, hung=hung1,
+                recall=rec_all, degraded_recall=rec_degraded,
+                p99_ms=burst_p99, uncontended_p99_ms=base_p99)
+
+
 if __name__ == "__main__":
     import argparse
 
@@ -314,12 +505,20 @@ if __name__ == "__main__":
     ap.add_argument("--quick", action="store_true",
                     help="small index, short duration, deterministic seed, "
                     "recall/p99 floors enforced (the CI smoke gate)")
+    ap.add_argument("--burst", action="store_true",
+                    help="run the overload protocol instead: bounded "
+                    "queue + degradation ladder at 2x offered load, "
+                    "typed-outcome accounting (the chaos-smoke gate)")
     ap.add_argument("--rate", type=float, default=None,
                     help="offered QPS (default: 0.8x the measured offline "
                     "closed-loop baseline)")
     ap.add_argument("--duration", type=float, default=4.0)
     a = ap.parse_args()
-    if a.quick:
+    if a.burst:
+        cfg = dict(QUICK_BURST_CONFIG) if a.quick else \
+            dict(duration=a.duration)
+        print(run_burst(**cfg))
+    elif a.quick:
         print(run(**dict(QUICK_CONFIG, rate=a.rate)))
     else:
         print(run(rate=a.rate, duration=a.duration))

@@ -135,6 +135,17 @@ class DEGIndex:
         self._ckpt_path = None
         self._ckpt_every = 0
         self._wave_counter = 0
+        # mutation WAL (persist/wal.py): when enabled, every mutation unit
+        # (bootstrap take / insert wave / remove / refine) is journaled
+        # before it is applied, so load(snapshot) + replay(wal) is
+        # bit-identical to the uninterrupted build.  _wal_replay holds the
+        # record being re-applied (verify, don't re-append); _wal_op_active
+        # suppresses checkpoint *saves* inside a journaled op (a snapshot
+        # there would advance the cursor past a half-applied record)
+        self._wal = None
+        self._wal_seq = 0
+        self._wal_replay = None
+        self._wal_op_active = False
 
     # -- sizes -------------------------------------------------------------
     @property
@@ -197,6 +208,9 @@ class DEGIndex:
         if self.builder is None:
             need = d + 1 - len(self._pending)
             take = min(need, points.shape[0])
+            if take:
+                self._wal_record("add", {"wave_size": int(wave_size)},
+                                 {"points": points[:take]})
             self._pending.extend(points[:take])
             i = take
             if len(self._pending) == d + 1:
@@ -210,6 +224,12 @@ class DEGIndex:
                 return
         while i < points.shape[0]:
             w = min(wave_size, points.shape[0] - i)
+            # one WAL record per wave (not per add() call): the record is
+            # durable before the wave mutates anything, and the
+            # end-of-wave checkpoint sees a cursor that exactly covers
+            # the applied waves
+            self._wal_record("add", {"wave_size": int(w)},
+                             {"points": points[i : i + w]})
             self._insert_wave(points[i : i + w])
             i += w
 
@@ -433,10 +453,18 @@ class DEGIndex:
         delete_vertices."""
         from .delete import delete_vertices
 
+        id_list = [int(v) for v in
+                   (ids if hasattr(ids, "__iter__") else [ids])]
+        self._wal_record("remove", {"refine_after": int(refine_after)},
+                         {"ids": np.asarray(id_list, np.int64)})
         self._medoid = None
         self._stores = {}
-        return delete_vertices(self, ids if hasattr(ids, "__iter__")
-                               else [ids], refine_after=refine_after)
+        self._wal_op_active = True
+        try:
+            return delete_vertices(self, id_list,
+                                   refine_after=refine_after)
+        finally:
+            self._wal_op_active = False
 
     # -- continuous refinement (Alg. 5 driver) -------------------------------
     def refine(self, iterations: int, seed: Optional[int] = None) -> int:
@@ -450,12 +478,27 @@ class DEGIndex:
 
         if self.builder is None or self.builder.n <= self.builder.degree + 1:
             return 0
+        journaled = self._wal is not None or self._wal_replay is not None
+        drew = seed is None
+        if drew and journaled:
+            # a replayable run must not depend on OS entropy: resolve the
+            # seed from the persisted build stream, so replay (which
+            # restores the stream from the snapshot) re-draws it exactly
+            seed = int(self._rng.integers(0, 2**31 - 1))
+        self._wal_record("refine",
+                         {"iterations": int(iterations),
+                          "seed": None if seed is None else int(seed),
+                          "drew": drew}, {})
         rng = np.random.default_rng(seed)
         vertices = rng.integers(0, self.builder.n, size=int(iterations))
-        return refine_sweep(
-            self, vertices,
-            i_opt=self.params.i_opt, k_opt=self.params.k_opt,
-            eps_opt=self.params.eps_opt)
+        self._wal_op_active = journaled
+        try:
+            return refine_sweep(
+                self, vertices,
+                i_opt=self.params.i_opt, k_opt=self.params.k_opt,
+                eps_opt=self.params.eps_opt)
+        finally:
+            self._wal_op_active = False
 
     # -- quantized store views ----------------------------------------------
     def store_for(self, codec: str):
@@ -505,6 +548,43 @@ class DEGIndex:
 
         return load_index(path, params=params, capacity=capacity)
 
+    def enable_wal(self, path, sync: bool = True) -> None:
+        """Journal every future mutation unit to ``path`` (append-only,
+        CRC-framed — persist/wal.py) before applying it.  Recovery is
+        ``persist.wal.recover(snapshot, wal)``: load the snapshot, replay
+        the records past its cursor, bit-identical to the uninterrupted
+        build.  NOTE: with the WAL enabled, ``refine(seed=None)`` resolves
+        its seed from the persisted build RNG stream (a replayable run
+        cannot depend on OS entropy)."""
+        from repro.persist.wal import WALWriter
+
+        self._wal = WALWriter(path, sync=sync)
+
+    def _wal_record(self, op: str, meta: dict, arrays: dict) -> None:
+        """Journal one mutation unit — or, during replay, verify the op
+        against the record being re-applied instead of re-appending it.
+        No-op when the WAL is disabled (the sequence counter only
+        advances for journaled ops, keeping snapshot cursors aligned)."""
+        rec = self._wal_replay
+        if rec is not None:
+            from repro.persist.wal import WALError
+
+            if rec.op != op:
+                raise WALError(
+                    f"replay mismatch at seq {rec.seq}: journal says "
+                    f"{rec.op!r}, index replayed {op!r}")
+            if op == "refine" and rec.meta.get("seed") != meta.get("seed"):
+                raise WALError(
+                    f"replay mismatch at seq {rec.seq}: refine seed "
+                    f"{meta.get('seed')} != journaled "
+                    f"{rec.meta.get('seed')} — RNG stream diverged "
+                    "(snapshot and WAL don't belong together?)")
+            self._wal_seq += 1
+            return
+        if self._wal is not None:
+            self._wal.append(self._wal_seq, op, meta, arrays)
+            self._wal_seq += 1
+
     def enable_checkpoints(self, path, every_waves: int = 1) -> None:
         """Snapshot the full index to ``path`` every ``every_waves``
         insert waves / refine chunks (at wave boundaries, where the graph
@@ -523,7 +603,12 @@ class DEGIndex:
     def _checkpoint_tick(self) -> None:
         self._wave_counter += 1
         if (self._ckpt_path is not None and self._ckpt_every > 0
-                and self._wave_counter % self._ckpt_every == 0):
+                and self._wave_counter % self._ckpt_every == 0
+                # inside a journaled remove/refine the WAL cursor already
+                # covers the op but the graph is mid-surgery: a snapshot
+                # here could not be continued by replay.  Waves are safe
+                # (one record per wave).  Replay itself never writes.
+                and not self._wal_op_active and self._wal_replay is None):
             self.save(str(self._ckpt_path).format(
                 waves=self._wave_counter, n=self.n))
 

@@ -18,11 +18,21 @@ the compile time per bucket, so a warm-started snapshot (``--index``)
 serves its first request at steady-state latency.
 
 Observability (obs/): ``--metrics-port P`` serves the engine registry at
-``http://127.0.0.1:P/metrics`` (Prometheus text) and ``/metrics.json``
-while the process runs (``--hold-secs`` keeps it up after the trace for
-scrapers — the CI smoke job's hook); ``--stats-every S`` prints a
-one-line registry digest every S seconds; ``--trace-sample R`` +
-``--query-log PATH`` write the sampled JSONL query log.
+``http://127.0.0.1:P/metrics`` (Prometheus text), ``/metrics.json``, and
+``/healthz`` (engine liveness: 503 once the engine is crashed) while the
+process runs (``--hold-secs`` keeps it up after the trace for scrapers —
+the CI smoke job's hook); ``--stats-every S`` prints a one-line registry
+digest every S seconds; ``--trace-sample R`` + ``--query-log PATH``
+write the sampled JSONL query log.
+
+Resilience (resilience/, --engine async): ``--max-queue`` bounds
+admission (overflow sheds with a typed ``OverloadError`` per
+``--shed-policy``), ``--degrade`` arms the adaptive degradation ladder,
+``--wal PATH`` journals every index mutation for crash-safe recovery,
+and ``--faults SPEC`` installs a deterministic fault plan
+(``point:op[=arg][@n]`` — the chaos-smoke CI job's hook).  Shed /
+invalid / crashed submissions are counted, never silently dropped, and
+the run ends with one greppable ``resilience:`` summary line.
 """
 from __future__ import annotations
 
@@ -110,6 +120,30 @@ def main() -> None:
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="per-request SLO override for --engine async "
                     "(negative = no deadline)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound the async admission queue at this depth; "
+                    "overflow sheds with a typed OverloadError "
+                    "(default: unbounded)")
+    ap.add_argument("--shed-policy", default="reject",
+                    choices=("reject", "drop"),
+                    help="reject = refuse the incoming submit at "
+                    "capacity; drop = evict the most-expired queued "
+                    "request instead (needs deadlines)")
+    ap.add_argument("--degrade", action="store_true",
+                    help="arm the adaptive degradation ladder (slim "
+                    "beam -> hop cap -> sq8) driven by queue backlog; "
+                    "requires --max-queue")
+    ap.add_argument("--wal", default=None,
+                    help="journal every index mutation to this "
+                    "write-ahead log; load_index(snapshot) + "
+                    "replay_wal(wal) recovers bit-identically after a "
+                    "crash")
+    ap.add_argument("--faults", default=None,
+                    help="deterministic fault plan spec, e.g. "
+                    "'scheduler.loop:kill@5;wal.append:delay=0.01' "
+                    "(see resilience.faults.FaultPlan.parse)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for probabilistic fault-plan rules")
     ap.add_argument("--warmup", action="store_true",
                     help="precompile all (bucket, preset) programs at boot "
                     "and log compile time per bucket")
@@ -141,8 +175,17 @@ def main() -> None:
     from repro.core.distances import exact_knn_batched
     from repro.core.metrics import recall_at_k
     from repro.data.synthetic import make_dataset
+    from repro.resilience import (EngineCrashedError, FaultPlan,
+                                  OverloadError, RequestValidationError,
+                                  install_faults)
     from repro.serving.async_engine import AsyncQueryEngine
     from repro.serving.engine import QueryEngine
+
+    if args.faults:
+        plan = FaultPlan.parse(args.faults, seed=args.fault_seed)
+        install_faults(plan)
+        print(f"faults: installed plan {args.faults!r} "
+              f"(seed {args.fault_seed})")
 
     registry = obs.MetricsRegistry()
     metrics_srv = None
@@ -197,6 +240,10 @@ def main() -> None:
     # build-side spans (insert waves, refine chunks) land in the same
     # registry the serving metrics export from
     idx.metrics = registry
+    if args.wal:
+        idx.enable_wal(args.wal)
+        print(f"wal: journaling mutations to {args.wal} "
+              f"(cursor seq={idx._wal_seq})")
     if args.engine == "async":
         dl = args.deadline_ms
         if dl is not None and dl < 0:
@@ -208,8 +255,13 @@ def main() -> None:
                                 metrics=registry,
                                 trace_sample=args.trace_sample,
                                 query_log=qlog,
+                                max_queue=args.max_queue,
+                                shed_policy=args.shed_policy,
+                                degrade=args.degrade,
                                 **({} if args.deadline_ms is None
                                    else {"deadline_ms": dl}))
+        if metrics_srv is not None:
+            metrics_srv.set_health(aeng.health)
         if args.warmup:
             t0 = time.time()
             times = aeng.warmup()
@@ -218,23 +270,60 @@ def main() -> None:
                       f"compile+run {secs*1e3:8.1f} ms")
             print(f"warmup: {len(times)} programs in {time.time()-t0:.2f}s "
                   f"(buckets {list(aeng.buckets)})")
+        # every submit ends in exactly one bucket: served, shed (typed
+        # OverloadError), invalid (RequestValidationError), or crashed
+        # (EngineCrashedError) — nothing hangs, nothing is silently lost
         t0 = time.time()
-        futs = [aeng.submit(q) for q in queries]
-        outs = [f.result(120.0) for f in futs]
+        served_q, served_fut = [], []
+        shed = invalid = crashed = 0
+        for q in queries:
+            try:
+                fut = aeng.submit(q)
+            except OverloadError:
+                shed += 1
+                continue
+            except RequestValidationError:
+                invalid += 1
+                continue
+            except EngineCrashedError:
+                crashed += 1
+                continue
+            served_q.append(q)
+            served_fut.append(fut)
+        futs, outs = [], []
+        ok_q = []
+        for q, f in zip(served_q, served_fut):
+            try:
+                outs.append(f.result(120.0))
+            except OverloadError:
+                shed += 1
+                continue
+            except EngineCrashedError:
+                crashed += 1
+                continue
+            futs.append(f)
+            ok_q.append(q)
         wall = time.time() - t0
-        lats = np.array([f.latency_s for f in futs]) * 1e3
-        found = np.stack([o[0] for o in outs])
-        _, gt = exact_knn_batched(queries, base, args.k)
-        rec = recall_at_k(found, gt)
         st = aeng.stats
-        print(f"served {len(futs)} queries in {wall:.2f}s "
-              f"({len(futs)/wall:.0f} qps sustained), "
-              f"recall@{args.k}={rec:.4f}, "
-              f"p50={np.percentile(lats, 50):.2f}ms "
-              f"p99={np.percentile(lats, 99):.2f}ms, "
-              f"{st.flushes} flushes {st.partials} partial "
-              f"{st.forced_flushes} deadline-forced, "
-              f"buckets={st.bucket_hist}")
+        if futs:
+            lats = np.array([f.latency_s for f in futs]) * 1e3
+            found = np.stack([o[0] for o in outs])
+            _, gt = exact_knn_batched(np.stack(ok_q), base, args.k)
+            rec = recall_at_k(found, gt)
+            print(f"served {len(futs)} queries in {wall:.2f}s "
+                  f"({len(futs)/wall:.0f} qps sustained), "
+                  f"recall@{args.k}={rec:.4f}, "
+                  f"p50={np.percentile(lats, 50):.2f}ms "
+                  f"p99={np.percentile(lats, 99):.2f}ms, "
+                  f"{st.flushes} flushes {st.partials} partial "
+                  f"{st.forced_flushes} deadline-forced, "
+                  f"buckets={st.bucket_hist}")
+        else:
+            print(f"served 0 queries in {wall:.2f}s")
+        print(f"resilience: served={len(futs)} shed={shed} "
+              f"invalid={invalid} crashed={crashed} "
+              f"degraded={st.degraded} restarts={st.restarts} "
+              f"status={aeng.health()['status']}")
         aeng.close()
         _teardown()
         if args.save_index:

@@ -8,7 +8,10 @@ Layering (see ARCHITECTURE.md "Persistence layering"):
   materialized quant stores + params + RNG/build counters + medoid cache,
   plus the mid-build checkpoint contract;
 * :mod:`repro.persist.sharded` — :class:`ShardedDEG`: per-shard sections
-  behind a manifest, exact restore or reshard-on-restore.
+  behind a manifest, exact restore or reshard-on-restore;
+* :mod:`repro.persist.wal` — the crash-safe mutation journal between
+  checkpoints: CRC-framed append-only records, torn-tail truncation on
+  read, ``recover(snapshot, wal)`` = bit-identical resume.
 
 The index classes expose the ergonomic face (``DEGIndex.save/load``,
 ``ShardedDEG.save/load``, ``QueryEngine.from_snapshot``); everything
@@ -18,10 +21,14 @@ from .format import (FORMAT_VERSION, SUPPORTED_VERSIONS, SnapshotChecksumError,
                      SnapshotFormatError, read_snapshot, write_snapshot)
 from .sharded import load_sharded, save_sharded
 from .snapshot import load_index, save_index
+from .wal import (WALCorruptionError, WALError, WALRecord, WALWriter,
+                  read_wal, recover, replay_wal)
 
 __all__ = [
     "FORMAT_VERSION", "SUPPORTED_VERSIONS",
     "SnapshotFormatError", "SnapshotChecksumError",
     "read_snapshot", "write_snapshot",
     "save_index", "load_index", "save_sharded", "load_sharded",
+    "WALError", "WALCorruptionError", "WALRecord", "WALWriter",
+    "read_wal", "replay_wal", "recover",
 ]

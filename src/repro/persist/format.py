@@ -74,18 +74,36 @@ def write_snapshot(path, kind: str, sections: dict, payload: dict) -> None:
         "payload": payload,
     }
     blob = np.frombuffer(json.dumps(meta).encode("utf-8"), dtype=np.uint8)
-    # tmp + atomic rename: checkpoints overwrite their predecessor, and a
-    # crash mid-write must not destroy the only resumable snapshot (the
-    # same commit protocol as train/checkpoint.py)
+    # tmp + fsync + atomic rename: checkpoints overwrite their
+    # predecessor, and a crash mid-write (or a power cut with the page
+    # cache still dirty) must not destroy the only resumable snapshot
+    # (the same commit protocol as train/checkpoint.py).  The directory
+    # fsync makes the rename itself durable.
     path = os.fspath(path)
     tmp = f"{path}.tmp-{os.getpid()}"
     try:
         with open(tmp, "wb") as f:
             np.savez_compressed(f, **{_META_KEY: blob}, **arrays)
+            f.flush()
+            os.fsync(f.fileno())
+        from repro.resilience import faults as _faults
+
+        _faults.fire("snapshot.mid_save", path=path, tmp=tmp)
         os.replace(tmp, path)
+        _fsync_dir(os.path.dirname(path) or ".")
     finally:
         if os.path.exists(tmp):
             os.unlink(tmp)
+
+
+def _fsync_dir(dirpath: str) -> None:
+    fd = os.open(dirpath, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    except OSError:        # some filesystems refuse directory fsync
+        pass
+    finally:
+        os.close(fd)
 
 
 def read_snapshot(path, expected_kind=None) -> tuple[dict, dict]:

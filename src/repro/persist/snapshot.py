@@ -73,6 +73,9 @@ def index_sections(index) -> tuple[dict, dict]:
         "medoid": None if index._medoid is None else int(index._medoid),
         "stores": sorted(index._stores),
         "has_builder": index.builder is not None,
+        # WAL cursor: ops with seq >= wal_seq postdate this snapshot and
+        # are re-applied by persist.wal.replay_wal on recovery
+        "wal_seq": int(getattr(index, "_wal_seq", 0)),
     }
     return sections, payload
 
@@ -109,6 +112,7 @@ def restore_into(index, payload: dict, sections: dict) -> None:
     index.build_stats = dict(payload["build_stats"])
     index._wave_counter = int(payload["wave_counter"])
     index._medoid = payload["medoid"]
+    index._wal_seq = int(payload.get("wal_seq", 0))   # pre-WAL snapshots: 0
 
 
 def save_index(index, path) -> None:

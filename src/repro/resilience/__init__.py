@@ -1,0 +1,24 @@
+"""Serving + persistence resilience: typed failures, bounded admission
+support, graceful degradation, and deterministic fault injection.
+
+Import surface is deliberately light (numpy only) so that
+``persist/wal.py`` and the schedulers can import fault hooks and error
+types without pulling in jax.  The degradation ladder
+(:mod:`repro.resilience.degrade`) imports the serving dispatch layer and
+is imported explicitly by the async engine.
+"""
+from .errors import (EngineCrashedError, OverloadError, RequestValidationError,
+                     ResilienceError)
+from .faults import FaultInjected, FaultPlan, clock_skew
+from .faults import active as active_faults
+from .faults import clear as clear_faults
+from .faults import fire as fire_fault
+from .faults import install as install_faults
+from .validate import validate_query
+
+__all__ = [
+    "ResilienceError", "OverloadError", "EngineCrashedError",
+    "RequestValidationError", "FaultInjected", "FaultPlan", "clock_skew",
+    "fire_fault", "install_faults", "clear_faults", "active_faults",
+    "validate_query",
+]

@@ -28,6 +28,17 @@ call into an online serving loop:
   of the same queries no matter how the scheduler grouped them (pinned
   by tests/test_serving_async.py against the golden fixture).
 
+Resilience (all opt-in, defaults preserve the historical behavior; see
+``src/repro/resilience/``): a bounded admission queue (``max_queue`` +
+``shed_policy``) sheds with typed ``OverloadError`` instead of growing
+latency without bound; a degradation ladder (``degrade=True``) steps the
+search program down rungs (slimmer beam -> hop cap -> sq8 traversal)
+under sustained queue pressure with hysteresis and back up when the
+queue drains; ``submit`` validates queries (NaN/Inf never reach a
+batch); and a watchdog/supervisor turns a dying loop thread into typed
+``EngineCrashedError`` futures plus (``max_restarts`` budget allowing) a
+restarted pipeline — ``result()`` never hangs on a dead engine.
+
 The engine serves a read-only view of the index: run mutations (insert /
 delete / refine) through the owning ``QueryEngine`` or the index itself
 while no async engine is live, or between ``close()``/construction.
@@ -45,6 +56,12 @@ from repro.obs import clock
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.querylog import LATENCY_METRIC, QueryLogWriter, make_record
 from repro.obs.trace import Sampler
+from repro.resilience import faults as _faults
+from repro.resilience.degrade import (DegradePolicy, LadderController,
+                                      LadderRung, build_ladder)
+from repro.resilience.errors import (EngineCrashedError, OverloadError,
+                                     RequestValidationError)
+from repro.resilience.validate import validate_query
 from repro.serving import buckets as _buckets
 from repro.serving.scheduler import AdmissionQueue, AsyncResult, Request
 
@@ -57,6 +74,11 @@ class AsyncEngineStats:
     forced_flushes: int = 0     # flushed early for a nearing deadline
     ema_flush_s: float = 0.0    # smoothed dispatch->extracted wall time
     bucket_hist: dict = dataclasses.field(default_factory=dict)
+    shed: int = 0               # overload-shed requests (queue + submit)
+    invalid: int = 0            # rejected at validation, never enqueued
+    degraded: int = 0           # requests served below the base rung
+    crashes: int = 0            # loop-thread deaths observed
+    restarts: int = 0           # successful supervisor restarts
 
 
 class AsyncQueryEngine:
@@ -79,6 +101,11 @@ class AsyncQueryEngine:
                  metrics: Optional[MetricsRegistry] = None,
                  trace_sample: float = 0.0,
                  query_log: Optional[QueryLogWriter] = None,
+                 max_queue: Optional[int] = None,
+                 shed_policy: str = "reject",
+                 degrade: "bool | DegradePolicy" = False,
+                 validate: bool = True,
+                 max_restarts: int = 3,
                  start: bool = True):
         """``preset`` names a ``configs.deg.SEARCH_PRESETS`` entry (the
         L/E search program); ``slo`` a ``configs.deg.SLO_PRESETS`` entry
@@ -93,7 +120,17 @@ class AsyncQueryEngine:
         are always on (allocation-free observes).  ``trace_sample`` in
         [0, 1] picks which queries get a ``query_log`` JSONL record
         (obs/querylog.py); at 0.0 the per-query cost is one attribute
-        compare per flush — no record is built, nothing allocated."""
+        compare per flush — no record is built, nothing allocated.
+
+        Resilience knobs (all default to the historical behavior):
+        ``max_queue`` bounds the admission queue (None = unbounded) with
+        ``shed_policy`` ("reject" | "drop", see AdmissionQueue) deciding
+        who gets the typed ``OverloadError``; ``degrade=True`` (or a
+        :class:`DegradePolicy`) arms the graceful-degradation ladder —
+        requires a bounded queue, since queue pressure is its input;
+        ``validate`` screens NaN/Inf/shape at submit; ``max_restarts``
+        caps how many times the supervisor revives crashed loop threads
+        (0 = fail fast: the first crash is terminal)."""
         from repro.configs.deg import SLO_PRESETS, ServingPreset
 
         if preset is not None:
@@ -148,29 +185,88 @@ class AsyncQueryEngine:
             b: self.metrics.histogram("serving_flush_latency_ms",
                                       bucket=str(b))
             for b in self.buckets}
-        self._queue = AdmissionQueue(notify_at=self.max_batch)
+        self._m_shed = self.metrics.counter("serving_shed_total")
+        self._m_invalid = self.metrics.counter(
+            "serving_invalid_requests_total")
+        self._m_degraded = self.metrics.counter("serving_degraded_total")
+        self._m_level = self.metrics.gauge("serving_degrade_level")
+        self._m_trans = {
+            d: self.metrics.counter("serving_degrade_transitions_total",
+                                    direction=d)
+            for d in ("down", "up")}
+        self._m_crashes = self.metrics.counter("serving_engine_crashes_total")
+        self._m_restarts = self.metrics.counter(
+            "serving_thread_restarts_total")
+        # -- resilience: bounded admission + degradation ladder ------------
+        self._validate = validate
+        self.max_restarts = max_restarts
+        self._queue = AdmissionQueue(notify_at=self.max_batch,
+                                     capacity=max_queue,
+                                     shed_policy=shed_policy,
+                                     on_shed=self._on_shed)
+        self._ladder: list[LadderRung] = [LadderRung("base", self.cfg)]
+        self._ladder_ctl: Optional[LadderController] = None
+        if degrade:
+            if max_queue is None:
+                raise ValueError("degrade needs a bounded queue "
+                                 "(max_queue): queue pressure is the "
+                                 "ladder's input signal")
+            policy = degrade if isinstance(degrade, DegradePolicy) \
+                else DegradePolicy()
+            self._ladder = build_ladder(self.cfg, index.params.degree,
+                                        policy)
+            self._ladder_ctl = LadderController(
+                len(self._ladder), max_queue, policy,
+                on_change=self._on_ladder_change)
         # late-binding pipeline: the scheduler takes a dispatch slot
         # BEFORE popping the queue, so a batch is formed at the instant
         # the pipeline can absorb it (pop early and requests arriving
         # while the staged flush waits would miss the bus — the
         # small-flush oscillation).  The semaphore holds ``depth`` slots
         # (the double buffer); extract releases one per drained flush.
-        self._slots = threading.Semaphore(max(1, depth))
+        self._depth = max(1, depth)
+        self._slots = threading.Semaphore(self._depth)
         self._inflight: _queue.Queue = _queue.Queue()
         self._stop = False
+        self._halt = False              # crash path: exit without drain
+        self._crashed: Optional[EngineCrashedError] = None
+        self._generation = 0
+        self._staging: Optional[list[Request]] = None
+        self._extracting: Optional[tuple] = None
+        self._events: _queue.Queue = _queue.Queue()
         self._threads: list[threading.Thread] = []
+        self._sup_thread: Optional[threading.Thread] = None
         if start:
             self.start()
+
+    # -- resilience callbacks ----------------------------------------------
+    def _on_shed(self, req: Request) -> None:
+        self.stats.shed += 1
+        self._m_shed.inc()
+
+    def _on_ladder_change(self, old: int, new: int, direction: str) -> None:
+        self._m_trans[direction].inc()
+        self._m_level.set(new)
 
     # -- lifecycle ---------------------------------------------------------
     def start(self) -> None:
         if self._threads:
             return
         self._stop = False
+        self._spawn_loops()
+        self._sup_thread = threading.Thread(
+            target=self._supervisor_loop, name="deg-serve-supervisor",
+            daemon=True)
+        self._sup_thread.start()
+
+    def _spawn_loops(self) -> None:
+        gen = self._generation
         self._threads = [
-            threading.Thread(target=self._scheduler_loop,
+            threading.Thread(target=self._guarded,
+                             args=(self._scheduler_loop, "scheduler", gen),
                              name="deg-serve-scheduler", daemon=True),
-            threading.Thread(target=self._extract_loop,
+            threading.Thread(target=self._guarded,
+                             args=(self._extract_loop, "extract", gen),
                              name="deg-serve-extract", daemon=True),
         ]
         for t in self._threads:
@@ -184,6 +280,12 @@ class AsyncQueryEngine:
         for t in self._threads:
             t.join()
         self._threads = []
+        if self._sup_thread is not None:
+            # FIFO: any pending crash event is handled (futures failed,
+            # no restart — _stop suppresses it) before the stop sentinel
+            self._events.put(None)
+            self._sup_thread.join()
+            self._sup_thread = None
         # a submit that raced close() past the running check: cancel its
         # future rather than leave it forever pending
         for req in self._queue.pop_ready(self.max_batch):
@@ -198,12 +300,110 @@ class AsyncQueryEngine:
     def __exit__(self, *exc) -> None:
         self.close()
 
+    # -- watchdog / supervisor ---------------------------------------------
+    def _guarded(self, body, name: str, gen: int) -> None:
+        """Loop-thread wrapper: a dying loop becomes a crash event for
+        the supervisor instead of a silent thread exit that leaves every
+        outstanding ``result()`` hanging forever."""
+        try:
+            body()
+        except BaseException as exc:    # noqa: BLE001 — watchdog boundary
+            self._events.put(("crash", gen, name, exc))
+
+    def _supervisor_loop(self) -> None:
+        while True:
+            ev = self._events.get()
+            if ev is None:
+                return
+            _, gen, name, exc = ev
+            if gen != self._generation:
+                continue                # stale: peer of an already-handled
+            self._handle_crash(name, exc)   # crash, threads replaced
+
+    def _handle_crash(self, name: str, exc: BaseException) -> None:
+        self._generation += 1           # events from these threads: stale
+        self._halt = True
+        err = EngineCrashedError(
+            f"serving {name} thread died: {exc!r}", thread=name)
+        err.__cause__ = exc
+        self._crashed = err
+        self.stats.crashes += 1
+        self._m_crashes.inc()
+        self._queue.notify()            # unblock the scheduler's waits
+        self._inflight.put(None)        # unblock the extract's get()
+        for t in self._threads:
+            t.join(timeout=10.0)
+        # fail everything outstanding, in pipeline order: the batch the
+        # scheduler popped but never enqueued, the flushes in the device
+        # pipeline (incl. the one extract was unpacking), then the queue
+        staging, self._staging = self._staging, None
+        extracting, self._extracting = self._extracting, None
+        for req in (staging or []):
+            req.result._fail(err)
+        if extracting is not None:
+            for req in extracting[0]:
+                req.result._fail(err)
+        while True:
+            try:
+                item = self._inflight.get_nowait()
+            except _queue.Empty:
+                break
+            if item is None:
+                continue
+            for req in item[0]:
+                req.result._fail(err)
+        for req in self._queue.pop_ready(1 << 30):
+            req.result._fail(err)
+        self._m_queue_depth.set(0)
+        if self._stop or self.stats.restarts >= self.max_restarts:
+            return                      # terminal: submit now raises
+        # -- revive: fresh pipeline state, new loop threads -------------
+        self.stats.restarts += 1
+        self._m_restarts.inc()
+        self._slots = threading.Semaphore(self._depth)
+        self._inflight = _queue.Queue()
+        self._halt = False
+        self._crashed = None
+        self._spawn_loops()
+        # close the submit/crash race: anything pushed between the queue
+        # sweep above and the new scheduler starting is simply served
+
+    def health(self) -> dict:
+        """Liveness/pressure summary for the ``/healthz`` endpoint."""
+        lvl = 0 if self._ladder_ctl is None else self._ladder_ctl.level
+        status = "crashed" if self._crashed is not None else \
+            ("degraded" if lvl > 0 else "ok")
+        return {
+            "status": status,
+            "queue_depth": len(self._queue),
+            "max_queue": self._queue.capacity,
+            "degrade_level": lvl,
+            "degrade_rung": self._ladder[min(lvl, len(self._ladder) - 1)].name,
+            "restarts": self.stats.restarts,
+            "crashes": self.stats.crashes,
+            "shed": self.stats.shed,
+            "flushes": self.stats.flushes,
+            "queries": self.stats.queries,
+        }
+
     def warmup(self) -> dict:
         """Boot-time precompile of every (bucket, {plain, budget})
         program this engine can dispatch — no live request ever pays a
-        trace.  Returns ``{(bucket, variant): seconds}`` compile times."""
-        return _buckets.precompile(self.index, self.cfg, self.buckets,
-                                   with_budget=True)
+        trace.  With the degradation ladder armed this includes every
+        rung's program (which also materializes e.g. the sq8 store), so
+        stepping down under pressure never stalls on a trace.  Returns
+        ``{(bucket, variant): seconds}`` compile times."""
+        times: dict = {}
+        seen: set = set()
+        for i, rung in enumerate(self._ladder):
+            if rung.cfg in seen:
+                continue
+            seen.add(rung.cfg)
+            t = _buckets.precompile(self.index, rung.cfg, self.buckets,
+                                    with_budget=True)
+            for (b, variant), secs in t.items():
+                times[(b, variant if i == 0 else f"r{i}-{variant}")] = secs
+        return times
 
     # -- request path ------------------------------------------------------
     def submit(self, query: np.ndarray, *,
@@ -214,16 +414,44 @@ class AsyncQueryEngine:
         relative to now ("unset" = the engine default; None = no SLO).
         ``seed_vertex`` replaces the medoid seed (exploration-style
         callers add it to ``exclude`` themselves when the protocol hides
-        it)."""
+        it).
+
+        Typed failure surface: raises
+        :class:`~repro.resilience.RequestValidationError` for a malformed
+        query (never enqueued), :class:`~repro.resilience.OverloadError`
+        when the bounded queue rejects it, and
+        :class:`~repro.resilience.EngineCrashedError` when the serving
+        loops are dead beyond the supervisor's restart budget."""
+        if self._crashed is not None:
+            raise self._crashed
         if self._stop or not self._threads:
             raise RuntimeError("engine is not running (closed or never "
                                "started)")
+        if self._validate:
+            try:
+                q = validate_query(query, self.index.dim)
+            except RequestValidationError:
+                self.stats.invalid += 1
+                self._m_invalid.inc()
+                raise
+        else:
+            q = np.asarray(query, np.float32)
         dl_ms = self.default_deadline_ms if deadline_ms == "unset" \
             else deadline_ms
         deadline = None if dl_ms is None else clock.now() + dl_ms / 1e3
-        res = self._queue.push(np.asarray(query, np.float32),
-                               exclude=list(exclude),
-                               seed_vertex=seed_vertex, deadline=deadline)
+        try:
+            res = self._queue.push(q, exclude=list(exclude),
+                                   seed_vertex=seed_vertex,
+                                   deadline=deadline)
+        except OverloadError:
+            self.stats.shed += 1
+            self._m_shed.inc()
+            raise
+        # close the submit/crash race: a push that slipped in after the
+        # crash handler swept the queue would otherwise hang forever
+        if self._crashed is not None:
+            res._fail(self._crashed)
+            raise self._crashed
         self._m_queue_depth.set(len(self._queue))
         return res
 
@@ -256,6 +484,9 @@ class AsyncQueryEngine:
 
     def _scheduler_loop(self) -> None:
         while True:
+            if self._halt:
+                return                # crash path: supervisor owns cleanup
+            _faults.fire("scheduler.loop")
             if self._stop:
                 while True:           # drain: accepted requests complete
                     reqs = self._queue.pop_ready(self.max_batch)
@@ -270,7 +501,7 @@ class AsyncQueryEngine:
             if not self._slots.acquire(timeout=0.02):
                 continue              # pipeline full; recheck stop flag
             deadline_forced = False
-            while (not self._stop
+            while (not self._stop and not self._halt
                    and len(self._queue) < self.max_batch):
                 at, forced = self._flush_at()
                 now = clock.now()
@@ -292,25 +523,38 @@ class AsyncQueryEngine:
     def _dispatch(self, reqs: list[Request]) -> None:
         """Stage one bucketed flush and enqueue it (asynchronously — jax
         returns before the device finishes) for the extract thread."""
+        # _staging lets the crash handler fail a batch that was popped
+        # from the queue but never made it into the in-flight pipeline
+        self._staging = reqs
+        _faults.fire("scheduler.dispatch", batch=len(reqs))
         B = len(reqs)
         bucket = next(b for b in self.buckets if b >= B)
+        # degradation ladder: backlog left *after* popping this batch is
+        # the pressure signal; the whole flush dispatches at one rung
+        level = 0
+        if self._ladder_ctl is not None:
+            level = self._ladder_ctl.observe(len(self._queue))
+        rung = self._ladder[level]
         now = clock.now()
         expired = [r.deadline is not None and now > r.deadline for r in reqs]
         budget = None
-        if any(expired):
+        if any(expired) or rung.hop_budget is not None:
             # expired lanes run the partial-hop early extract; the rest
-            # (and the padding) are uncapped.  One budgeted program per
-            # bucket regardless of which lanes expired (traced operand).
-            budget = np.full(bucket, _buckets.NO_BUDGET, np.int32)
+            # (and the padding) run the rung's cap, or uncapped at the
+            # base rung.  One budgeted program per bucket regardless of
+            # which lanes expired (traced operand).
+            base = _buckets.NO_BUDGET if rung.hop_budget is None \
+                else rung.hop_budget
+            budget = np.full(bucket, base, np.int32)
             for i, ex in enumerate(expired):
                 if ex:
-                    budget[i] = self.partial_hops
+                    budget[i] = min(self.partial_hops, int(base))
         items = [_buckets.BatchItem(query=r.query, exclude=r.exclude,
                                     seed_vertex=r.seed_vertex) for r in reqs]
         qs, seeds, excl = _buckets.pad_batch(items, bucket,
                                              self.index.medoid(),
                                              self._exclude_width)
-        res = _buckets.dispatch(self.index, self.cfg, qs, seeds, excl,
+        res = _buckets.dispatch(self.index, rung.cfg, qs, seeds, excl,
                                 hop_budget=budget)
         flush_index = self.stats.flushes
         self.stats.flushes += 1
@@ -320,15 +564,21 @@ class AsyncQueryEngine:
         self._m_flushes.inc()
         self._m_queries.inc(B)
         self._m_queue_depth.set(len(self._queue))
+        if level > 0:
+            self.stats.degraded += B
+            self._m_degraded.inc(B)
         if self._sampler.active:          # one compare per flush at 0.0
             for r in reqs:                # single-threaded sampler use
                 r.result.sampled = self._sampler.take()
         for r in reqs:
+            r.result.degraded = level > 0
+            r.result.degrade_level = level
             r.result._mark_dispatched(flush_index)
         # in-flight count is bounded by the dispatch-slot semaphore
         # (acquired before the batch was popped), so this never blocks;
         # extract releases the slot once the flush is drained
         self._inflight.put((reqs, res, expired, bucket, clock.now()))
+        self._staging = None
 
     # -- extract thread ----------------------------------------------------
     def _extract_loop(self) -> None:
@@ -336,6 +586,10 @@ class AsyncQueryEngine:
             item = self._inflight.get()
             if item is None:
                 return
+            # _extracting mirrors _staging: if this loop dies mid-item,
+            # the crash handler fails the futures it had already dequeued
+            self._extracting = item
+            _faults.fire("extract.loop")
             reqs, res, expired, bucket, t0 = item
             B = len(reqs)
             ids = np.asarray(res.ids)      # device->host: blocks until the
@@ -386,5 +640,6 @@ class AsyncQueryEngine:
                                     - r.result.submitted_at) * 1e3,
                         result=r.result,
                         t_mono=r.result.submitted_at))
+            self._extracting = None
             self._slots.release()     # free the dispatch slot last, so a
             # newly formed batch sees this flush's arrivals in the queue

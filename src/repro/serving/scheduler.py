@@ -22,9 +22,10 @@ import collections
 import dataclasses
 import heapq
 import threading
-from typing import Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 from repro.obs import clock
+from repro.resilience.errors import OverloadError
 
 
 class CancelledError(RuntimeError):
@@ -34,11 +35,18 @@ class CancelledError(RuntimeError):
 class AsyncResult:
     """Thread-safe future for one submitted query.
 
-    States: pending -> dispatched -> done, or pending -> cancelled.
-    ``ids``/``dists`` are the per-request result rows; ``partial`` is True
-    when the request's deadline expired before dispatch and the engine
-    returned the best-so-far beam under the partial hop budget instead of
-    dropping it.
+    States: pending -> dispatched -> done, or pending -> cancelled, or
+    (pending | dispatched) -> failed.  A *failed* future carries a typed
+    exception in ``error`` (:class:`~repro.resilience.OverloadError` when
+    the bounded queue shed it, :class:`~repro.resilience.EngineCrashedError`
+    when a serving thread died while it was outstanding) which
+    :meth:`result` re-raises — callers never hang on a request the engine
+    can no longer serve.  ``ids``/``dists`` are the per-request result
+    rows; ``partial`` is True when the request's deadline expired before
+    dispatch and the engine returned the best-so-far beam under the
+    partial hop budget instead of dropping it; ``degraded``/
+    ``degrade_level`` record whether the ladder served it below the base
+    search program.
 
     The future doubles as the request's trace record: ``submitted_at`` /
     ``dispatched_at`` / ``device_done_at`` / ``completed_at`` are
@@ -50,7 +58,8 @@ class AsyncResult:
 
     __slots__ = ("_event", "_lock", "_state", "ids", "dists", "partial",
                  "submitted_at", "dispatched_at", "device_done_at",
-                 "completed_at", "deadline", "flush_index", "seq", "sampled")
+                 "completed_at", "deadline", "flush_index", "seq", "sampled",
+                 "error", "degraded", "degrade_level")
 
     def __init__(self, deadline: Optional[float] = None):
         self._event = threading.Event()
@@ -59,6 +68,9 @@ class AsyncResult:
         self.ids = None
         self.dists = None
         self.partial = False
+        self.error: Optional[BaseException] = None
+        self.degraded = False
+        self.degrade_level = 0
         self.submitted_at = clock.now()
         self.dispatched_at: Optional[float] = None
         self.device_done_at: Optional[float] = None
@@ -91,10 +103,29 @@ class AsyncResult:
         self._event.set()
         return True
 
+    def _fail(self, exc: BaseException) -> bool:
+        """Resolve the future with a typed error (shed / engine crash).
+
+        Valid from *pending* (queue shed it) and *dispatched* (a loop
+        thread died while the batch was in flight).  Returns False if the
+        future already resolved — completion wins races with failure."""
+        with self._lock:
+            if self._state not in ("pending", "dispatched"):
+                return False
+            self._state = "failed"
+            self.error = exc
+            self.completed_at = clock.now()
+        self._event.set()
+        return True
+
     # -- caller side -------------------------------------------------------
     @property
     def cancelled(self) -> bool:
         return self._state == "cancelled"
+
+    @property
+    def failed(self) -> bool:
+        return self._state == "failed"
 
     def done(self) -> bool:
         return self._event.is_set()
@@ -106,11 +137,15 @@ class AsyncResult:
 
     def result(self, timeout: Optional[float] = None):
         """Block for (ids, dists).  Raises :class:`CancelledError` for a
-        cancelled request, TimeoutError if the wait expires."""
+        cancelled request, the stored typed error for a failed one
+        (overload shed / engine crash), TimeoutError if the wait
+        expires."""
         if not self._event.wait(timeout):
             raise TimeoutError("result not ready")
         if self._state == "cancelled":
             raise CancelledError("request was cancelled before dispatch")
+        if self._state == "failed":
+            raise self.error
         return self.ids, self.dists
 
     @property
@@ -148,15 +183,43 @@ class AdmissionQueue:
     linger expiry).  In between, the scheduler's own timed waits poll the
     flush instant.  Deadlines are tracked in a lazy min-heap so
     :meth:`next_deadline` is O(log n) amortized, not a deque scan per
-    scheduler pass."""
+    scheduler pass.
 
-    def __init__(self, notify_at: Optional[int] = None):
+    With ``capacity`` set the queue is bounded and sheds under pressure
+    (``capacity=None`` keeps the historical unbounded behavior).  Two
+    policies:
+
+    - ``"reject"`` — a push that would exceed capacity raises
+      :class:`~repro.resilience.OverloadError`; queued work is never
+      disturbed.
+    - ``"drop"`` — deadline-aware: the request shed is the one that
+      would miss its SLO anyway — the *earliest-deadline* live request,
+      the incoming one included (a request with no deadline is never the
+      victim).  A queued victim's future fails with ``OverloadError``
+      (``shed_at="queue"``); if the incoming request is the most doomed,
+      the push itself raises (``shed_at="submit"``).  With no deadlines
+      anywhere the policy degenerates to reject.
+
+    The live count excludes requests already cancelled or shed (they
+    still occupy deque slots until ``pop_ready`` discards them), so the
+    recount is only paid on the already-slow overload path."""
+
+    def __init__(self, notify_at: Optional[int] = None,
+                 capacity: Optional[int] = None, shed_policy: str = "reject",
+                 on_shed: Optional[Callable[[Request], None]] = None):
+        if capacity is not None and capacity < 1:
+            raise ValueError(f"capacity must be >= 1 or None, got {capacity}")
+        if shed_policy not in ("reject", "drop"):
+            raise ValueError(f"unknown shed_policy {shed_policy!r}")
         self._dq: collections.deque[Request] = collections.deque()
         self._cv = threading.Condition()
         self._seq = 0
         self._head = 0            # seq of the oldest request still queued
         self._deadlines: list[tuple[float, int]] = []   # (deadline, seq)
         self.notify_at = notify_at
+        self.capacity = capacity
+        self.shed_policy = shed_policy
+        self.on_shed = on_shed
 
     def __len__(self) -> int:
         with self._cv:
@@ -166,7 +229,19 @@ class AdmissionQueue:
              seed_vertex: Optional[int] = None,
              deadline: Optional[float] = None) -> AsyncResult:
         res = AsyncResult(deadline=deadline)
+        victim: Optional[Request] = None
         with self._cv:
+            if self.capacity is not None and \
+                    len(self._dq) >= self.capacity:
+                victim = self._shed_for(deadline)
+                if victim is not None:
+                    # fail under _cv so pop_ready can't dispatch the
+                    # victim between selection and the state flip (the
+                    # result lock nests inside _cv, never the reverse)
+                    victim.result._fail(OverloadError(
+                        "shed from queue: a fuller queue arrived before "
+                        "your deadline", depth=self.capacity,
+                        capacity=self.capacity, shed_at="queue"))
             req = Request(query=query, result=res, seq=self._seq,
                           exclude=exclude, seed_vertex=seed_vertex)
             res.seq = req.seq
@@ -178,18 +253,44 @@ class AdmissionQueue:
             if n == 1 or (self.notify_at is not None
                           and n >= self.notify_at):
                 self._cv.notify_all()
+        if victim is not None and self.on_shed is not None:
+            # callback outside the lock; the victim stays in the deque
+            # (pop_ready discards it) so the seq-contiguity that
+            # next_deadline's lazy heap relies on is preserved
+            self.on_shed(victim)
         return res
+
+    def _shed_for(self, incoming_deadline: Optional[float]
+                  ) -> Optional[Request]:
+        """Called under ``_cv`` when the deque is at/over capacity.
+        Returns a queued victim to fail (admitting the incoming request),
+        or raises :class:`OverloadError` to reject the incoming one."""
+        live = [r for r in self._dq if r.result._state == "pending"]
+        if len(live) < self.capacity:
+            return None               # slack was cancelled/shed slots
+        depth = len(live)
+        if self.shed_policy == "drop":
+            with_dl = [r for r in live if r.deadline is not None]
+            if with_dl:
+                victim = min(with_dl, key=lambda r: r.deadline)
+                if incoming_deadline is None \
+                        or incoming_deadline > victim.deadline:
+                    return victim
+                # the incoming request is the most doomed: fall through
+        raise OverloadError(
+            f"admission queue full ({depth}/{self.capacity})",
+            depth=depth, capacity=self.capacity, shed_at="submit")
 
     def pop_ready(self, max_n: int) -> list[Request]:
         """Up to ``max_n`` oldest live requests, strict FIFO.  Requests
-        cancelled while queued are discarded here (their futures are
-        already set), so they never occupy a lane."""
+        cancelled or shed while queued are discarded here (their futures
+        are already set), so they never occupy a lane."""
         out: list[Request] = []
         with self._cv:
             while self._dq and len(out) < max_n:
                 req = self._dq.popleft()
                 self._head = req.seq + 1
-                if req.result.cancelled:
+                if req.result._state != "pending":
                     continue
                 out.append(req)
         return out
@@ -197,7 +298,7 @@ class AdmissionQueue:
     def oldest_submit_t(self) -> Optional[float]:
         with self._cv:
             for req in self._dq:
-                if not req.result.cancelled:
+                if req.result._state == "pending":
                     return req.result.submitted_at
         return None
 
@@ -210,14 +311,14 @@ class AdmissionQueue:
             h = self._deadlines
             while h and h[0][1] < self._head:
                 heapq.heappop(h)
-            # a cancelled-but-still-queued request: O(cancellations), and
-            # only when the earliest deadline is the cancelled one
+            # a cancelled/shed-but-still-queued request: O(dead entries),
+            # and only when the earliest deadline is a dead one
             while h and h[0][1] >= self._head:
                 dl, seq = h[0]
                 req = self._dq[seq - self._head] \
                     if seq - self._head < len(self._dq) else None
                 if req is not None and req.seq == seq \
-                        and req.result.cancelled:
+                        and req.result._state != "pending":
                     heapq.heappop(h)
                     continue
                 return dl

@@ -3,6 +3,13 @@ lifecycle — add / delete / refine / search / save / load — asserting the
 DEG structural invariants (Table 1) after EVERY step and bit-identical
 ``search_batch`` results across every save→load round trip.
 
+Every mutation is journaled to a WAL (persist/wal.py), and the walk
+includes crash rules: kill between records and recover from
+snapshot+WAL (must be bit-identical to the live index), tear the
+journal tail mid-append and recover from the surviving prefix.  The
+structural invariants are re-checked after every recovery like any
+other step.
+
 Runs under real Hypothesis (``RuleBasedStateMachine``) or the deterministic
 random-walk stub in ``conftest.py`` — same rules, same pass/fail contract.
 """
@@ -42,10 +49,15 @@ class LifecycleMachine(RuleBasedStateMachine):
     def setup(self, seed):
         self.rng = np.random.default_rng(seed)
         self.tmp = Path(tempfile.mkdtemp(prefix="deg-lifecycle-"))
+        self.wal = self.tmp / "wal.log"
+        self.base_snap = self.tmp / "base.npz"
         self.idx = DEGIndex(DIM, DEGParams(degree=DEGREE, k_ext=2 * DEGREE),
                             capacity=MAX_N)
+        # journal from the first mutation; recovery replays onto base_snap
+        self.idx.enable_wal(self.wal)
         # past the K_{d+1} bootstrap and big enough that deletes are legal
         self.idx.add(self._points(DEGREE + 4), wave_size=4)
+        self.idx.save(self.base_snap)
         self.queries = self.rng.normal(size=(4, DIM)).astype(np.float32)
 
     def teardown(self):
@@ -104,6 +116,45 @@ class LifecycleMachine(RuleBasedStateMachine):
         path = self.tmp / "swap.npz"
         self.idx.save(path)
         self.idx = DEGIndex.load(path)
+        # journaling must survive the swap: re-attach the WAL, and the
+        # fresh snapshot becomes the recovery base (its cursor is ahead
+        # of base_snap's, so replay just skips more prefix)
+        self.idx.enable_wal(self.wal)
+        shutil.copyfile(path, self.base_snap)
+
+    # -- crash / recovery rules ------------------------------------------
+    def _assert_recovered_equal(self, rec):
+        assert rec.n == self.idx.n
+        assert rec._wal_seq == self.idx._wal_seq
+        assert rec._rng.bit_generator.state == \
+            self.idx._rng.bit_generator.state
+        a_ids, a_d = _search_sig(self.idx, self.queries)
+        b_ids, b_d = _search_sig(rec, self.queries)
+        np.testing.assert_array_equal(a_ids, b_ids)
+        np.testing.assert_array_equal(a_d, b_d)
+
+    @rule()
+    def crash_recover(self):
+        """Kill between WAL records (the live index IS the state at the
+        last record boundary): snapshot + replay must reproduce it bit for
+        bit, and the walk continues on the recovered index."""
+        from repro.persist import recover
+
+        rec = recover(self.base_snap, self.wal, capacity=MAX_N)
+        self._assert_recovered_equal(rec)
+        self.idx = rec                 # WAL re-enabled by recover()
+
+    @rule()
+    def torn_tail_recover(self):
+        """Crash mid-append: a half-written record at the tail must be
+        truncated on recovery, landing on the complete-record prefix."""
+        from repro.persist import recover
+
+        with open(self.wal, "ab") as f:    # half a record header
+            f.write(b"\x52\x4c\x41\x57\x03\x00\x00")
+        rec = recover(self.base_snap, self.wal, capacity=MAX_N)
+        self._assert_recovered_equal(rec)
+        self.idx = rec
 
     # -- invariants (checked after every rule) ---------------------------
     @invariant()

@@ -1,0 +1,272 @@
+"""Crash-safe mutation WAL (persist/wal.py) + atomic snapshot writes.
+
+The recovery contract: ``load_index(snapshot) + replay_wal(wal)`` is
+**bit-identical** to the uninterrupted build — graph rows, vectors, the
+RNG stream, and search results — for a crash at ANY record boundary.
+Torn tails (crash mid-append) are truncated and replay proceeds;
+complete-but-corrupt records raise typed errors, never silently skip.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.build import DEGIndex, DEGParams
+from repro.persist import (WALCorruptionError, WALError, WALWriter,
+                           load_index, read_wal, recover, replay_wal,
+                           save_index)
+from repro.persist.wal import FILE_MAGIC
+from repro.resilience import FaultInjected, FaultPlan
+
+DIM = 6
+PARAMS = DEGParams(degree=6, k_ext=12)
+
+
+def _mk(capacity=96):
+    return DEGIndex(DIM, PARAMS, capacity=capacity)
+
+
+def _points(seed, k):
+    return np.random.default_rng(seed).normal(size=(k, DIM)).astype(
+        np.float32)
+
+
+def _mutate(idx, upto):
+    """A deterministic mutation script (add waves / remove / refine),
+    truncatable at any unit count via ``upto``."""
+    steps = [
+        lambda: idx.add(_points(1, 12), wave_size=4),
+        lambda: idx.add(_points(2, 7), wave_size=3),
+        lambda: idx.remove([3, 5]),
+        lambda: idx.refine(6),               # seed drawn from the stream
+        lambda: idx.add(_points(3, 5), wave_size=2),
+        lambda: idx.refine(4, seed=77),      # explicit seed
+        lambda: idx.remove([1]),
+    ]
+    for step in steps[:upto]:
+        step()
+
+
+def _sig(idx):
+    n = idx.n
+    qs = _points(9, 5)
+    res = idx.search_batch(qs, k=4, eps=0.1)
+    return (np.asarray(idx.builder.adjacency[:n]).copy(),
+            np.asarray(idx.builder.weights[:n]).copy(),
+            np.asarray(idx.vectors[:n]).copy(),
+            np.asarray(res.ids).copy(), np.asarray(res.dists).copy(),
+            idx._rng.bit_generator.state, idx._wal_seq)
+
+
+def _assert_same(a, b):
+    sa, sb = _sig(a), _sig(b)
+    for x, y in zip(sa[:5], sb[:5]):
+        np.testing.assert_array_equal(x, y)
+    assert sa[5] == sb[5], "RNG streams diverged"
+    assert sa[6] == sb[6], "WAL cursors diverged"
+
+
+def test_recovery_bit_identical_at_every_boundary(tmp_path):
+    """Snapshot early, mutate on, then recover(snapshot, wal) after each
+    further unit: the recovered index must equal the live one bit for bit
+    — rows, RNG stream, search results — at EVERY record boundary."""
+    for upto in range(2, 8):
+        wal = tmp_path / f"wal{upto}.log"
+        snap = tmp_path / f"snap{upto}.npz"
+        idx = _mk()
+        idx.enable_wal(wal)
+        idx.add(_points(0, 10), wave_size=4)  # bootstrap + first waves
+        save_index(idx, snap)                 # cursor mid-history
+        _mutate(idx, upto)
+        rec = recover(snap, wal, capacity=96)
+        _assert_same(idx, rec)
+
+
+def test_recovered_index_continues_identically(tmp_path):
+    """Post-recovery mutations must follow the same trajectory as the
+    index that never crashed — the replayed RNG stream is live, not just
+    a display copy."""
+    wal = tmp_path / "wal.log"
+    snap = tmp_path / "snap.npz"
+    idx = _mk()
+    idx.enable_wal(wal)
+    idx.add(_points(0, 10), wave_size=4)
+    save_index(idx, snap)
+    _mutate(idx, 4)
+    rec = recover(snap, wal, capacity=96)
+    for z in (idx, rec):
+        z.add(_points(5, 6), wave_size=3)
+        z.refine(5)                           # both draw from their stream
+    _assert_same(idx, rec)
+
+
+def test_uninterrupted_reference_matches_replay(tmp_path):
+    """The journal adds no semantics: a second index running the same
+    script with its own WAL (never crashed, never replayed) lands in the
+    identical state."""
+    wal_a, wal_b = tmp_path / "a.log", tmp_path / "b.log"
+    snap = tmp_path / "a.npz"
+    a, b = _mk(), _mk()
+    for z, w in ((a, wal_a), (b, wal_b)):
+        z.enable_wal(w)
+        z.add(_points(0, 10), wave_size=4)
+    save_index(a, snap)
+    _mutate(a, 7)
+    _mutate(b, 7)
+    rec = recover(snap, wal_a, capacity=96)
+    _assert_same(b, rec)
+
+
+def test_wal_seq_cursor_skips_pre_snapshot_records(tmp_path):
+    """Records before the snapshot cursor are skipped, not re-applied —
+    replaying the full journal onto a mid-history snapshot must not
+    double-apply the prefix."""
+    wal = tmp_path / "wal.log"
+    snap = tmp_path / "snap.npz"
+    idx = _mk()
+    idx.enable_wal(wal)
+    idx.add(_points(0, 10), wave_size=4)
+    _mutate(idx, 3)
+    save_index(idx, snap)                     # cursor past several records
+    n_before = idx.n
+    idx.refine(3)                             # one post-snapshot record
+    rec = recover(snap, wal, capacity=96)
+    _assert_same(idx, rec)
+    assert rec.n == idx.n and idx.n != n_before + 10  # prefix not re-added
+
+
+def test_torn_tail_truncated_and_writer_reattaches(tmp_path):
+    wal = tmp_path / "wal.log"
+    w = WALWriter(wal)
+    w.append(0, "add", {"wave_size": 2}, {"points": _points(0, 4)})
+    w.append(1, "refine", {"iterations": 3, "seed": 5, "drew": False}, {})
+    w.close()
+    good = os.path.getsize(wal)
+    with open(wal, "ab") as f:                # crash mid-append: half a
+        f.write(b"\x52\x4c\x41\x57\x07\x00")  # record header then nothing
+    recs = read_wal(wal)
+    assert [r.seq for r in recs] == [0, 1]    # complete prefix survives
+    assert os.path.getsize(wal) == good       # torn bytes truncated away
+    w2 = WALWriter(wal)                       # writer re-attaches cleanly
+    w2.append(2, "refine", {"iterations": 1, "seed": 9, "drew": False}, {})
+    w2.close()
+    assert [r.seq for r in read_wal(wal)] == [0, 1, 2]
+
+
+def test_torn_tail_mid_payload(tmp_path):
+    wal = tmp_path / "wal.log"
+    w = WALWriter(wal)
+    w.append(0, "add", {"wave_size": 2}, {"points": _points(0, 4)})
+    w.close()
+    data = open(wal, "rb").read()
+    with open(wal, "wb") as f:                # payload cut short
+        f.write(data[:-7])
+    assert read_wal(wal) == []
+    assert os.path.getsize(wal) == len(FILE_MAGIC)
+
+
+def test_corrupt_record_raises_typed(tmp_path):
+    wal = tmp_path / "wal.log"
+    w = WALWriter(wal)
+    w.append(0, "add", {"wave_size": 2}, {"points": _points(0, 4)})
+    w.close()
+    data = bytearray(open(wal, "rb").read())
+    data[-3] ^= 0xFF                          # bit rot inside the payload
+    open(wal, "wb").write(bytes(data))
+    with pytest.raises(WALCorruptionError):
+        read_wal(wal)
+    # corruption is NOT a torn tail: the file must not be truncated
+    assert open(wal, "rb").read() == bytes(data)
+
+
+def test_bad_file_magic_raises(tmp_path):
+    wal = tmp_path / "wal.log"
+    open(wal, "wb").write(b"NOTAWAL0" + b"x" * 40)
+    with pytest.raises(WALError):
+        read_wal(wal)
+    with pytest.raises(WALError):
+        WALWriter(wal)
+
+
+def test_journal_gap_raises(tmp_path):
+    wal = tmp_path / "wal.log"
+    w = WALWriter(wal)
+    w.append(0, "refine", {"iterations": 1, "seed": 3, "drew": False}, {})
+    w.append(2, "refine", {"iterations": 1, "seed": 4, "drew": False}, {})
+    w.close()
+    idx = _mk()
+    idx.add(_points(0, 10), wave_size=4)      # un-journaled: cursor 0
+    with pytest.raises(WALError, match="gap"):
+        replay_wal(idx, wal)
+
+
+def test_crash_at_record_boundary_via_fault_hook(tmp_path):
+    """Kill the process (simulated) at the WAL-append hook: the unit that
+    never journaled is also never applied, and recovery lands exactly on
+    the journaled prefix — the crashed live index."""
+    wal = tmp_path / "wal.log"
+    snap = tmp_path / "snap.npz"
+    idx = _mk()
+    idx.enable_wal(wal)
+    idx.add(_points(0, 10), wave_size=4)
+    save_index(idx, snap)
+    # the 3rd post-snapshot append dies before any bytes hit the file
+    with FaultPlan().kill("wal.append", at=idx._wal_seq + 3):
+        with pytest.raises(FaultInjected):
+            _mutate(idx, 7)
+    rec = recover(snap, wal, capacity=96)
+    _assert_same(idx, rec)                    # == the surviving prefix
+
+
+def test_atomic_snapshot_crash_mid_save(tmp_path):
+    """A crash between writing the tmp file and the rename must leave the
+    previous snapshot byte-identical and loadable, with no tmp litter."""
+    snap = tmp_path / "snap.npz"
+    idx = _mk()
+    idx.add(_points(0, 12), wave_size=4)
+    save_index(idx, snap)
+    v1 = open(snap, "rb").read()
+    idx.refine(3, seed=1)
+    with FaultPlan().kill("snapshot.mid_save", at=1):
+        with pytest.raises(FaultInjected):
+            save_index(idx, snap)
+    assert open(snap, "rb").read() == v1      # predecessor untouched
+    assert [p for p in os.listdir(tmp_path) if ".tmp" in p] == []
+    old = load_index(snap)                    # and still loadable
+    assert old.n == 12
+
+
+def test_sharded_manifest_save_is_atomic(tmp_path):
+    """The sharded manifest funnels through the same tmp+rename commit —
+    a crash mid-save keeps the previous manifest intact."""
+    from repro.distributed.index import ShardedDEG, build_sharded_deg
+
+    sh = build_sharded_deg(_points(0, 24), 2, PARAMS, wave_size=4)
+    path = tmp_path / "sharded.npz"
+    sh.save(path)
+    v1 = open(path, "rb").read()
+    with FaultPlan().kill("snapshot.mid_save", at=1):
+        with pytest.raises(FaultInjected):
+            sh.save(path)
+    assert open(path, "rb").read() == v1
+    assert ShardedDEG.load(path).n_total == 24
+
+
+def test_checkpoint_not_written_mid_journaled_op(tmp_path):
+    """Checkpoint ticks inside a journaled remove/refine are suppressed:
+    a snapshot may only capture record boundaries, or its cursor would
+    cover a half-applied record."""
+    wal = tmp_path / "wal.log"
+    ckpt = tmp_path / "ckpt.npz"
+    idx = _mk()
+    idx.enable_wal(wal)
+    idx.add(_points(0, 16), wave_size=4)
+    idx.enable_checkpoints(ckpt, every_waves=1)   # tick on every boundary
+    before = os.path.getmtime(ckpt) if os.path.exists(ckpt) else None
+    idx.refine(8)                             # refine ticks are suppressed
+    after = os.path.getmtime(ckpt) if os.path.exists(ckpt) else None
+    assert before == after
+    idx.add(_points(4, 4), wave_size=2)       # wave boundaries still tick
+    assert os.path.exists(ckpt)
+    rec = recover(ckpt, wal, capacity=96)
+    _assert_same(idx, rec)
