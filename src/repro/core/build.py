@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 from typing import Optional, Sequence
 
 import jax
@@ -98,6 +99,16 @@ class DEGParams:
             raise ValueError("k_ext must be >= degree (paper Sec. 5.2)")
 
 
+def _locked(fn):
+    """Serialize a mutator on the index's mutation lock (re-entrant, so
+    mutators may call each other and ``publish`` from inside)."""
+    @functools.wraps(fn)
+    def wrapper(self, *args, **kwargs):
+        with self._mutex:
+            return fn(self, *args, **kwargs)
+    return wrapper
+
+
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _write_rows(buf: jax.Array, rows: jax.Array, start: jax.Array) -> jax.Array:
     return jax.lax.dynamic_update_slice(buf, rows, (start, jnp.int32(0)))
@@ -146,6 +157,17 @@ class DEGIndex:
         self._wal_seq = 0
         self._wal_replay = None
         self._wal_op_active = False
+        # live-mutation-under-serving state (core/epoch.py): mutators
+        # serialize on _mutex (re-entrant — publish() runs inside remove's
+        # lock scope); _epochs holds the refcounted published snapshots
+        # once enable_publishing() ran; quarantine is the scrubber's set of
+        # damaged vertices, excluded from published seeds/results until
+        # repaired and re-audited
+        self._mutex = threading.RLock()
+        self._epochs = None
+        self.quarantine: set[int] = set()
+        self._publish_every_chunks = 0
+        self._refine_chunk_counter = 0
 
     # -- sizes -------------------------------------------------------------
     @property
@@ -193,7 +215,117 @@ class DEGIndex:
         ``builder.freeze()`` for a snapshot that must survive mutations."""
         return self.builder.device_graph()
 
+    # -- epoch publication (core/epoch.py; live mutation under serving) ------
+    @property
+    def mutation_lock(self) -> threading.RLock:
+        """Re-entrant lock every mutator holds; external writers (the
+        scrubber, background refinement threads) take it around any direct
+        builder surgery so a ``publish()`` can never capture mid-surgery
+        state."""
+        return self._mutex
+
+    @property
+    def publishing(self) -> bool:
+        return self._epochs is not None
+
+    def enable_publishing(self, publish_now: bool = True,
+                          every_chunks: int = 0):
+        """Turn on epoch publication: serving flushes will search
+        refcounted immutable snapshots (``acquire_view``) instead of the
+        live donation-invalidated device cache, making the index safely
+        mutable while an async engine is live.  ``every_chunks > 0``
+        additionally republishes every that-many refine chunks so long
+        sweeps surface improvements mid-run.  Returns the epoch manager."""
+        from .epoch import EpochManager
+
+        with self._mutex:
+            if self._epochs is None:
+                self._epochs = EpochManager(self)
+            self._publish_every_chunks = int(every_chunks)
+            if publish_now and self.builder is not None:
+                self.publish()
+        return self._epochs
+
+    def publish(self) -> int:
+        """Atomically publish the current graph + vector state as a new
+        epoch (at a mutation-batch boundary — the caller guarantees the
+        Table-1 window, i.e. not mid-surgery).  Journals an
+        ``epoch_publish`` record when a WAL is attached and the publish is
+        not nested inside a journaled op, so ``recover()`` lands exactly on
+        the last published epoch.  Returns the new epoch number."""
+        from repro.obs.metrics import EPOCH_GAUGE, EPOCH_PUBLISH_TOTAL
+        from repro.resilience import faults as _faults
+
+        from .epoch import PublishedEpoch
+
+        if self._epochs is None:
+            raise RuntimeError("enable_publishing() first")
+        if self.builder is None:
+            raise RuntimeError("nothing to publish: index is empty")
+        with self._mutex:
+            e = self._epochs.next_epoch
+            gen = self.builder.generation
+            quar = tuple(sorted(q for q in self.quarantine if q < self.n))
+            # mid-op publishes (refine-chunk ticks) are serving-only: the
+            # enclosing journaled record already replays the mutations, and
+            # a nested record would break the seq/verify protocol
+            if not self._wal_op_active and self._wal_replay is None:
+                self._wal_record("epoch_publish",
+                                 {"epoch": int(e), "n": int(self.n),
+                                  "gen": int(gen),
+                                  "quarantine": [int(q) for q in quar]}, {})
+            ep = PublishedEpoch(
+                epoch=e, graph=self.builder.freeze(),
+                vectors=jnp.array(self._dev_vectors), n=self.n,
+                medoid_id=self._publish_medoid(quar),
+                metric=self.params.metric, params=self.params,
+                quarantine=quar, builder_gen=gen)
+            _faults.fire("publish.swap", epoch=e, n=self.n)
+            self._epochs.publish(ep)
+        if self.metrics is not None:
+            self.metrics.gauge(EPOCH_GAUGE).set(e)
+            self.metrics.counter(EPOCH_PUBLISH_TOTAL).inc()
+        return e
+
+    def _publish_medoid(self, quarantine) -> int:
+        """The entry vertex a published epoch seeds from: the cached medoid
+        unless it is quarantined, in which case the nearest-to-centroid
+        healthy vertex."""
+        m = self.medoid()
+        bad = set(quarantine)
+        if m not in bad:
+            return m
+        vecs = self.vectors[: self.n]
+        dist = np.linalg.norm(vecs - vecs.mean(axis=0), axis=1)
+        dist[list(bad)] = np.inf
+        return int(np.argmin(dist))
+
+    def acquire_view(self):
+        """The view a serving flush searches.  With publishing enabled:
+        the current epoch, refcounted — the caller MUST pass it back to
+        :meth:`release_view` once results are on host.  Without publishing
+        (the historical single-writer mode) the index itself is returned
+        and release is a no-op."""
+        if self._epochs is not None:
+            return self._epochs.acquire()
+        return self
+
+    def release_view(self, view) -> None:
+        if self._epochs is not None and view is not self and view is not None:
+            self._epochs.release(view)
+
+    def _publish_tick(self) -> None:
+        """Refine-chunk boundary hook (core/optimize.py): republish every
+        ``every_chunks`` chunks when configured via
+        ``enable_publishing(every_chunks=...)``."""
+        if self._epochs is None or self._publish_every_chunks <= 0:
+            return
+        self._refine_chunk_counter += 1
+        if self._refine_chunk_counter % self._publish_every_chunks == 0:
+            self.publish()
+
     # -- insertion -----------------------------------------------------------
+    @_locked
     def add(self, points: np.ndarray, wave_size: int = 1) -> None:
         """Insert points (Alg. 3). ``wave_size>1`` enables bulk build."""
         points = np.asarray(points, dtype=np.float32)
@@ -445,6 +577,7 @@ class DEGIndex:
         return [(int(i), float(ds[i])) for i in order if int(i) not in exclude]
 
     # -- deletion (beyond-paper: completes "fully dynamic", Table 1) --------
+    @_locked
     def remove(self, ids, refine_after: int = 0) -> int:
         """Delete vertices preserving regularity/connectivity (no
         tombstones); see core/delete.py. Returns the number deleted.
@@ -467,6 +600,7 @@ class DEGIndex:
             self._wal_op_active = False
 
     # -- continuous refinement (Alg. 5 driver) -------------------------------
+    @_locked
     def refine(self, iterations: int, seed: Optional[int] = None) -> int:
         """Continuous edge optimization (Alg. 5) over ``iterations`` random
         vertices, via the *batched* candidate-search path: each chunk of

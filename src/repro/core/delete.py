@@ -156,6 +156,17 @@ def delete_vertex(index: DEGIndex, v: int, *, rng=None,
     b.clear_vertex(last)           # marks the row dirty for the device sync
     b.n -= 1
 
+    # quarantine ids (scrubber state) track the compaction remap: the
+    # deleted vertex leaves the set, and if the moved last vertex was
+    # quarantined its damage now lives in slot v
+    q = index.quarantine
+    if q:
+        q.discard(v)
+        if last in q:
+            q.discard(last)
+            if v != last:
+                q.add(v)
+
     if refine_after:
         # repair ride-along: one batched Alg. 5 sweep over the re-paired
         # neighbors (a single prefetch device call via the beam engine)

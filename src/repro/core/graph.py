@@ -109,6 +109,14 @@ class GraphBuilder:
         self._dev_adj = None          # device cache of adjacency/weights
         self._dev_w = None
         self._dirty: set[int] = set() # host rows ahead of the device cache
+        # Monotonic mutation counter: bumped on every host-side write
+        # (including bulk loads and capacity growth).  Epoch publication
+        # stamps this onto each published snapshot so a reader can prove
+        # which graph state a flush actually searched — the guard against
+        # the stale-epoch hazard where a cached device twin silently mixes
+        # rows from before and after a mutation.
+        self._gen = 0
+        self._dev_sync_gen = -1       # generation the device cache matches
 
     # -- basic accessors -------------------------------------------------
     @property
@@ -129,6 +137,21 @@ class GraphBuilder:
 
     def vertex_degree(self, v: int) -> int:
         return int((self.adjacency[v] != INVALID).sum())
+
+    @property
+    def generation(self) -> int:
+        """Monotonic mutation counter of the host graph (see
+        ``_init_device_state``); equal generations imply identical content
+        under the single-writer lock discipline."""
+        return self._gen
+
+    def device_generation(self) -> int:
+        """Generation the cached device buffers correspond to, or -1 when
+        no cache exists.  ``device_generation() == generation`` iff a
+        ``device_graph()`` call right now would be a pure cache hit."""
+        if self._dev_adj is None:
+            return -1
+        return self._dev_sync_gen if not self._dirty else -1
 
     def edge_slot(self, u: int, v: int) -> int:
         """Slot of ``v`` in ``u``'s row, or -1 — the one lookup shared by
@@ -152,11 +175,13 @@ class GraphBuilder:
         """Record host-side row writes so the next ``device_graph()`` can
         re-sync the device cache.  Mutator methods call this themselves;
         callers writing ``adjacency`` / ``weights`` directly must too."""
+        self._gen += 1
         if self._dev_adj is not None:
             self._dirty.update(int(r) for r in rows)
 
     def invalidate_device(self) -> None:
         """Drop the device cache entirely (bulk host rewrites)."""
+        self._gen += 1
         self._drop_cache()
         self._dev_adj = self._dev_w = None
         self._dirty = set()
@@ -185,6 +210,7 @@ class GraphBuilder:
             self._dev_adj = jnp.asarray(self.adjacency)
             self._dev_w = jnp.asarray(self.weights)
             self._dirty = set()
+            self._dev_sync_gen = self._gen
         elif self._dirty:
             rows = np.fromiter(self._dirty, dtype=np.int32)
             if rows.size * _FULL_SYNC_FRACTION >= self.capacity:
@@ -202,6 +228,7 @@ class GraphBuilder:
                     jnp.asarray(self.adjacency[rows]),
                     jnp.asarray(self.weights[rows]))
             self._dirty = set()
+            self._dev_sync_gen = self._gen
         return DEGraph(adjacency=self._dev_adj, weights=self._dev_w,
                        n=jnp.asarray(self.n, dtype=jnp.int32))
 
@@ -297,6 +324,7 @@ class GraphBuilder:
             raise RuntimeError("capacity exhausted; grow() first")
         v = self.n
         self.n += 1
+        self._gen += 1                 # n is part of the graph content
         return v
 
     def grow(self, new_capacity: int) -> None:

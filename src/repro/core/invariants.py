@@ -7,6 +7,20 @@ them after every construction / optimization operation:
 * undirectedness: ``v in N(u)  <=>  u in N(v)`` with equal weights;
 * no self loops, no duplicate edges;
 * connectivity: a single connected component (Euler-cycle argument, Sec. 5.1).
+
+The checks are vectorized (numpy sort/searchsorted for the edge bijection,
+a frontier sweep for connectivity) so the online scrubber and the stateful
+lifecycle suite can assert Table 1 at realistic ``n`` without the audit
+dominating runtime.  The original per-edge Python loops are kept as
+``*_loop`` references for the slow-marked differential tests.  Unlike the
+loop versions (which assume ids are in range and will raise on garbage),
+the vectorized versions are corruption-tolerant: an out-of-range neighbor
+id makes the check return ``False`` instead of crashing — a requirement
+for auditing a live index that may hold damaged rows.
+
+``audit_rows`` is the scrubber's chunked entry point: it returns a per-row
+reason bitmask instead of a single bool so quarantine decisions and repair
+can be targeted at the damaged vertices only.
 """
 from __future__ import annotations
 
@@ -15,6 +29,16 @@ from collections import deque
 import numpy as np
 
 from .graph import GraphBuilder, DEGraph, INVALID
+
+# ``audit_rows`` reason bits (a row may carry several).
+BAD_RANGE = np.uint8(1)     # neighbor id outside [0, n)
+BAD_SELF = np.uint8(2)      # self loop
+BAD_DUP = np.uint8(4)       # duplicate neighbor in the row
+BAD_DEGREE = np.uint8(8)    # valid-slot count != d (regularity breach)
+BAD_ASYM = np.uint8(16)     # neighbor does not list this vertex back
+BAD_WEIGHT = np.uint8(32)   # reverse edge exists but weights disagree
+
+_W_RTOL, _W_ATOL = 1e-5, 1e-6
 
 
 def _as_builder(g) -> GraphBuilder:
@@ -33,6 +57,40 @@ def check_regular(g, *, allow_partial: bool = False) -> bool:
 
 
 def check_undirected(g) -> bool:
+    """Vectorized edge-bijection check: every directed entry ``u -> v`` has
+    exactly one matching ``v -> u`` with the same weight.  Implemented by
+    sorting the forward edge keys and binary-searching each reversed key —
+    O(E log E) numpy work instead of the per-edge Python scan."""
+    b = _as_builder(g)
+    n = b.n
+    if n == 0:
+        return True
+    adj = b.adjacency[:n]
+    valid = adj != INVALID
+    vs = adj[valid].astype(np.int64)
+    if vs.size == 0:
+        return True
+    if (vs < 0).any() or (vs >= n).any():
+        return False                       # corrupt id: trivially asymmetric
+    us = np.broadcast_to(np.arange(n, dtype=np.int64)[:, None],
+                         adj.shape)[valid]
+    ws = b.weights[:n][valid]
+    key = us * n + vs
+    order = np.argsort(key, kind="stable")
+    skey = key[order]
+    if skey.size > 1 and (skey[1:] == skey[:-1]).any():
+        return False                       # duplicate entry breaks bijection
+    pos = np.searchsorted(skey, vs * n + us)
+    if (pos >= skey.size).any() or (skey[pos] != vs * n + us).any():
+        return False                       # some reverse edge is missing
+    return bool(np.isclose(ws[order][pos], ws,
+                           rtol=_W_RTOL, atol=_W_ATOL).all())
+
+
+def check_undirected_loop(g) -> bool:
+    """Reference O(n*d*d) implementation — differential oracle for
+    :func:`check_undirected` (slow-marked tests only).  Assumes neighbor
+    ids are in range."""
     b = _as_builder(g)
     for u in range(b.n):
         for s, v in enumerate(b.adjacency[u]):
@@ -42,30 +100,70 @@ def check_undirected(g) -> bool:
             back = np.nonzero(b.adjacency[v] == u)[0]
             if back.size != 1:
                 return False
-            if not np.isclose(b.weights[v, back[0]], b.weights[u, s], rtol=1e-5,
-                              atol=1e-6):
+            if not np.isclose(b.weights[v, back[0]], b.weights[u, s],
+                              rtol=_W_RTOL, atol=_W_ATOL):
                 return False
     return True
 
 
 def check_no_self_loops(g) -> bool:
     b = _as_builder(g)
-    for u in range(b.n):
-        if (b.adjacency[u] == u).any():
-            return False
-    return True
+    if b.n == 0:
+        return True
+    adj = b.adjacency[: b.n]
+    return not bool((adj == np.arange(b.n)[:, None]).any())
 
 
 def check_no_duplicate_edges(g) -> bool:
     b = _as_builder(g)
-    for u in range(b.n):
-        row = [int(v) for v in b.adjacency[u] if v != INVALID]
-        if len(row) != len(set(row)):
-            return False
-    return True
+    if b.n == 0:
+        return True
+    srt = np.sort(b.adjacency[: b.n], axis=1)
+    dup = (srt[:, 1:] == srt[:, :-1]) & (srt[:, 1:] != INVALID)
+    return not bool(dup.any())
+
+
+def component_labels(g) -> np.ndarray:
+    """Connected-component label per active vertex (0-based, in discovery
+    order) via a vectorized frontier sweep.  Out-of-range neighbor ids are
+    ignored, so this is safe on a corrupted graph."""
+    b = _as_builder(g)
+    n = b.n
+    labels = np.full(n, -1, dtype=np.int64)
+    if n == 0:
+        return labels
+    adj = b.adjacency[:n]
+    comp = 0
+    cursor = 0
+    while True:
+        unseen = np.flatnonzero(labels[cursor:] < 0)
+        if unseen.size == 0:
+            break
+        start = cursor + int(unseen[0])
+        cursor = start
+        labels[start] = comp
+        frontier = np.array([start], dtype=np.int64)
+        while frontier.size:
+            nxt = adj[frontier].reshape(-1)
+            nxt = nxt[(nxt >= 0) & (nxt < n)].astype(np.int64)
+            nxt = np.unique(nxt)
+            nxt = nxt[labels[nxt] < 0]
+            labels[nxt] = comp
+            frontier = nxt
+        comp += 1
+    return labels
 
 
 def connected_components(g) -> int:
+    b = _as_builder(g)
+    if b.n == 0:
+        return 0
+    return int(component_labels(b).max()) + 1
+
+
+def connected_components_loop(g) -> int:
+    """Reference Python-BFS implementation — differential oracle for
+    :func:`connected_components` (slow-marked tests only)."""
     b = _as_builder(g)
     if b.n == 0:
         return 0
@@ -88,6 +186,56 @@ def connected_components(g) -> int:
 
 def check_connected(g) -> bool:
     return connected_components(g) <= 1
+
+
+def unreachable_vertices(g, entry: int = 0) -> np.ndarray:
+    """Active vertices not reachable from ``entry`` (ascending ids).
+    Corruption-tolerant like :func:`component_labels`."""
+    b = _as_builder(g)
+    if b.n == 0:
+        return np.empty(0, dtype=np.int64)
+    labels = component_labels(b)
+    return np.flatnonzero(labels != labels[int(entry)])
+
+
+def audit_rows(b: GraphBuilder, rows) -> np.ndarray:
+    """Chunked Table-1 audit for the online scrubber: a ``uint8`` reason
+    bitmask per requested row (``0`` = clean; see the ``BAD_*`` bits).
+
+    All row-local properties (range / self loop / duplicates / regularity)
+    plus reciprocity and weight agreement of every listed edge are checked
+    with batched numpy gathers — no Python per-edge loop.  A dangling
+    *reverse* entry (``v`` lists ``u`` but ``u`` does not list ``v``) is
+    flagged on ``v``'s row, so a full sweep over all rows covers both ends
+    of every broken edge even though each chunk only looks outward.
+    """
+    rows = np.asarray(rows, dtype=np.int64).reshape(-1)
+    out = np.zeros(rows.size, dtype=np.uint8)
+    n, d = b.n, b.degree
+    if rows.size == 0 or n == 0:
+        return out
+    adj = b.adjacency[rows]                     # (R, d)
+    w = b.weights[rows]
+    valid = adj != INVALID
+    out[valid.sum(axis=1) != d] |= BAD_DEGREE
+    in_range = valid & (adj >= 0) & (adj < n)
+    out[(valid & ~in_range).any(axis=1)] |= BAD_RANGE
+    out[(adj == rows[:, None]).any(axis=1)] |= BAD_SELF
+    srt = np.sort(adj, axis=1)
+    dup = (srt[:, 1:] == srt[:, :-1]) & (srt[:, 1:] != INVALID)
+    out[dup.any(axis=1)] |= BAD_DUP
+    # reciprocity + weight agreement, only over in-range entries (the rest
+    # are already flagged BAD_RANGE and would poison the gather)
+    safe = np.where(in_range, adj, 0)
+    back = b.adjacency[safe]                    # (R, d, d) gathered rows
+    match = back == rows[:, None, None]
+    has_back = match.any(axis=2)
+    out[(in_range & ~has_back).any(axis=1)] |= BAD_ASYM
+    slot = np.argmax(match, axis=2)             # first matching back slot
+    bw = b.weights[safe, slot]
+    w_ok = np.isclose(bw, w, rtol=_W_RTOL, atol=_W_ATOL)
+    out[(in_range & has_back & ~w_ok).any(axis=1)] |= BAD_WEIGHT
+    return out
 
 
 def assert_valid_deg(g, *, context: str = "") -> None:

@@ -247,8 +247,11 @@ def refine_sweep(index: DEGIndex, vertices: Sequence[int], *,
         t_chunk = clock.now()
         if c0:
             # chunk boundary = invariant-clean point; same checkpoint
-            # cadence as _insert_wave (persist/snapshot.py)
+            # cadence as _insert_wave (persist/snapshot.py).  Epoch
+            # republish ticks ride the same boundary so long sweeps
+            # surface improvements to live readers mid-run.
             index._checkpoint_tick()
+            index._publish_tick()
         verts_c = verts[c0:c0 + chunk]
         # batched Alg. 2: conformity of every chunk edge in ONE device call,
         # cached for the chunk instead of a host neighbor scan per vertex

@@ -33,6 +33,15 @@ and ``--faults SPEC`` installs a deterministic fault plan
 (``point:op[=arg][@n]`` — the chaos-smoke CI job's hook).  Shed /
 invalid / crashed submissions are counted, never silently dropped, and
 the run ends with one greppable ``resilience:`` summary line.
+
+Live mutation (--engine async): ``--refine-while-serving N`` runs a
+background continuous-refinement writer that republishes a fresh epoch
+per tick, ``--scrub-every S`` runs the online integrity scrubber
+(audit / quarantine / repair / re-admit), and ``--inject-corruption K``
+seeds adjacency damage the scrubber must heal (the scrub-smoke CI
+hook).  Either flag enables epoch publication: readers serve immutable
+published snapshots while writers mutate the live builder.  The run
+ends with greppable ``scrub:`` and ``invariants:`` summary lines.
 """
 from __future__ import annotations
 
@@ -144,6 +153,19 @@ def main() -> None:
                     "(see resilience.faults.FaultPlan.parse)")
     ap.add_argument("--fault-seed", type=int, default=0,
                     help="seed for probabilistic fault-plan rules")
+    ap.add_argument("--refine-while-serving", type=int, default=0,
+                    help="run N continuous-refinement iterations per "
+                    "background tick while the async engine serves, "
+                    "publishing a fresh epoch after each tick (0 = off; "
+                    "enables epoch publication)")
+    ap.add_argument("--scrub-every", type=float, default=0.0,
+                    help="run the online integrity scrubber (audit / "
+                    "quarantine / repair / re-admit) every S seconds "
+                    "while serving (0 = off; enables epoch publication)")
+    ap.add_argument("--inject-corruption", type=int, default=0,
+                    help="flip this many adjacency entries (seeded) after "
+                    "boot — the scrub-smoke hook: the scrubber must "
+                    "detect, quarantine, and repair them")
     ap.add_argument("--warmup", action="store_true",
                     help="precompile all (bucket, preset) programs at boot "
                     "and log compile time per bucket")
@@ -244,10 +266,56 @@ def main() -> None:
         idx.enable_wal(args.wal)
         print(f"wal: journaling mutations to {args.wal} "
               f"(cursor seq={idx._wal_seq})")
+    live_mutation = bool(args.refine_while_serving or args.scrub_every > 0)
     if args.engine == "async":
         dl = args.deadline_ms
         if dl is not None and dl < 0:
             dl = None
+        scrubber = None
+        refine_stop = threading.Event()
+        refine_thread = None
+        refine_stats = {"ticks": 0, "errors": 0}
+        if live_mutation:
+            # epoch publication: writers mutate the live builder, readers
+            # serve immutable published snapshots (see core/epoch.py)
+            idx.enable_publishing()
+            print(f"epochs: publication enabled "
+                  f"(epoch {idx._epochs.current.epoch})")
+        if args.inject_corruption:
+            from repro.serving.scrub import corrupt_adjacency
+            rows = corrupt_adjacency(idx, args.inject_corruption,
+                                     seed=args.seed)
+            print(f"corruption: flipped {args.inject_corruption} adjacency "
+                  f"entries across rows {rows}")
+        if args.scrub_every > 0:
+            from repro.serving.scrub import IntegrityScrubber
+            scrubber = IntegrityScrubber(idx, interval_s=args.scrub_every)
+            scrubber.start()
+            print(f"scrubber: auditing every {args.scrub_every}s")
+        if args.refine_while_serving:
+            def _refine_loop():
+                # let the engine compile its first programs before the
+                # writer starts competing for the mutation lock
+                if refine_stop.wait(1.0):
+                    return
+                while not refine_stop.is_set():
+                    try:
+                        idx.refine(args.refine_while_serving,
+                                   seed=refine_stats["ticks"])
+                        idx.publish()
+                        refine_stats["ticks"] += 1
+                    except Exception:
+                        # refinement may race injected corruption; the
+                        # scrubber heals the graph and the next tick works
+                        refine_stats["errors"] += 1
+                    if refine_stop.wait(0.05):
+                        return
+            refine_thread = threading.Thread(
+                target=_refine_loop, name="refine-while-serving",
+                daemon=True)
+            refine_thread.start()
+            print(f"refine: {args.refine_while_serving} iterations per "
+                  f"background tick, republishing each tick")
         aeng = AsyncQueryEngine(idx, k=args.k, codec=args.codec,
                                 rerank_k=args.rerank_k or None,
                                 preset=args.search_preset, slo=args.slo,
@@ -324,6 +392,27 @@ def main() -> None:
               f"invalid={invalid} crashed={crashed} "
               f"degraded={st.degraded} restarts={st.restarts} "
               f"status={aeng.health()['status']}")
+        if refine_thread is not None:
+            refine_stop.set()
+            refine_thread.join(timeout=60.0)
+            print(f"refine: ticks={refine_stats['ticks']} "
+                  f"errors={refine_stats['errors']}")
+        if scrubber is not None:
+            # one final synchronous pass so quarantined-but-unrepaired
+            # damage from a late corruption never slips past the summary
+            scrubber.stop()
+            scrubber.run_pass()
+            ss = scrubber.stats
+            print(f"scrub: passes={ss.passes} audited={ss.audited} "
+                  f"quarantined={ss.quarantined} repaired={ss.repaired} "
+                  f"readmitted={ss.readmitted} unrepaired={ss.unrepaired} "
+                  f"crashes={ss.crashes} errors={ss.errors} "
+                  f"epoch={idx._epochs.current.epoch if idx.publishing else -1}")
+        if live_mutation:
+            from repro.core.invariants import check_invariants
+            ok, problems = check_invariants(idx.builder)
+            print(f"invariants: ok={ok}"
+                  + ("" if ok else f" problems={problems}"))
         aeng.close()
         _teardown()
         if args.save_index:

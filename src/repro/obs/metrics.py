@@ -51,6 +51,17 @@ def log_buckets(lo: float, hi: float, growth: float = 1.25
 
 DEFAULT_LATENCY_BOUNDS_MS = log_buckets(0.05, 80_000.0)
 
+# Canonical metric names of the live-mutation subsystem (epoch publication
+# + integrity scrubber).  One authoritative spelling shared by
+# core/epoch.py, core/build.py, serving/scrub.py, launch/serve.py and the
+# obs round-trip test — dashboards key on these strings.
+EPOCH_GAUGE = "deg_epoch"
+EPOCH_PUBLISH_TOTAL = "epoch_publish_total"
+EPOCH_RETIRED_LAG_MS = "epoch_retired_lag_ms"
+SCRUB_AUDITED_TOTAL = "scrub_vertices_audited_total"
+SCRUB_QUARANTINED_TOTAL = "scrub_quarantined_total"
+SCRUB_REPAIRED_TOTAL = "scrub_repaired_total"
+
 
 def _label_key(labels: dict) -> tuple:
     return tuple(sorted(labels.items()))

@@ -35,7 +35,18 @@ of the payload bytes.  Failure modes are distinguished deliberately:
 Ops journaled (one record per *unit* so mid-``add`` checkpoints see a
 consistent cursor): ``add`` — one bootstrap take or one insert wave
 (points array + wave_size); ``remove`` — the id list + refine_after;
-``refine`` — iterations + resolved seed.
+``refine`` — iterations + resolved seed; ``epoch_publish`` — an epoch
+boundary marker (epoch number, n, builder generation, quarantine set)
+written by ``DEGIndex.publish()``.
+
+Publish markers change recovery semantics: when the journal contains
+``epoch_publish`` records past the snapshot cursor, :func:`replay_wal`
+stops at the **last** one and truncates the unpublished tail — readers of
+a publishing index only ever observed published epochs, so recovering to
+a half-applied mutation batch beyond the last publish would materialize a
+state no reader (and no result the service returned) ever saw.  Journals
+without publish markers (the pre-epoch format, and non-serving builds)
+replay in full, unchanged.
 """
 from __future__ import annotations
 
@@ -56,7 +67,7 @@ _REC_MAGIC = 0x57414C52            # "RLAW" little-endian = b"RLAW"
 _REC_HEADER = struct.Struct("<IQBII")   # magic, seq, op, len, crc
 _META_KEY = "__meta__"
 
-OPS = {"add": 1, "remove": 2, "refine": 3}
+OPS = {"add": 1, "remove": 2, "refine": 3, "epoch_publish": 4}
 _OP_NAMES = {v: k for k, v in OPS.items()}
 
 
@@ -75,6 +86,8 @@ class WALRecord:
     op: str
     meta: Dict[str, Any]
     arrays: Dict[str, np.ndarray]
+    end_off: int = 0        # file offset just past this record (replay
+    #                         truncates the unpublished tail at this point)
 
 
 def _encode_payload(meta: Dict[str, Any],
@@ -180,7 +193,8 @@ def read_wal(path, *, truncate_torn: bool = True) -> List[WALRecord]:
                 f"{path}: unknown op code {op_code} in record seq={seq}")
         meta, arrays = _decode_payload(payload)
         records.append(WALRecord(seq=seq, op=_OP_NAMES[op_code],
-                                 meta=meta, arrays=arrays))
+                                 meta=meta, arrays=arrays,
+                                 end_off=body_start + length))
         off = body_start + length
     return records
 
@@ -192,7 +206,8 @@ def _torn(path: str, good_end: int, truncate: bool) -> list:
     return []
 
 
-def replay_wal(index, path) -> int:
+def replay_wal(index, path, *,
+               to_last_publish: Optional[bool] = None) -> int:
     """Re-apply journaled ops past the index's snapshot cursor.
 
     Records with ``seq`` below ``index._wal_seq`` predate the snapshot
@@ -202,10 +217,33 @@ def replay_wal(index, path) -> int:
     set, so the exact build code paths execute — the guard verifies each
     op against its record (op kind and, for ``refine``, the re-drawn
     seed) instead of re-appending it.  Returns the number of ops
-    applied."""
+    applied.
+
+    ``to_last_publish`` controls the crash-consistent-publish contract:
+    ``None`` (auto, the default) stops at the last ``epoch_publish``
+    record **iff any exists past the cursor** and truncates the journal
+    tail beyond it, so recovery lands exactly on the last state a reader
+    could have observed and re-enabled logging continues from a matching
+    cursor.  ``False`` forces a full replay (pre-epoch behavior);
+    ``True`` demands a publish marker and raises if none is found past
+    the cursor.  Each publish marker is verified against the replayed
+    state (``n`` must match) — a mismatch means the snapshot and journal
+    diverged."""
     records = read_wal(path, truncate_torn=True)
+    start_seq = index._wal_seq
+    pub_idx = None
+    for i, rec in enumerate(records):
+        if rec.op == "epoch_publish" and rec.seq >= start_seq:
+            pub_idx = i
+    if to_last_publish is None:
+        to_last_publish = pub_idx is not None
+    elif to_last_publish and pub_idx is None:
+        raise WALError(
+            f"{path}: to_last_publish=True but no epoch_publish record "
+            f"past cursor {start_seq}")
+    stop = pub_idx if to_last_publish else len(records) - 1
     applied = 0
-    for rec in records:
+    for rec in records[: stop + 1] if stop is not None else records:
         if rec.seq < index._wal_seq:
             continue
         if rec.seq != index._wal_seq:
@@ -213,6 +251,15 @@ def replay_wal(index, path) -> int:
                 f"{path}: journal gap — snapshot cursor is "
                 f"{index._wal_seq} but next record is seq={rec.seq}; "
                 "this WAL does not continue that snapshot")
+        if rec.op == "epoch_publish":
+            if int(rec.meta["n"]) != index.n:
+                raise WALError(
+                    f"{path}: epoch_publish seq={rec.seq} expects "
+                    f"n={rec.meta['n']} but replay reached n={index.n} — "
+                    "snapshot and journal diverged")
+            index._wal_seq += 1
+            applied += 1
+            continue
         index._wal_replay = rec
         try:
             if rec.op == "add":
@@ -228,18 +275,29 @@ def replay_wal(index, path) -> int:
         finally:
             index._wal_replay = None
         applied += 1
+    if to_last_publish and pub_idx is not None \
+            and pub_idx < len(records) - 1:
+        # discard the unpublished tail: no reader ever saw those
+        # mutations, and a re-enabled writer must append at the
+        # recovered cursor without seq collisions
+        with open(os.fspath(path), "r+b") as f:
+            f.truncate(records[pub_idx].end_off)
     return applied
 
 
 def recover(snapshot_path, wal_path, params: Optional[object] = None,
-            capacity: Optional[int] = None):
+            capacity: Optional[int] = None,
+            to_last_publish: Optional[bool] = None):
     """``load_index(snapshot) + replay_wal(wal)`` in one call.  The WAL
     (if present) is replayed and re-enabled on the returned index, so
-    mutation logging continues at the recovered cursor."""
+    mutation logging continues at the recovered cursor.  When the journal
+    holds ``epoch_publish`` markers, recovery lands exactly on the last
+    published epoch (see :func:`replay_wal`); ``to_last_publish`` forces
+    either behavior."""
     from .snapshot import load_index
 
     index = load_index(snapshot_path, params=params, capacity=capacity)
     if wal_path is not None and os.path.exists(wal_path):
-        replay_wal(index, wal_path)
+        replay_wal(index, wal_path, to_last_publish=to_last_publish)
         index.enable_wal(wal_path)
     return index

@@ -30,6 +30,10 @@ Hook points currently wired in:
 ``extract.loop``       top of each extract-loop iteration (before get)
 ``wal.append``         before a WAL record's bytes are written
 ``snapshot.mid_save``  between writing the tmp snapshot and the rename
+``publish.swap``       inside ``DEGIndex.publish``, after the journal
+                       record but before the epoch swap becomes visible
+``scrub.audit``        before each scrubber audit chunk
+``scrub.repair``       before the scrubber's repair stage
 ===================== ====================================================
 """
 from __future__ import annotations

@@ -39,9 +39,18 @@ batch); and a watchdog/supervisor turns a dying loop thread into typed
 ``EngineCrashedError`` futures plus (``max_restarts`` budget allowing) a
 restarted pipeline — ``result()`` never hangs on a dead engine.
 
-The engine serves a read-only view of the index: run mutations (insert /
-delete / refine) through the owning ``QueryEngine`` or the index itself
-while no async engine is live, or between ``close()``/construction.
+Live mutation: when the index has epoch publication enabled
+(``DEGIndex.enable_publishing()``), every flush acquires the current
+published epoch (``acquire_view``) and searches *its* frozen buffers —
+writers are free to insert / delete / refine the live builder
+concurrently and ``publish()`` at batch boundaries; a flush never
+observes mid-surgery state, and each result is stamped with the epoch it
+searched (``AsyncResult.epoch``) so a replay against that snapshot is
+bit-identical.  Quarantined vertices (the integrity scrubber's set,
+carried on the epoch) are appended to each lane's exclude list and
+dropped as session seeds.  Without publishing the engine behaves as
+before: it serves the index's own device cache and the index must stay
+read-only while the engine is live.
 """
 from __future__ import annotations
 
@@ -343,6 +352,8 @@ class AsyncQueryEngine:
         if extracting is not None:
             for req in extracting[0]:
                 req.result._fail(err)
+            if extracting[5] is not None:      # not yet released by extract
+                self.index.release_view(extracting[5])
         while True:
             try:
                 item = self._inflight.get_nowait()
@@ -352,6 +363,8 @@ class AsyncQueryEngine:
                 continue
             for req in item[0]:
                 req.result._fail(err)
+            if item[5] is not None:
+                self.index.release_view(item[5])
         for req in self._queue.pop_ready(1 << 30):
             req.result._fail(err)
         self._m_queue_depth.set(0)
@@ -395,14 +408,22 @@ class AsyncQueryEngine:
         ``{(bucket, variant): seconds}`` compile times."""
         times: dict = {}
         seen: set = set()
-        for i, rung in enumerate(self._ladder):
-            if rung.cfg in seen:
-                continue
-            seen.add(rung.cfg)
-            t = _buckets.precompile(self.index, rung.cfg, self.buckets,
-                                    with_budget=True)
-            for (b, variant), secs in t.items():
-                times[(b, variant if i == 0 else f"r{i}-{variant}")] = secs
+        # compile against an acquired view: under live mutation the epoch's
+        # frozen buffers are the only ones a concurrent writer can't donate
+        # away mid-trace (shapes match the live index, so programs shared)
+        view = self.index.acquire_view()
+        try:
+            for i, rung in enumerate(self._ladder):
+                if rung.cfg in seen:
+                    continue
+                seen.add(rung.cfg)
+                t = _buckets.precompile(view, rung.cfg, self.buckets,
+                                        with_budget=True)
+                for (b, variant), secs in t.items():
+                    times[(b, variant if i == 0 else f"r{i}-{variant}")] \
+                        = secs
+        finally:
+            self.index.release_view(view)
         return times
 
     # -- request path ------------------------------------------------------
@@ -549,13 +570,36 @@ class AsyncQueryEngine:
             for i, ex in enumerate(expired):
                 if ex:
                     budget[i] = min(self.partial_hops, int(base))
-        items = [_buckets.BatchItem(query=r.query, exclude=r.exclude,
-                                    seed_vertex=r.seed_vertex) for r in reqs]
-        qs, seeds, excl = _buckets.pad_batch(items, bucket,
-                                             self.index.medoid(),
-                                             self._exclude_width)
-        res = _buckets.dispatch(self.index, rung.cfg, qs, seeds, excl,
-                                hop_budget=budget)
+        # live-mutation epoch capture: the whole flush searches ONE
+        # immutable published snapshot (or the index itself when not
+        # publishing — then the single-writer contract applies).  The
+        # reference is dropped by the extract thread once results are on
+        # host; the epoch retires when its last in-flight flush releases.
+        view = self.index.acquire_view()
+        try:
+            quarantine = tuple(getattr(view, "quarantine", ()) or ())
+            qset = set(quarantine)
+            items = []
+            for r in reqs:
+                excl_ids = r.exclude
+                if quarantine:
+                    # quarantined vertices never appear in results; a
+                    # quarantined session seed falls back to the medoid
+                    excl_ids = list(dict.fromkeys(
+                        list(excl_ids) + list(quarantine)))
+                sv = r.seed_vertex
+                if sv is not None and sv in qset:
+                    sv = None
+                items.append(_buckets.BatchItem(
+                    query=r.query, exclude=excl_ids, seed_vertex=sv))
+            qs, seeds, excl = _buckets.pad_batch(items, bucket,
+                                                 view.medoid(),
+                                                 self._exclude_width)
+            res = _buckets.dispatch(view, rung.cfg, qs, seeds, excl,
+                                    hop_budget=budget)
+        except BaseException:
+            self.index.release_view(view)
+            raise
         flush_index = self.stats.flushes
         self.stats.flushes += 1
         self.stats.queries += B
@@ -573,11 +617,14 @@ class AsyncQueryEngine:
         for r in reqs:
             r.result.degraded = level > 0
             r.result.degrade_level = level
+            r.result.epoch = getattr(view, "epoch", None)
             r.result._mark_dispatched(flush_index)
         # in-flight count is bounded by the dispatch-slot semaphore
         # (acquired before the batch was popped), so this never blocks;
-        # extract releases the slot once the flush is drained
-        self._inflight.put((reqs, res, expired, bucket, clock.now()))
+        # extract releases the slot once the flush is drained.  A list,
+        # not a tuple: slot 5 (the epoch view) is cleared in place on
+        # release so the crash handler can't double-release it.
+        self._inflight.put([reqs, res, expired, bucket, clock.now(), view])
         self._staging = None
 
     # -- extract thread ----------------------------------------------------
@@ -590,7 +637,7 @@ class AsyncQueryEngine:
             # the crash handler fails the futures it had already dequeued
             self._extracting = item
             _faults.fire("extract.loop")
-            reqs, res, expired, bucket, t0 = item
+            reqs, res, expired, bucket, t0, view = item
             B = len(reqs)
             ids = np.asarray(res.ids)      # device->host: blocks until the
             dists = np.asarray(res.dists)  # async dispatch finished
@@ -608,6 +655,11 @@ class AsyncQueryEngine:
             self._m_evals.inc(int(evals[:B].sum()))
             vfrac = None if res.visited_frac is None \
                 else np.asarray(res.visited_frac)
+            # every device read of this flush is on host: drop the epoch
+            # reference (clearing the slot keeps a crash-drain from
+            # double-releasing this item)
+            item[5] = None
+            self.index.release_view(view)
             log = self._query_log
             any_sampled = log is not None and any(
                 r.result.sampled for r in reqs)

@@ -128,7 +128,13 @@ def pad_batch(items: Sequence[BatchItem], bucket: int, medoid: int,
 def dispatch(index, cfg: ProgramConfig, qs: np.ndarray, seeds: np.ndarray,
              excl: Optional[np.ndarray],
              hop_budget: Optional[np.ndarray] = None):
-    """The one ``search_batch`` call site both engines flush through."""
+    """The one ``search_batch`` call site both engines flush through.
+
+    ``index`` is whatever ``DEGIndex.acquire_view()`` returned: the index
+    itself (single-writer mode) or an immutable
+    :class:`repro.core.epoch.PublishedEpoch` (live mutation under
+    serving) — both expose the same ``search_batch`` surface, and their
+    operand shapes match, so they share the compiled beam programs."""
     return index.search_batch(
         qs, seeds, excl, k=cfg.k, eps=cfg.eps, beam_width=cfg.beam_width,
         quantized=None if cfg.codec == "float32" else cfg.codec,

@@ -141,8 +141,12 @@ class QueryEngine:
         """Precompile every (bucket, variant) program this engine can
         dispatch (boot-time, so no request ever pays a trace).  Returns
         ``{(bucket, variant): seconds}`` compile wall times."""
-        return _buckets.precompile(self.index, self.cfg, self.buckets,
-                                   with_budget=with_budget)
+        view = self.index.acquire_view()
+        try:
+            return _buckets.precompile(view, self.cfg, self.buckets,
+                                       with_budget=with_budget)
+        finally:
+            self.index.release_view(view)
 
     # -- lifecycle ---------------------------------------------------------
     @classmethod
@@ -238,20 +242,32 @@ class QueryEngine:
         batch = self._pending[: self.max_batch]
         self._pending = self._pending[self.max_batch:]
         B = len(batch)
-        items = [
-            _buckets.BatchItem(
-                query=q,
-                # an exploration seed never reappears in its own results
-                exclude=([sv] + list(ex) if sv is not None else ex),
-                seed_vertex=sv)
-            for (q, ex, _, _, sv, _, _) in batch]
-        bucket = next(b for b in self.buckets if b >= B)
-        qs, seeds, excl = _buckets.pad_batch(items, bucket,
-                                             self.index.medoid(),
-                                             self._exclude_width)
-        t0 = clock.now()
-        res = _buckets.dispatch(self.index, self.cfg, qs, seeds, excl)
-        ids, dists = np.asarray(res.ids), np.asarray(res.dists)
+        # epoch capture (same contract as the async engine): with
+        # publishing on, the whole flush searches one immutable snapshot
+        # and quarantined vertices are excluded from results and seeds
+        view = self.index.acquire_view()
+        try:
+            quarantine = tuple(getattr(view, "quarantine", ()) or ())
+            qset = set(quarantine)
+            items = [
+                _buckets.BatchItem(
+                    query=q,
+                    # an exploration seed never reappears in its own results
+                    exclude=list(dict.fromkeys(
+                        ([sv] if sv is not None else [])
+                        + list(ex) + list(quarantine))),
+                    seed_vertex=(None if sv is not None and sv in qset
+                                 else sv))
+                for (q, ex, _, _, sv, _, _) in batch]
+            bucket = next(b for b in self.buckets if b >= B)
+            qs, seeds, excl = _buckets.pad_batch(items, bucket,
+                                                 view.medoid(),
+                                                 self._exclude_width)
+            t0 = clock.now()
+            res = _buckets.dispatch(view, self.cfg, qs, seeds, excl)
+            ids, dists = np.asarray(res.ids), np.asarray(res.dists)
+        finally:
+            self.index.release_view(view)
         flush_s = clock.now() - t0
         self.stats.total_search_s += flush_s
         flush_index = self.stats.flushes

@@ -46,7 +46,10 @@ class AsyncResult:
     dispatch and the engine returned the best-so-far beam under the
     partial hop budget instead of dropping it; ``degraded``/
     ``degrade_level`` record whether the ladder served it below the base
-    search program.
+    search program; ``epoch`` is the published-epoch number the flush
+    searched (None when the index is not publishing) — replaying the
+    query against that epoch's snapshot must reproduce ``ids``/``dists``
+    bit for bit, the no-torn-reads contract of live mutation.
 
     The future doubles as the request's trace record: ``submitted_at`` /
     ``dispatched_at`` / ``device_done_at`` / ``completed_at`` are
@@ -59,7 +62,7 @@ class AsyncResult:
     __slots__ = ("_event", "_lock", "_state", "ids", "dists", "partial",
                  "submitted_at", "dispatched_at", "device_done_at",
                  "completed_at", "deadline", "flush_index", "seq", "sampled",
-                 "error", "degraded", "degrade_level")
+                 "error", "degraded", "degrade_level", "epoch")
 
     def __init__(self, deadline: Optional[float] = None):
         self._event = threading.Event()
@@ -71,6 +74,7 @@ class AsyncResult:
         self.error: Optional[BaseException] = None
         self.degraded = False
         self.degrade_level = 0
+        self.epoch: Optional[int] = None
         self.submitted_at = clock.now()
         self.dispatched_at: Optional[float] = None
         self.device_done_at: Optional[float] = None

@@ -5,8 +5,11 @@ DEG structural invariants (Table 1) after EVERY step and bit-identical
 
 Every mutation is journaled to a WAL (persist/wal.py), and the walk
 includes crash rules: kill between records and recover from
-snapshot+WAL (must be bit-identical to the live index), tear the
-journal tail mid-append and recover from the surviving prefix.  The
+snapshot+WAL (must be bit-identical to the live index — or, once an
+``epoch_publish`` marker is journaled, to the last *published* state),
+tear the journal tail mid-append and recover from the surviving prefix.
+The walk also publishes epochs mid-stream and injects seeded adjacency
+corruption that the integrity scrubber must quarantine and repair.  The
 structural invariants are re-checked after every recovery like any
 other step.
 
@@ -59,6 +62,9 @@ class LifecycleMachine(RuleBasedStateMachine):
         self.idx.add(self._points(DEGREE + 4), wave_size=4)
         self.idx.save(self.base_snap)
         self.queries = self.rng.normal(size=(4, DIM)).astype(np.float32)
+        # state at the last journaled epoch_publish marker (None = no
+        # marker since the recovery base): the crash rules' landing point
+        self.pub_state = None
 
     def teardown(self):
         if hasattr(self, "tmp"):
@@ -121,14 +127,57 @@ class LifecycleMachine(RuleBasedStateMachine):
         # of base_snap's, so replay just skips more prefix)
         self.idx.enable_wal(self.wal)
         shutil.copyfile(path, self.base_snap)
+        self.pub_state = None          # any marker is now behind the cursor
+
+    @precondition(lambda self: self.idx.n >= DEGREE + 4)
+    @rule()
+    def publish_epoch(self):
+        """Journal an epoch_publish marker — the recovery commit point.
+        Capture the at-publish state the crash rules must land on."""
+        if not self.idx.publishing:
+            self.idx.enable_publishing()   # publishes (and journals) epoch 0
+        else:
+            self.idx.publish()
+        self.pub_state = (self.idx.n, self.idx._wal_seq,
+                          self.idx._rng.bit_generator.state,
+                          _search_sig(self.idx, self.queries))
+
+    @precondition(lambda self: self.idx.n >= 24)
+    @rule(flips=st.integers(1, 2), cseed=st.integers(0, 99))
+    def corrupt_scrub_repair(self, flips, cseed):
+        """Seeded in-RAM corruption, then scrub passes until the graph is
+        healed and the quarantine drains; Table 1 is re-checked by the
+        machine invariant after the rule."""
+        from repro.serving.scrub import IntegrityScrubber, corrupt_adjacency
+
+        corrupt_adjacency(self.idx, flips, seed=cseed)
+        scrub = IntegrityScrubber(self.idx, publish=False)
+        for _ in range(5):
+            s = scrub.run_pass()
+            if not self.idx.quarantine and s["flagged"] == 0:
+                break
+        assert not self.idx.quarantine, "scrub never converged"
+        # repairs are deliberately not journaled (see serving/scrub.py
+        # docstring): the healed state becomes the new recovery base so
+        # later crash rules stay bit-exact
+        self.idx.save(self.base_snap)
+        self.pub_state = None
 
     # -- crash / recovery rules ------------------------------------------
     def _assert_recovered_equal(self, rec):
-        assert rec.n == self.idx.n
-        assert rec._wal_seq == self.idx._wal_seq
-        assert rec._rng.bit_generator.state == \
-            self.idx._rng.bit_generator.state
-        a_ids, a_d = _search_sig(self.idx, self.queries)
+        if self.pub_state is not None:
+            # a publish marker gates recovery: land exactly on the last
+            # published epoch, not on the unpublished journal tail
+            n, seq, rng_state, (a_ids, a_d) = self.pub_state
+            assert rec.n == n
+            assert rec._wal_seq == seq
+            assert rec._rng.bit_generator.state == rng_state
+        else:
+            assert rec.n == self.idx.n
+            assert rec._wal_seq == self.idx._wal_seq
+            assert rec._rng.bit_generator.state == \
+                self.idx._rng.bit_generator.state
+            a_ids, a_d = _search_sig(self.idx, self.queries)
         b_ids, b_d = _search_sig(rec, self.queries)
         np.testing.assert_array_equal(a_ids, b_ids)
         np.testing.assert_array_equal(a_d, b_d)

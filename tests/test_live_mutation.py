@@ -1,0 +1,508 @@
+"""Live mutation under serving: epoch publication, the stale-device-cache
+generation tag, crash-consistent publish via the WAL, and the online
+integrity scrubber (audit / quarantine / repair / re-admit).
+
+The contracts under test:
+
+* a published epoch is immutable — later writer mutations never change
+  what a holder of the epoch sees (bit-identical re-search);
+* epochs are refcounted: superseded epochs retire only after the last
+  in-flight reader releases;
+* ``publish()`` always captures the *current* host graph even when the
+  builder's device cache was synced before the mutation (the stale-epoch
+  hazard the generation tag closes);
+* ``recover(snapshot, wal)`` lands exactly on the last *published* epoch,
+  discarding the unpublished journal tail — including after a kill
+  mid-publish;
+* the scrubber detects seeded corruption, quarantines it out of serving,
+  repairs it, and re-admits it after a clean re-audit, with the whole
+  sequence visible in metrics.
+"""
+import shutil
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.build import DEGIndex, DEGParams, build_deg
+from repro.core.invariants import check_invariants
+from repro.obs import (EPOCH_GAUGE, EPOCH_PUBLISH_TOTAL, MetricsRegistry,
+                       SCRUB_AUDITED_TOTAL, SCRUB_QUARANTINED_TOTAL,
+                       SCRUB_REPAIRED_TOTAL)
+from repro.resilience import FaultInjected, FaultPlan
+from repro.serving import buckets as _buckets
+from repro.serving.async_engine import AsyncQueryEngine
+from repro.serving.scrub import IntegrityScrubber, corrupt_adjacency
+
+
+def _small_index(n=200, dim=8, degree=6, seed=0):
+    rng = np.random.default_rng(seed)
+    vecs = rng.normal(size=(n, dim)).astype(np.float32)
+    idx = build_deg(vecs, DEGParams(degree=degree, k_ext=2 * degree),
+                    wave_size=8)
+    return idx, vecs
+
+
+def _replay(ep, cfg, query, exclude=()):
+    """Re-search one query against a held epoch through the same bucket
+    dispatch call site serving used — the bit-identity oracle."""
+    items = [_buckets.BatchItem(query=query, exclude=tuple(exclude))]
+    qs, seeds, excl = _buckets.pad_batch(items, 1, ep.medoid())
+    return _buckets.dispatch(ep, cfg, qs, seeds, excl)
+
+
+# -- epoch publication ------------------------------------------------------
+
+def test_published_epoch_is_immutable():
+    idx, vecs = _small_index()
+    mgr = idx.enable_publishing()
+    ep0 = mgr.current
+    q = vecs[3] + 0.01
+    res0 = ep0.search_batch(q[None], k=5)
+    ids0, dists0 = np.asarray(res0.ids), np.asarray(res0.dists)
+    # heavy mutation after publish: refine + insert + delete
+    idx.refine(30, seed=1)
+    idx.add(vecs[:4] + 0.5)
+    idx.remove([7])
+    idx.publish()
+    # the old epoch still answers bit-identically
+    res0b = ep0.search_batch(q[None], k=5)
+    assert np.array_equal(ids0, np.asarray(res0b.ids))
+    assert np.array_equal(dists0, np.asarray(res0b.dists))
+    # and the new epoch matches a live search exactly
+    cur = mgr.current
+    assert cur.epoch == 1 and cur.n == idx.n
+    live = idx.search_batch(q[None], k=5)
+    pub = cur.search_batch(q[None], k=5)
+    assert np.array_equal(np.asarray(live.ids), np.asarray(pub.ids))
+
+
+def test_epoch_refcount_retires_only_after_release():
+    idx, _ = _small_index(n=120)
+    mgr = idx.enable_publishing()
+    held = mgr.acquire()                       # in-flight flush
+    assert held.epoch == 0 and held.refs == 1
+    idx.publish()                              # supersede while referenced
+    assert mgr.live_epochs() == [0, 1]         # not retired under the reader
+    assert mgr.retired_total == 0
+    mgr.release(held)
+    assert mgr.live_epochs() == [1]            # last release retires it
+    assert mgr.retired_total == 1
+    # releasing the *current* epoch never retires it
+    cur = mgr.acquire()
+    mgr.release(cur)
+    assert mgr.live_epochs() == [1]
+
+
+def test_acquire_view_passthrough_without_publishing():
+    idx, _ = _small_index(n=120)
+    assert not idx.publishing
+    v = idx.acquire_view()
+    assert v is idx                            # single-writer legacy mode
+    idx.release_view(v)                        # no-op
+    idx.enable_publishing()
+    v = idx.acquire_view()
+    assert v is not idx and v.epoch == 0
+    idx.release_view(v)
+
+
+def test_publish_exports_metrics():
+    idx, _ = _small_index(n=120)
+    reg = MetricsRegistry()
+    idx.metrics = reg
+    idx.enable_publishing()
+    idx.publish()
+    assert reg.gauge(EPOCH_GAUGE).value == 1
+    assert reg.counter(EPOCH_PUBLISH_TOTAL).value == 2
+
+
+# -- stale-epoch hazard: the device-cache generation tag --------------------
+
+def test_builder_generation_tracks_mutations():
+    idx, _ = _small_index(n=120)
+    b = idx.builder
+    b.device_graph()
+    g = b.generation
+    assert b.device_generation() == g          # cache in sync
+    b.mark_dirty(0)
+    assert b.generation == g + 1
+    assert b.device_generation() == -1         # dirty rows pending
+    b.device_graph()
+    assert b.device_generation() == b.generation
+    if b.n >= b.capacity:
+        b.grow(b.capacity + 8)
+    b.add_vertex()
+    assert b.generation > g + 1                # n is part of the content
+    b.invalidate_device()
+    assert b.device_generation() == -1
+
+
+def test_publish_after_device_sync_captures_host_mutation():
+    """The regression the generation tag guards: warm the device cache,
+    mutate on the host, then publish — the epoch must reflect the
+    mutation, never the stale device buffers."""
+    idx, _ = _small_index(n=150)
+    idx.enable_publishing()
+    idx.builder.device_graph()                 # warm (and sync) the cache
+    idx.remove([5])                            # host-side surgery
+    idx.builder.device_graph()                 # interleaved device read
+    idx.remove([9])                            # dirty again, no sync after
+    idx.publish()
+    ep = idx._epochs.current
+    got = np.asarray(ep.graph.adjacency)[: idx.n]
+    want = idx.builder.adjacency[: idx.n]
+    assert np.array_equal(got, want), "published epoch used stale buffers"
+
+
+def test_stale_epoch_regression_async_flush():
+    """Interleave remove / device_graph() / async flushes: every served
+    result must be bit-identical to a replay against its stamped epoch."""
+    idx, vecs = _small_index(n=200)
+    mgr = idx.enable_publishing()
+    kept = {0: mgr.current}
+    eng = AsyncQueryEngine(idx, k=5, max_batch=8, deadline_ms=None,
+                           linger_ms=5.0)
+    try:
+        futs = [eng.submit(vecs[i] + 0.01) for i in range(6)]
+        for f in futs:
+            f.result(120.0)
+        with idx.mutation_lock:
+            idx.remove([11])
+            idx.builder.device_graph()
+            idx.remove([3])
+            e = idx.publish()
+            kept[e] = mgr.current
+        futs2 = [(vecs[i] + 0.02, eng.submit(vecs[i] + 0.02))
+                 for i in range(8)]
+        for q, f in futs2:
+            ids, dists = f.result(120.0)
+            assert f.epoch in kept
+            res = _replay(kept[f.epoch], eng.cfg, q)
+            assert np.array_equal(ids, np.asarray(res.ids)[0])
+            assert np.array_equal(dists, np.asarray(res.dists)[0])
+        assert any(f.epoch == max(kept) for _, f in futs2)
+    finally:
+        eng.close()
+
+
+# -- crash-consistent publish via the WAL -----------------------------------
+
+def test_recover_lands_on_last_published_epoch(tmp_path):
+    idx, vecs = _small_index(n=150)
+    snap, wal = tmp_path / "snap.npz", tmp_path / "mut.wal"
+    idx.save(snap)
+    idx.enable_wal(wal)
+    idx.enable_publishing()                    # epoch 0 journaled
+    rng = np.random.default_rng(7)
+    idx.add(rng.normal(size=(5, 8)).astype(np.float32))
+    idx.refine(10, seed=2)
+    idx.publish()                              # epoch 1 journaled
+    at_publish = idx.builder.adjacency[: idx.n].copy()
+    n_publish = idx.n
+    # unpublished tail: journaled, but no reader ever saw it
+    idx.add(rng.normal(size=(3, 8)).astype(np.float32))
+    idx.remove([4])
+    wal_full = tmp_path / "mut_full.wal"
+    shutil.copy(wal, wal_full)
+
+    from repro.persist.wal import read_wal, recover
+
+    rec = recover(snap, wal)
+    assert rec.n == n_publish
+    assert np.array_equal(rec.builder.adjacency[: rec.n], at_publish)
+    # the unpublished tail was truncated: recovery is idempotent
+    tail_ops = [r.op for r in read_wal(wal)]
+    assert tail_ops[-1] == "epoch_publish"
+    rec2 = recover(snap, wal)
+    assert np.array_equal(rec2.builder.adjacency[: rec2.n],
+                          rec.builder.adjacency[: rec.n])
+    # legacy full replay (to_last_publish=False) still reaches the tail
+    full = recover(snap, wal_full, to_last_publish=False)
+    assert full.n == n_publish + 3 - 1
+    ok, problems = check_invariants(full.builder)
+    assert ok, problems
+
+
+def test_recover_after_kill_mid_publish(tmp_path):
+    """Killed between the journal append and the in-memory swap: the
+    journaled publish is the commit point, so recovery lands exactly on
+    the graph state that publish captured."""
+    idx, vecs = _small_index(n=150)
+    snap, wal = tmp_path / "snap.npz", tmp_path / "mut.wal"
+    idx.save(snap)
+    idx.enable_wal(wal)
+    idx.enable_publishing()
+    idx.refine(10, seed=3)
+    at_kill = idx.builder.adjacency[: idx.n].copy()
+    with FaultPlan().kill("publish.swap", at=1):
+        with pytest.raises(FaultInjected):
+            idx.publish()                      # record durable, swap killed
+    from repro.persist.wal import recover
+
+    rec = recover(snap, wal)
+    assert np.array_equal(rec.builder.adjacency[: rec.n], at_kill)
+
+
+def test_recover_after_kill_before_publish_record(tmp_path):
+    """Killed before the publish record hits the journal: the whole tail
+    since the previous publish is discarded — no reader saw it."""
+    idx, vecs = _small_index(n=150)
+    snap, wal = tmp_path / "snap.npz", tmp_path / "mut.wal"
+    idx.save(snap)
+    idx.enable_wal(wal)
+    idx.enable_publishing()                    # epoch 0: the last publish
+    n0 = idx.n
+    adj0 = idx.builder.adjacency[:n0].copy()
+    rng = np.random.default_rng(9)
+    idx.add(rng.normal(size=(4, 8)).astype(np.float32))
+    with FaultPlan().kill("wal.append", at=1):
+        with pytest.raises(FaultInjected):
+            idx.publish()                      # no record, no epoch
+    from repro.persist.wal import recover
+
+    rec = recover(snap, wal)
+    assert rec.n == n0
+    assert np.array_equal(rec.builder.adjacency[:n0], adj0)
+
+
+# -- scrubber: detect, quarantine, repair, re-admit -------------------------
+
+def test_scrub_full_sequence_with_metrics():
+    idx, vecs = _small_index(n=200)
+    reg = MetricsRegistry()
+    idx.metrics = reg
+    idx.enable_publishing()
+    rows = corrupt_adjacency(idx, 5, seed=1)
+    assert rows
+    scrub = IntegrityScrubber(idx)
+    s1 = scrub.run_pass()
+    assert s1["quarantined"] > 0
+    assert s1["repaired"] == s1["quarantined"]     # healed same pass
+    assert s1["readmitted"] == s1["repaired"]
+    assert s1["unrepaired"] == 0 and not idx.quarantine
+    s2 = scrub.run_pass()                          # converged: clean pass
+    assert s2["flagged"] == 0 and s2["quarantined"] == 0
+    ok, problems = check_invariants(idx.builder)
+    assert ok, problems
+    assert reg.counter(SCRUB_AUDITED_TOTAL).value >= 2 * idx.n
+    assert reg.counter(SCRUB_QUARANTINED_TOTAL).value == s1["quarantined"]
+    assert reg.counter(SCRUB_REPAIRED_TOTAL).value == s1["repaired"]
+    # quarantine + repair each republished
+    assert reg.gauge(EPOCH_GAUGE).value >= 2
+
+
+def test_quarantined_vertices_excluded_from_serving():
+    idx, vecs = _small_index(n=200)
+    idx.enable_publishing()
+    q = vecs[17]
+    hit = int(np.asarray(idx.search_batch(q[None], k=1).ids)[0, 0])
+    idx.quarantine.add(hit)
+    idx.publish()
+    eng = AsyncQueryEngine(idx, k=5, max_batch=8, deadline_ms=None,
+                           linger_ms=5.0)
+    try:
+        ids, _ = eng.submit(q).result(120.0)
+        assert hit not in set(int(i) for i in ids)
+    finally:
+        eng.close()
+
+
+def test_published_medoid_avoids_quarantine():
+    idx, _ = _small_index(n=150)
+    idx.enable_publishing()
+    m = idx.medoid()
+    idx.quarantine.add(m)
+    idx.publish()
+    ep = idx._epochs.current
+    assert ep.medoid() != m
+    assert ep.medoid() not in ep.quarantine
+
+
+def test_scrubber_background_loop_heals():
+    idx, _ = _small_index(n=200)
+    idx.enable_publishing()
+    corrupt_adjacency(idx, 4, seed=2)
+    with IntegrityScrubber(idx, interval_s=0.05) as scrub:
+        deadline = time.monotonic() + 60.0
+        while idx.quarantine or scrub.stats.repaired == 0:
+            assert time.monotonic() < deadline, "scrubber never converged"
+            time.sleep(0.05)
+    assert scrub.stats.quarantined > 0
+    assert scrub.stats.repaired == scrub.stats.quarantined
+    ok, problems = check_invariants(idx.builder)
+    assert ok, problems
+
+
+def test_scrub_fault_hooks_crash_counted():
+    idx, _ = _small_index(n=150)
+    scrub = IntegrityScrubber(idx, interval_s=0.01)
+    with FaultPlan().kill("scrub.audit", at=1):
+        with pytest.raises(FaultInjected):
+            scrub.run_pass()
+    # the loop counts the crash and the next pass runs clean
+    with FaultPlan().kill("scrub.audit", at=1):
+        scrub.start()
+        deadline = time.monotonic() + 60.0
+        while scrub.stats.crashes == 0 or scrub.stats.passes == 0:
+            assert time.monotonic() < deadline, "loop never recovered"
+            time.sleep(0.02)
+        scrub.stop()
+    assert scrub.stats.crashes >= 1 and scrub.stats.passes >= 1
+
+
+# -- vectorized invariants vs the loop references ---------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_invariants_vectorized_matches_loop_reference(seed):
+    """The vectorized Table-1 checkers must agree with the O(n*d) loop
+    references on healthy graphs and on every damage class the audit
+    distinguishes."""
+    from repro.core import invariants as inv
+
+    idx, _ = _small_index(n=120 + 40 * seed, dim=8, degree=6, seed=seed)
+    b = idx.builder
+
+    def agree():
+        assert inv.check_undirected(b) == inv.check_undirected_loop(b)
+        got = inv.connected_components(b)
+        want = inv.connected_components_loop(b)
+        assert got == want
+        labels = inv.component_labels(b)
+        assert len(set(int(x) for x in labels[: b.n])) == got
+
+    agree()                                    # healthy
+    rng = np.random.default_rng(seed)
+    u = int(rng.integers(0, b.n))
+    keep = (int(b.adjacency[u, 0]), float(b.weights[u, 0]))
+    b.adjacency[u, 0] = u                      # self loop
+    agree()
+    b.adjacency[u, 0] = keep[0]
+    b.weights[u, 0] = keep[1] * 3.0 + 1.0      # weight drift (asym weight)
+    agree()
+    b.weights[u, 0] = keep[1]
+    v = int(b.adjacency[u, 1])
+    b.adjacency[u, 1] = int(b.adjacency[u, 0])  # duplicate edge
+    agree()
+    b.adjacency[u, 1] = v
+    b.adjacency[u, 2] = -1                     # degree violation / asym
+    agree()
+    # disconnect: detach a vertex entirely (both endpoints)
+    w = int(rng.integers(0, b.n))
+    for s in range(b.degree):
+        nb = int(b.adjacency[w, s])
+        if nb >= 0:
+            row = b.adjacency[nb]
+            row[row == w] = -1
+        b.adjacency[w, s] = -1
+    assert inv.connected_components(b) == inv.connected_components_loop(b)
+    assert inv.connected_components(b) >= 2
+
+
+# -- the 30s acceptance stress: zero torn reads under full churn ------------
+
+@pytest.mark.slow
+def test_stress_live_mutation_no_torn_reads():
+    """>=30s of refinement + inserts + deletes + scrubbing concurrent with
+    async serving.  Every served result must replay bit-identically
+    against the epoch stamped on it (zero torn reads), Table 1 must hold
+    at exit, and recall (graded against each result's own epoch) must
+    clear a floor."""
+    idx, vecs = _small_index(n=400, dim=8, degree=8, seed=5)
+    mgr = idx.enable_publishing()
+    # pre-warm every writer path (refine / grow / delete-repair compiles)
+    # so the timed window measures churn, not tracing
+    rng = np.random.default_rng(11)
+    idx.refine(8, seed=999)
+    idx.add(rng.normal(size=(1, 8)).astype(np.float32))
+    idx.remove([idx.n - 1])
+    idx.publish()
+    kept = {e: mgr.live[e] for e in mgr.live_epochs()}
+    kept_lock = threading.Lock()
+    orig_publish = mgr.publish
+
+    def keeping_publish(ep):                    # hold every epoch for replay
+        with kept_lock:
+            kept[ep.epoch] = ep
+        orig_publish(ep)
+
+    mgr.publish = keeping_publish
+    stop = threading.Event()
+    writer_err = []
+
+    def writer():
+        wrng = np.random.default_rng(13)
+        i = 0
+        try:
+            while not stop.is_set():
+                idx.refine(8, seed=i)
+                if i % 3 == 0:
+                    idx.add(wrng.normal(size=(1, 8)).astype(np.float32))
+                if i % 5 == 0 and idx.n > 350:
+                    idx.remove([int(wrng.integers(0, idx.n))])
+                idx.publish()
+                i += 1
+                time.sleep(0.01)
+        except Exception as e:                  # pragma: no cover
+            writer_err.append(e)
+
+    wt = threading.Thread(target=writer, daemon=True)
+    scrub = IntegrityScrubber(idx, interval_s=0.2)
+    eng = AsyncQueryEngine(idx, k=5, max_batch=8, deadline_ms=None,
+                           linger_ms=2.0)
+    served = []                                 # (query, ids, dists, epoch)
+    rng = np.random.default_rng(4)
+    try:
+        wt.start()
+        scrub.start()
+        t_end = time.monotonic() + 30.0
+        while time.monotonic() < t_end:
+            qs = vecs[rng.integers(0, 400, 6)] + 0.01 * rng.normal(
+                size=(6, 8)).astype(np.float32)
+            futs = [(q, eng.submit(q)) for q in qs]
+            for q, f in futs:
+                ids, dists = f.result(120.0)
+                served.append((q, ids, dists, f.epoch))
+    finally:
+        stop.set()
+        wt.join(timeout=60.0)
+        scrub.stop()
+        eng.close()
+    assert not writer_err, writer_err
+    assert len(served) >= 60
+    epochs = sorted({e for *_, e in served})
+    assert epochs[-1] > 0, "writer never published during the run"
+    # zero torn reads: every result replays bit-identically on its epoch
+    # (replayed in per-epoch batches — the bucket invariant makes batch
+    # composition irrelevant, so grouping is free)
+    from repro.core.graph import pow2_bucket
+
+    by_epoch: dict = {}
+    for q, ids, dists, e in served:
+        by_epoch.setdefault(e, []).append((q, ids, dists))
+    recalls = []
+    for e, group in sorted(by_epoch.items()):
+        ep = kept[e]
+        base = np.asarray(ep.vectors)[: ep.n]
+        for lo in range(0, len(group), 64):
+            chunk = group[lo:lo + 64]
+            bucket = pow2_bucket(len(chunk))
+            items = [_buckets.BatchItem(query=g[0]) for g in chunk]
+            pqs, seeds, excl = _buckets.pad_batch(items, bucket, ep.medoid())
+            res = _buckets.dispatch(ep, eng.cfg, pqs, seeds, excl)
+            rids = np.asarray(res.ids)
+            rdists = np.asarray(res.dists)
+            qs = np.stack([g[0] for g in chunk])
+            d2 = ((base[None, :, :] - qs[:, None, :]) ** 2).sum(-1)
+            gt = np.argsort(d2, axis=1)[:, :5]
+            for i, (q, ids, dists) in enumerate(chunk):
+                assert np.array_equal(ids, rids[i]), \
+                    f"torn read: epoch {e} replay disagrees"
+                assert np.array_equal(dists, rdists[i])
+                recalls.append(len(set(int(x) for x in ids) & set(
+                    int(g) for g in gt[i])) / 5.0)
+    assert float(np.mean(recalls)) >= 0.8
+    with idx.mutation_lock:
+        ok, problems = check_invariants(idx.builder)
+    assert ok, problems

@@ -107,12 +107,25 @@ def test_kind_conflict_raises():
 
 
 def test_snapshot_round_trip():
+    from repro.obs import (EPOCH_GAUGE, EPOCH_PUBLISH_TOTAL,
+                           EPOCH_RETIRED_LAG_MS, SCRUB_AUDITED_TOTAL,
+                           SCRUB_QUARANTINED_TOTAL, SCRUB_REPAIRED_TOTAL)
+
     reg = MetricsRegistry()
     reg.counter("req_total", engine="async").inc(9)
     reg.gauge("depth").set(4)
     h = reg.histogram("lat_ms")
     for v in (0.2, 1.0, 5.0, 5.0, 50.0):
         h.observe(v)
+    # the live-mutation metric family survives the round trip too
+    reg.gauge(EPOCH_GAUGE).set(7)
+    reg.counter(EPOCH_PUBLISH_TOTAL).inc(8)
+    reg.counter(SCRUB_AUDITED_TOTAL).inc(1200)
+    reg.counter(SCRUB_QUARANTINED_TOTAL).inc(3)
+    reg.counter(SCRUB_REPAIRED_TOTAL).inc(3)
+    lag = reg.histogram(EPOCH_RETIRED_LAG_MS)
+    for v in (0.1, 2.5, 40.0):
+        lag.observe(v)
     doc = json.loads(reg.snapshot_json())
     back = MetricsRegistry.from_snapshot(doc)
     assert back.counter("req_total", engine="async").value == 9
@@ -120,6 +133,12 @@ def test_snapshot_round_trip():
     hb = back.histogram("lat_ms")
     assert hb.counts == h.counts and hb.count == h.count
     assert hb.percentile(50) == h.percentile(50)
+    assert back.gauge(EPOCH_GAUGE).value == 7
+    assert back.counter(EPOCH_PUBLISH_TOTAL).value == 8
+    assert back.counter(SCRUB_AUDITED_TOTAL).value == 1200
+    assert back.counter(SCRUB_QUARANTINED_TOTAL).value == 3
+    assert back.counter(SCRUB_REPAIRED_TOTAL).value == 3
+    assert back.histogram(EPOCH_RETIRED_LAG_MS).count == lag.count
     # and the round trip is a fixed point
     assert back.snapshot_json() == reg.snapshot_json()
 

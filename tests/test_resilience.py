@@ -448,6 +448,102 @@ def test_chaos_every_submit_resolves_typed(index):
     assert outcomes["served"] > 0            # chaos didn't stop the engine
 
 
+def test_chaos_mutation_under_serving_resolves_typed():
+    """The live-mutation extension of the trichotomy contract: a writer
+    thread refines + republishes and the integrity scrubber audits while
+    queries flow, with seeded delays on the scrub / publish / dispatch
+    hooks.  Every submission still resolves typed, and every *served*
+    result must be bit-identical to a replay against the published epoch
+    stamped on it — a torn read could return plausible-looking garbage
+    this check refuses."""
+    import threading
+
+    from repro.serving import buckets as _buckets
+    from repro.serving.scrub import IntegrityScrubber
+
+    rng = np.random.default_rng(21)
+    vecs = rng.normal(size=(300, 8)).astype(np.float32)
+    idx = build_deg(vecs, DEGParams(degree=8, k_ext=16), wave_size=8)
+    mgr = idx.enable_publishing()
+    idx.refine(4, seed=99)                   # pre-warm the writer path
+    idx.publish()
+    kept = {e: mgr.live[e] for e in mgr.live_epochs()}
+    kept_lock = threading.Lock()
+    orig_publish = mgr.publish
+
+    def keeping_publish(ep):                 # hold every epoch for replay
+        with kept_lock:
+            kept[ep.epoch] = ep
+        orig_publish(ep)
+
+    mgr.publish = keeping_publish
+    qs = vecs[rng.integers(0, 300, 60)] + 0.01 * rng.normal(
+        size=(60, 8)).astype(np.float32)
+    plan = (FaultPlan(seed=11)
+            .delay("scrub.audit", 0.002, prob=0.5, times=None)
+            .delay("publish.swap", 0.001, prob=0.5, times=None)
+            .delay("scheduler.dispatch", 0.002, prob=0.2, times=None))
+    eng = AsyncQueryEngine(idx, k=5, max_batch=8, deadline_ms=None,
+                           linger_ms=1.0, max_queue=32, max_restarts=10)
+    scrub = IntegrityScrubber(idx, interval_s=0.02)
+    stop = threading.Event()
+
+    def writer():
+        i = 0
+        while not stop.is_set():
+            idx.refine(4, seed=i)
+            idx.publish()
+            i += 1
+            time.sleep(0.005)
+
+    wt = threading.Thread(target=writer, daemon=True)
+    outcomes = {"served": 0, "shed": 0, "crashed": 0}
+    served = []
+    try:
+        with plan:
+            scrub.start()
+            wt.start()
+            futs = []
+            for q in qs:
+                try:
+                    futs.append((q, eng.submit(q)))
+                except OverloadError:
+                    outcomes["shed"] += 1
+                except EngineCrashedError:
+                    outcomes["crashed"] += 1
+                    time.sleep(0.02)
+            for q, f in futs:
+                try:
+                    ids, dists = f.result(60.0)
+                except OverloadError:
+                    outcomes["shed"] += 1
+                except EngineCrashedError:
+                    outcomes["crashed"] += 1
+                except CancelledError:
+                    outcomes["crashed"] += 1
+                else:
+                    outcomes["served"] += 1
+                    served.append((q, ids, dists, f.epoch))
+    finally:
+        stop.set()
+        wt.join(timeout=60.0)
+        scrub.stop()
+        eng.close()
+    assert sum(outcomes.values()) == len(qs), \
+        f"accounting leak: {outcomes} vs {len(qs)} submissions"
+    assert outcomes["served"] > 0
+    seen_epochs = sorted({e for *_, e in served})
+    assert seen_epochs[-1] > 0, "no served result saw a republished epoch"
+    for q, ids, dists, e in served:
+        ep = kept[e]
+        items = [_buckets.BatchItem(query=q, exclude=ep.quarantine)]
+        pqs, seeds, excl = _buckets.pad_batch(items, 1, ep.medoid())
+        res = _buckets.dispatch(ep, eng.cfg, pqs, seeds, excl)
+        assert np.array_equal(ids, np.asarray(res.ids)[0]), \
+            f"torn read: epoch {e} replay disagrees"
+        assert np.array_equal(dists, np.asarray(res.dists)[0])
+
+
 # -- /healthz ---------------------------------------------------------------
 
 def test_healthz_endpoint_states(index):
