@@ -65,7 +65,7 @@ def run(seed: int = 0) -> dict:
     from repro.kernels.gather_dist_q import ref as gdq_ref
     from repro.quant import make_store
 
-    store = make_store(db, "sq8")
+    store = make_store(db, "sq8", n=None)
     got = gdq_ops.gather_dist_q(store.data, store.scale, jnp.asarray(nbr),
                                 jnp.asarray(qs[:B]))
     want = gdq_ref.gather_dist_q_ref(store.data, store.scale,

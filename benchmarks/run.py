@@ -40,7 +40,8 @@ QUICK_OVERRIDES = {
     "graph_stats": dict(n=1200),
     "neighbor_choice": dict(n=1200, n_query=100),
     "beam_merge": dict(shapes=((64, 64, 20), (64, 128, 32))),
-    "quantization": dict(n=1500, n_query=128, rerank_ks=(10, 20)),
+    "quantization": dict(n=1500, n_query=128, rerank_ks=(10, 20),
+                         pq_rerank_ks=(80,)),
     "search_pareto": dict(n=1500, n_query=128, expand_widths=(1, 2),
                           beam_widths=(32, 48), backends=("jnp",),
                           refine=100),

@@ -4,6 +4,7 @@ quantized-store presets."""
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 from repro.core.build import DEGParams
 
@@ -28,20 +29,30 @@ class QuantPreset:
     """Serving-side store configuration (post-training; orthogonal to the
     build params above).  ``codec`` is what the beam traverses, ``rerank_k``
     how many candidates the exact second stage re-scores (0 = auto 4*k,
-    ignored for the exact codec)."""
+    ignored for the exact codec), ``eps`` the beam's relative exploration
+    slack (None = the engine's default)."""
 
     codec: str = "float32"
     rerank_k: int = 0
+    eps: Optional[float] = None
 
 
-# serving presets: exact baseline, the 2x half-precision store, and two
-# SQ8 points trading rerank width for recall headroom (the
-# benchmarks/quantization.py frontier quantifies the trade on bench-small)
+# serving presets: exact baseline, the 2x half-precision store, two SQ8
+# points trading rerank width for recall headroom, and two PQ points for
+# the >=8x memory tier.  PQ's coarser per-row error distorts the beam's
+# stopping rule, not just the final ordering, so its presets widen BOTH
+# knobs: eps=0.2 keeps candidates in the beam that exact distances would
+# have admitted, and the wider exact second stage recovers the order
+# (the benchmarks/quantization.py frontier quantifies the trade on
+# bench-small: rerank width alone plateaus ~0.89 recall@10 at eps=0.1,
+# eps=0.2 + rerank_k=120 clears 0.95).
 QUANT_PRESETS = {
     "exact": QuantPreset(),
     "fp16": QuantPreset(codec="fp16", rerank_k=20),
     "sq8-compact": QuantPreset(codec="sq8", rerank_k=20),
     "sq8-serving": QuantPreset(codec="sq8", rerank_k=40),
+    "pq-compact": QuantPreset(codec="pq", rerank_k=80, eps=0.2),
+    "pq-serving": QuantPreset(codec="pq", rerank_k=120, eps=0.2),
 }
 
 

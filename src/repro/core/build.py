@@ -766,7 +766,7 @@ class DEGIndex:
         family instead of one per calling layer).
 
         ``quantized`` selects the store codec the beam traverses ("fp16" |
-        "sq8"; None/"float32" = the exact path, bit-identical to the
+        "sq8" | "pq"; None/"float32" = the exact path, bit-identical to the
         pre-quantization engine).  With a compressed codec the search is
         two-stage: the beam runs over compressed distances, then the best
         ``rerank_k`` candidates (default ``4 * k``) are re-scored exactly

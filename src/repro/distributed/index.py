@@ -76,11 +76,12 @@ def make_sharded_search(mesh: Mesh, *, k: int, eps: float = 0.1,
     if quantized and rerank_k <= 0:
         rr = 4 * k
 
-    def local(adj, vecs, codes, scales, n, seed, queries, exclude):
+    def local(adj, vecs, codes, scales, books, n, seed, queries, exclude):
         adj, vecs = adj[0], vecs[0]              # strip leading shard dim
         from repro.core.graph import DEGraph
 
-        store = (VectorStore(data=codes[0], scale=scales[0], codec=codec)
+        store = (VectorStore(data=codes[0], scale=scales[0], codec=codec,
+                             codebooks=None if books is None else books[0])
                  if quantized else beam.as_store(vecs))
         g = DEGraph(adjacency=adj, weights=jnp.zeros_like(adj, jnp.float32),
                     n=n[0])
@@ -129,12 +130,18 @@ def make_sharded_search(mesh: Mesh, *, k: int, eps: float = 0.1,
     in_specs = [shspec3, shspec3]
     if quantized:
         in_specs += [shspec3, P(shard_axis, None)]
+        if codec == "pq":                 # (S, m_sub, 256, dsub) codebooks
+            in_specs += [P(shard_axis, None, None, None)]
     in_specs += [shspec1, shspec1, bspec]
     if exclude_width > 0:
         in_specs += [P(batch_axes, None)]
 
     def body(*a):
-        if quantized:
+        books = None
+        if quantized and codec == "pq":
+            adj, vecs, codes, scales, books, n, seed, queries = a[:8]
+            rest = a[8:]
+        elif quantized:
             adj, vecs, codes, scales, n, seed, queries = a[:7]
             rest = a[7:]
         else:
@@ -142,7 +149,8 @@ def make_sharded_search(mesh: Mesh, *, k: int, eps: float = 0.1,
             codes = scales = None
             rest = a[5:]
         exclude = rest[0] if rest else None
-        return local(adj, vecs, codes, scales, n, seed, queries, exclude)
+        return local(adj, vecs, codes, scales, books, n, seed, queries,
+                     exclude)
 
     def f(*args):
         return shard_map(
@@ -195,6 +203,7 @@ class ShardedDEG:
     codec: str = "float32"
     codes: Optional[Array] = None    # (S, Ns, m) — compressed rows
     scales: Optional[Array] = None   # (S, m) — per-shard sq8 scales
+    codebooks: Optional[Array] = None  # (S, m_sub, 256, dsub) — pq books
 
     @property
     def n_shards(self) -> int:
@@ -214,10 +223,24 @@ class ShardedDEG:
                              f"(have {sorted(qc.CODECS)})")
         if codec == "float32":
             return dataclasses.replace(self, codec=codec, codes=None,
-                                       scales=None)
+                                       scales=None, codebooks=None)
         S, Ns, m = self.vectors.shape
         n_host = np.asarray(self.n)
         vecs = np.asarray(self.vectors)
+        if codec == "pq":
+            from repro.quant import pq as pqm
+
+            m_sub, dsub = pqm.n_subspaces(m), pqm.subspace_dim(m)
+            codes = np.zeros((S, Ns, m_sub), dtype=np.uint8)
+            books = np.zeros((S, m_sub, pqm.PQ_K, dsub), dtype=np.float32)
+            for s in range(S):
+                books[s] = pqm.fit(vecs[s], int(n_host[s]), seed=s)
+                codes[s] = np.asarray(pqm.encode(jnp.asarray(vecs[s]),
+                                                 jnp.asarray(books[s])))
+            return dataclasses.replace(
+                self, codec=codec, codes=jnp.asarray(codes),
+                scales=jnp.ones((S, m), jnp.float32),
+                codebooks=jnp.asarray(books))
         codes = np.zeros((S, Ns, m),
                          dtype={"fp16": np.float16, "sq8": np.int8}[codec])
         scales = np.ones((S, m), dtype=np.float32)
@@ -228,7 +251,8 @@ class ShardedDEG:
             codes[s] = np.asarray(qc.encode(codec, jnp.asarray(vecs[s]), sc))
         return dataclasses.replace(self, codec=codec,
                                    codes=jnp.asarray(codes),
-                                   scales=jnp.asarray(scales))
+                                   scales=jnp.asarray(scales),
+                                   codebooks=None)
 
     def memory_stats(self) -> dict:
         """Per-shard traversal-store bytes (live rows) under the attached
@@ -260,6 +284,8 @@ class ShardedDEG:
         args = [self.adjacency, self.vectors]
         if self.codec != "float32":
             args += [self.codes, self.scales]
+            if self.codec == "pq":
+                args += [self.codebooks]
         args += [self.n, self.seeds, jnp.asarray(queries)]
         with set_mesh(mesh):
             ids, dists = jax.jit(f)(*args)

@@ -22,12 +22,19 @@ def gather_dist(vectors: jax.Array, ids: jax.Array, queries: jax.Array, *,
         interpret = _default_interpret()
     N, m = vectors.shape
     pad_m = (-m) % 128
-    # bf16 vectors stay bf16 on the HBM->VMEM path (halves the gather
-    # traffic that dominates the DEG search roofline — §Perf DEG it. 2);
-    # the kernel accumulates distances in f32 regardless.
-    dt = vectors.dtype if vectors.dtype == jnp.bfloat16 else jnp.float32
+    # Half-width vectors (bf16 AND f16) stay half-width on the HBM->VMEM
+    # path — halving the gather traffic that dominates the DEG search
+    # roofline (§Perf DEG it. 2).  Upcasting the fp16 store here used to
+    # materialize a full-size f32 copy every hop, defeating the 2x codec;
+    # the kernel upcasts per-tile instead.  Queries stay f32 for f16
+    # stores (f16->f32 is exact, so results are bit-identical to the old
+    # upcast-everything path); bf16 keeps its historical
+    # query-in-store-dtype behavior.
+    dt = (vectors.dtype
+          if vectors.dtype in (jnp.bfloat16, jnp.float16) else jnp.float32)
+    qt = dt if dt == jnp.bfloat16 else jnp.float32
     v = jnp.pad(vectors.astype(dt), ((0, 0), (0, pad_m)))
-    q = jnp.pad(queries.astype(dt), ((0, 0), (0, pad_m)))
+    q = jnp.pad(queries.astype(qt), ((0, 0), (0, pad_m)))
     safe_ids = jnp.clip(ids, 0, N - 1).astype(jnp.int32)
     return gather_dist_pallas(v, safe_ids, q, squared=squared,
                               interpret=interpret)

@@ -1,0 +1,4 @@
+from .ops import padded_operands, pq_adc
+from .ref import pq_adc_ref
+
+__all__ = ["pq_adc", "pq_adc_ref", "padded_operands"]

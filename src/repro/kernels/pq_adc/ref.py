@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the PQ gather + LUT-ADC distance kernel.
+
+Operates on the kernel's padded operand layout (``ops.padded_operands``)
+with the kernel's exact formulation — squared-diff matmul against the
+subspace selector for the LUT, one-hot masked sum for the per-row
+accumulate — so interpret-mode parity is bitwise, matching the house
+``gather_dist_q`` test idiom.  The mathematical identity (ADC l2 ==
+exact l2 to the decoded vector) is pinned separately in the tests via
+``quant.pq.decode``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("squared",))
+def pq_adc_ref(codes: jax.Array, cb2: jax.Array, sel: jax.Array,
+               ids: jax.Array, queries: jax.Array, squared: bool = False):
+    """codes (N, S) uint8, cb2 (256, mp) f32, sel (mp, S) f32, ids (B, d)
+    int32 in [0, N), queries (B, mp) f32 -> (B, d) f32."""
+    K = cb2.shape[0]
+    diff = cb2[None] - queries[:, None, :]                  # (B, 256, mp)
+    lut = jnp.matmul(diff * diff, sel,
+                     preferred_element_type=jnp.float32,
+                     precision=jax.lax.Precision.HIGHEST)   # (B, 256, S)
+    g = codes[ids].astype(jnp.int32)                        # (B, d, S)
+    hit = jnp.arange(K)[None, None, :, None] == g[:, :, None, :]
+    vals = jnp.where(hit, lut[:, None], 0.0)                # (B, d, 256, S)
+    d2 = jnp.maximum(jnp.sum(vals, axis=(2, 3)), 0.0)
+    return d2 if squared else jnp.sqrt(d2)

@@ -105,14 +105,17 @@ def main() -> None:
 
     ap.add_argument("--preset", default=None, choices=sorted(QUANT_PRESETS),
                     help="named store preset from configs/deg.py "
-                    "(sets --codec/--rerank-k)")
+                    "(sets --codec/--rerank-k/--eps)")
     ap.add_argument("--codec", default="float32",
-                    choices=("float32", "fp16", "sq8"),
+                    choices=("float32", "fp16", "sq8", "pq"),
                     help="vector store the beam traverses (compressed "
                     "codecs run the two-stage exact-rerank search)")
     ap.add_argument("--rerank-k", type=int, default=0,
                     help="exact-rerank width for compressed codecs "
                     "(0 = auto 4*k)")
+    ap.add_argument("--eps", type=float, default=0.1,
+                    help="beam exploration slack (pq presets widen this — "
+                    "ADC distances distort the stopping rule)")
     from repro.configs.deg import SEARCH_PRESETS, SLO_PRESETS
 
     ap.add_argument("--engine", default="sync", choices=("sync", "async"),
@@ -191,6 +194,8 @@ def main() -> None:
     if args.preset:
         preset = QUANT_PRESETS[args.preset]
         args.codec, args.rerank_k = preset.codec, preset.rerank_k
+        if preset.eps is not None:
+            args.eps = preset.eps
 
     from repro import obs
     from repro.core.build import DEGIndex, DEGParams, build_deg
@@ -316,7 +321,8 @@ def main() -> None:
             refine_thread.start()
             print(f"refine: {args.refine_while_serving} iterations per "
                   f"background tick, republishing each tick")
-        aeng = AsyncQueryEngine(idx, k=args.k, codec=args.codec,
+        aeng = AsyncQueryEngine(idx, k=args.k, eps=args.eps,
+                                codec=args.codec,
                                 rerank_k=args.rerank_k or None,
                                 preset=args.search_preset, slo=args.slo,
                                 max_batch=args.batch,
@@ -421,7 +427,7 @@ def main() -> None:
                   f"(n={idx.n}; warm-start with --index)")
         return
 
-    engine = QueryEngine(idx, k=args.k, max_batch=args.batch,
+    engine = QueryEngine(idx, k=args.k, eps=args.eps, max_batch=args.batch,
                          refine_budget=args.refine_budget,
                          codec=args.codec,
                          rerank_k=args.rerank_k or None,

@@ -56,10 +56,13 @@ def index_sections(index) -> tuple[dict, dict]:
         sections["pending"] = {"data": np.stack(index._pending).astype(
             np.float32)}
     for codec, store in index._stores.items():
-        sections[f"store_{codec}"] = {
+        sec = {
             "data": np.asarray(store.data[:n]),
             "scale": np.asarray(store.scale, np.float32),
         }
+        if store.codebooks is not None:      # pq: shared k-means codebooks
+            sec["codebooks"] = np.asarray(store.codebooks, np.float32)
+        sections[f"store_{codec}"] = sec
     payload = {
         "dim": int(index.dim),
         "capacity": int(index.capacity),
@@ -101,11 +104,15 @@ def restore_into(index, payload: dict, sections: dict) -> None:
                       if "pending" in sections else [])
     for codec in payload["stores"]:
         s = sections[f"store_{codec}"]
-        data = np.zeros((index.capacity, index.dim), dtype=s["data"].dtype)
+        # row width comes from the section, not index.dim — pq rows hold
+        # m_sub code bytes, not dim elements
+        data = np.zeros((index.capacity,) + s["data"].shape[1:],
+                        dtype=s["data"].dtype)
         data[:n] = s["data"]
+        books = (jnp.asarray(s["codebooks"]) if "codebooks" in s else None)
         index._stores[codec] = VectorStore(
             data=jnp.asarray(data), scale=jnp.asarray(s["scale"]),
-            codec=codec)
+            codec=codec, codebooks=books)
     rng = np.random.default_rng()
     rng.bit_generator.state = payload["rng_state"]
     index._rng = rng

@@ -1,7 +1,8 @@
+from . import pq
 from .codec import (CODECS, calibrate_sq8_scale, sq8_decode, sq8_encode)
 from .store import VectorStore, as_store, make_store
 
 __all__ = [
     "CODECS", "VectorStore", "as_store", "calibrate_sq8_scale",
-    "make_store", "sq8_decode", "sq8_encode",
+    "make_store", "pq", "sq8_decode", "sq8_encode",
 ]

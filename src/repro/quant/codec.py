@@ -14,6 +14,13 @@ indexed data, never retrain), this module provides the *codec* layer:
 * ``fp16`` — IEEE half precision, a 2x codec with no calibration state.
 * ``float32`` — the identity codec (the exact store; decode is a no-op so
   the float path stays bit-identical to the pre-quantization engine).
+* ``pq`` — product quantization (``repro.quant.pq``): per-subspace
+  256-centroid k-means codebooks, one uint8 code byte per subspace —
+  ``n_subspaces(dim)`` bytes per row plus a shared ``256 * dim * 4``-byte
+  codebook.  Stateful (codebooks, not a scale vector), so its
+  encode/decode live in :mod:`repro.quant.pq` and are wired up by
+  :class:`repro.quant.store.VectorStore`; this module only carries the
+  registry entry and the byte accounting.
 
 Codecs are deliberately stateless functions over ``(data, scale)`` pairs;
 :mod:`repro.quant.store` packages them with the arrays as a pytree the beam
@@ -26,11 +33,13 @@ import jax.numpy as jnp
 
 Array = jax.Array
 
-#: codec name -> (storage dtype, bytes per element)
+#: codec name -> (storage dtype, bytes per element); pq's "element" is one
+#: subspace code byte, not one dimension — see :func:`bytes_per_row`
 CODECS = {
     "float32": (jnp.float32, 4),
     "fp16": (jnp.float16, 2),
     "sq8": (jnp.int8, 1),
+    "pq": (jnp.uint8, 1),
 }
 
 
@@ -63,6 +72,9 @@ def encode(codec: str, vectors: Array, scale: Array) -> Array:
         return vectors.astype(jnp.float16)
     if codec == "sq8":
         return sq8_encode(vectors, scale)
+    if codec == "pq":
+        raise ValueError("pq is codebook-stateful; encode via "
+                         "repro.quant.make_store / repro.quant.pq")
     raise ValueError(f"unknown codec {codec!r} (have {sorted(CODECS)})")
 
 
@@ -76,23 +88,36 @@ def decode(codec: str, data: Array, scale: Array) -> Array:
         return data.astype(jnp.float32)
     if codec == "sq8":
         return sq8_decode(data, scale)
+    if codec == "pq":
+        raise ValueError("pq is codebook-stateful; decode via "
+                         "VectorStore.decode / repro.quant.pq")
     raise ValueError(f"unknown codec {codec!r} (have {sorted(CODECS)})")
 
 
 def bytes_per_row(codec: str, dim: int) -> int:
-    """Bytes of one stored row (the per-dimension sq8 scale vector is shared
-    by all rows and charged to the store, not the row)."""
+    """Bytes of one stored row (shared calibration state — sq8's scale
+    vector, pq's codebooks — is charged to the store, not the row)."""
     if codec not in CODECS:
         raise ValueError(f"unknown codec {codec!r} (have {sorted(CODECS)})")
+    if codec == "pq":
+        from . import pq
+
+        return pq.n_subspaces(dim)          # one uint8 code per subspace
     return CODECS[codec][1] * dim
 
 
 def store_bytes(codec: str, n_rows: int, dim: int) -> int:
     """Total traversal-store bytes for ``n_rows`` rows: rows plus codec
-    calibration state (sq8's shared per-dimension scale vector).  The ONE
-    byte-accounting rule — VectorStore.memory_bytes, DEGIndex.memory_stats
-    and ShardedDEG.memory_stats all delegate here."""
+    calibration state (sq8's shared per-dimension scale vector; pq's
+    shared ``(m_sub, 256, dsub)`` float32 codebooks = ``256 * dim * 4``
+    bytes).  The ONE byte-accounting rule — VectorStore.memory_bytes,
+    DEGIndex.memory_stats and ShardedDEG.memory_stats all delegate
+    here."""
     total = n_rows * bytes_per_row(codec, dim)
     if codec == "sq8":
         total += dim * 4
+    if codec == "pq":
+        from . import pq
+
+        total += pq.PQ_K * dim * 4
     return total

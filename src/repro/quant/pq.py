@@ -1,0 +1,136 @@
+"""Product quantization: per-subspace k-means codebooks + uint8 codes.
+
+SQ8 is a 4x codec; product quantization is the 8-32x one.  A row of
+dimension ``m`` is split into ``m_sub`` contiguous subspaces of
+``subspace_dim(m)`` dims each; every subspace gets its own 256-centroid
+codebook fit (post-training, over the *live* rows only) with plain
+deterministic Lloyd k-means, and a row is stored as ``m_sub`` uint8
+centroid indices — one byte per subspace vs four bytes per dimension.
+
+Asymmetric distance computation (ADC) is what makes the codec searchable
+without decoding: for the l2 metric,
+
+    ||q - decode(x)||^2  =  sum_s ||q_s - C[s, code_s(x)]||^2,
+
+so a per-query LUT of the ``(m_sub, 256)`` squared sub-distances (built
+once per query) turns every gathered code row into ``m_sub`` table
+lookups + adds.  ``kernels/pq_adc`` fuses the gather with that LUT scan
+in VMEM; :func:`adc_lut` is the jnp form the reference path uses.
+
+Like the sq8 recipe, everything here is calibrate-after-build: codebooks
+are fit from the indexed data and never retrained.  The fit is host-side
+numpy, seeded, and fully deterministic (ties broken by ``argmin``'s
+first-minimum rule; empty clusters keep their previous centroid), so a
+snapshot round-trip or a re-encode under the same seed is bit-stable.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+#: centroids per subspace — one uint8 code byte addresses the full book
+PQ_K = 256
+
+
+def subspace_dim(dim: int) -> int:
+    """Dims per PQ subspace: the largest of 8/4/2/1 dividing ``dim``.
+
+    Preferring wide (8-dim) subspaces keeps the code small — ``dim / 8``
+    bytes per row, >= 8x vs float32 once the shared codebook amortizes —
+    while 256 centroids per 8-dim subspace is the classic PQ operating
+    point (Jegou et al.'s ``m = dim/8, k* = 256``).
+    """
+    if dim < 1:
+        raise ValueError(f"dim must be >= 1, got {dim}")
+    for cand in (8, 4, 2, 1):
+        if dim % cand == 0:
+            return cand
+    raise AssertionError("unreachable: 1 divides every dim")
+
+
+def n_subspaces(dim: int) -> int:
+    """Code bytes per row (= number of subspaces) for a ``dim``-dim store."""
+    return dim // subspace_dim(dim)
+
+
+def fit(vectors, n=None, *, seed: int = 0, iters: int = 25) -> np.ndarray:
+    """Fit per-subspace k-means codebooks over the live rows.
+
+    vectors (capacity, dim); ``n`` restricts training to the first ``n``
+    rows (the live vertices — capacity padding must not pull centroids
+    toward zero).  Returns ``(m_sub, 256, dsub)`` float32 codebooks.
+
+    Deterministic Lloyd: init = a seeded permutation of the training rows
+    (tiled when fewer than 256 rows — duplicated centroids are harmless,
+    assignment ties resolve to the first), then ``iters`` rounds of
+    assign / recenter with empty clusters keeping their old centroid.
+    """
+    x = np.asarray(vectors, np.float32)
+    rows = x if n is None else x[: int(n)]
+    if rows.shape[0] < 1:
+        raise ValueError("pq.fit needs at least one live row")
+    dim = x.shape[1]
+    dsub = subspace_dim(dim)
+    m_sub = dim // dsub
+    rng = np.random.default_rng(seed)
+    books = np.empty((m_sub, PQ_K, dsub), np.float32)
+    for s in range(m_sub):
+        xs = np.ascontiguousarray(rows[:, s * dsub: (s + 1) * dsub])
+        init = np.resize(rng.permutation(xs.shape[0]), PQ_K)
+        cent = xs[init].copy()
+        xn = np.sum(xs * xs, axis=1)
+        prev = None
+        for _ in range(iters):
+            cn = np.sum(cent * cent, axis=1)
+            d2 = xn[:, None] - 2.0 * (xs @ cent.T) + cn[None, :]
+            assign = np.argmin(d2, axis=1)
+            if prev is not None and np.array_equal(assign, prev):
+                break
+            prev = assign
+            counts = np.bincount(assign, minlength=PQ_K)
+            sums = np.zeros((PQ_K, dsub), np.float64)
+            np.add.at(sums, assign, xs)
+            nonempty = counts > 0
+            cent[nonempty] = (sums[nonempty]
+                              / counts[nonempty, None]).astype(np.float32)
+        books[s] = cent
+    return books
+
+
+def encode(vectors, codebooks) -> Array:
+    """Nearest-centroid codes: (rows, dim) -> (rows, m_sub) uint8."""
+    cb = jnp.asarray(codebooks, jnp.float32)
+    m_sub, _, dsub = cb.shape
+    v = jnp.asarray(vectors, jnp.float32)
+    sub = v.reshape(v.shape[0], m_sub, dsub)
+    sn = jnp.sum(sub * sub, axis=-1)[:, :, None]          # (n, m_sub, 1)
+    cn = jnp.sum(cb * cb, axis=-1)[None]                  # (1, m_sub, 256)
+    cross = jnp.einsum("nsd,skd->nsk", sub, cb)
+    d2 = sn - 2.0 * cross + cn
+    return jnp.argmin(d2, axis=-1).astype(jnp.uint8)
+
+
+def decode(codes: Array, codebooks: Array) -> Array:
+    """Centroid lookup: (..., m_sub) uint8 -> (..., dim) float32."""
+    cb = jnp.asarray(codebooks, jnp.float32)
+    m_sub, _, dsub = cb.shape
+    g = cb[jnp.arange(m_sub), codes.astype(jnp.int32)]    # (..., m_sub, dsub)
+    return g.reshape(codes.shape[:-1] + (m_sub * dsub,))
+
+
+def adc_lut(queries: Array, codebooks: Array) -> Array:
+    """Per-query squared sub-distance tables: (B, dim) -> (B, m_sub, 256).
+
+    ``lut[b, s, c] = ||q_b[s] - C[s, c]||^2`` — summing ``m_sub`` entries
+    per code row reproduces the exact squared l2 to the decoded vector.
+    """
+    cb = jnp.asarray(codebooks, jnp.float32)
+    m_sub, _, dsub = cb.shape
+    q = jnp.asarray(queries, jnp.float32)
+    qs = q.reshape(q.shape[0], m_sub, dsub)
+    diff = qs[:, :, None, :] - cb[None]                   # (B, m_sub, 256, d)
+    return jnp.sum(diff * diff, axis=-1)

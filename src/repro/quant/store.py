@@ -3,19 +3,26 @@
 :class:`VectorStore` sits between ``core/graph.py`` (which owns topology)
 and ``core/beam.py`` (which owns traversal): the engine asks the store for
 seed/neighbor distances and never touches a raw ``(n, m)`` array again.
-It is a registered-dataclass pytree — ``data``/``scale`` are leaves, the
-codec name is static — so it passes through ``jax.jit`` / ``shard_map``
-boundaries exactly like :class:`repro.core.graph.DEGraph` does.
+It is a registered-dataclass pytree — ``data``/``scale``/``codebooks`` are
+leaves, the codec name is static — so it passes through ``jax.jit`` /
+``shard_map`` boundaries exactly like :class:`repro.core.graph.DEGraph`
+does.
 
-Three views behind one interface:
+Four views behind one interface:
 
 * ``float32`` — the exact store.  ``decode`` is the identity and
   ``neighbor_distances`` lowers to the *same ops* as the pre-quantization
   engine, so this path stays bit-identical (pinned by the golden fixture).
-* ``fp16`` — half-precision rows, upcast in the gather.
+* ``fp16`` — half-precision rows, gathered at half width and upcast
+  per-tile inside the kernel.
 * ``sq8`` — int8 codes + per-dimension scale; the hot gather path runs the
   fused ``kernels/gather_dist_q`` gather→dequant→distance kernel (Pallas on
   TPU, jnp elsewhere).
+* ``pq`` — product-quantized uint8 codes (one byte per subspace) + shared
+  ``(m_sub, 256, dsub)`` codebooks; the hot path runs the fused
+  ``kernels/pq_adc`` LUT-ADC kernel, which never decodes — for l2 the
+  per-query sub-distance table reproduces the exact distance to the
+  decoded vector (``quant.pq``).
 
 The store deliberately does NOT hold the exact copy used by two-stage
 rerank — that stays with the index owner (host / cold path); see
@@ -24,11 +31,13 @@ ARCHITECTURE.md ("Quantized store layering").
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from . import codec as C
+from . import pq as PQ
 
 Array = jax.Array
 
@@ -38,9 +47,11 @@ Array = jax.Array
 class VectorStore:
     """Encoded vector rows + dequant state behind one distance interface."""
 
-    data: Array    # (capacity, m) — float32 / float16 / int8 per codec
+    data: Array    # (capacity, m) f32/f16/int8 — or (capacity, m_sub) uint8
     scale: Array   # (m,) float32 — sq8 dequant scale (ones otherwise)
     codec: str = dataclasses.field(metadata=dict(static=True))
+    #: (m_sub, 256, dsub) float32 k-means codebooks — pq only, else None
+    codebooks: Optional[Array] = None
 
     @property
     def capacity(self) -> int:
@@ -48,6 +59,9 @@ class VectorStore:
 
     @property
     def dim(self) -> int:
+        if self.codec == "pq":      # data rows hold m_sub code bytes, not m
+            m_sub, _, dsub = self.codebooks.shape
+            return m_sub * dsub
         return self.data.shape[1]
 
     @property
@@ -55,8 +69,18 @@ class VectorStore:
         return self.codec == "float32"
 
     def decode(self, ids: Array) -> Array:
-        """Gather rows by id and decode to float32 (identity for float32)."""
-        return C.decode(self.codec, self.data[ids], self.scale)
+        """Gather rows by id and decode to float32 (identity for float32).
+
+        Ids are clamped to ``[0, capacity)`` the way ``gather_dist``'s
+        ``safe_ids`` are: callers mask INVALID (-1) lanes *after* the
+        distance, and an unclipped ``-1`` would silently wrap to the last
+        row and feed a junk vector into the jnp distance path and the
+        exact rerank.
+        """
+        safe = jnp.clip(ids, 0, self.capacity - 1)
+        if self.codec == "pq":
+            return PQ.decode(self.data[safe], self.codebooks)
+        return C.decode(self.codec, self.data[safe], self.scale)
 
     def neighbor_distances(self, queries: Array, nbr_ids: Array,
                            metric_name: str, backend: str = "jnp") -> Array:
@@ -64,8 +88,11 @@ class VectorStore:
 
         The one call the beam engine makes per hop.  ``backend='pallas'``
         routes l2 to the fused gather kernels (``gather_dist`` for float
-        codecs, ``gather_dist_q`` for sq8); everything else takes the jnp
-        gather+pair path, which for float32 is the exact pre-store program.
+        codecs, ``gather_dist_q`` for sq8, ``pq_adc`` for pq — the last
+        never decodes: it scans gathered code bytes against a per-query
+        LUT built once in VMEM); everything else takes the jnp
+        gather+pair path, which for float32 is the exact pre-store
+        program.
         """
         from repro.core.distances import get_metric
 
@@ -75,6 +102,11 @@ class VectorStore:
 
                 return gdq_ops.gather_dist_q(self.data, self.scale, nbr_ids,
                                              queries)
+            if self.codec == "pq":
+                from repro.kernels.pq_adc import ops as adc_ops
+
+                return adc_ops.pq_adc(self.data, self.codebooks, nbr_ids,
+                                      queries)
             from repro.kernels.gather_dist import ops as gd_ops
 
             return gd_ops.gather_dist(self.data, nbr_ids, queries)
@@ -90,11 +122,23 @@ class VectorStore:
         return C.store_bytes(self.codec, rows, self.dim)
 
 
-def make_store(vectors: Array, codec: str = "float32", n=None) -> VectorStore:
-    """Encode ``vectors`` under ``codec``; sq8 calibrates its per-dimension
-    scale from the first ``n`` rows (the live vertices)."""
+def make_store(vectors: Array, codec: str = "float32", *,
+               n: Optional[int]) -> VectorStore:
+    """Encode ``vectors`` under ``codec``.
+
+    ``n`` is the live-row count and is deliberately a *required* keyword:
+    calibrated codecs (sq8 scales, pq codebooks) must see only the live
+    vertices — calibrating over capacity-padding rows silently skews the
+    sq8 range and pulls pq centroids toward zero.  Pass ``n=None``
+    explicitly only when every row is live.
+    """
     vectors = jnp.asarray(vectors)
     m = vectors.shape[1]
+    if codec == "pq":
+        books = jnp.asarray(PQ.fit(vectors, n))
+        return VectorStore(data=PQ.encode(vectors, books),
+                           scale=jnp.ones((m,), jnp.float32),
+                           codec=codec, codebooks=books)
     if codec == "sq8":
         scale = C.calibrate_sq8_scale(vectors, n)
     else:

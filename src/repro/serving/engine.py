@@ -14,11 +14,11 @@ a :class:`repro.distributed.index.ShardedDEG` (mesh) with:
 * **continuous refinement**: ``refine_budget`` edge-optimization iterations
   (Alg. 5) run between flushes — the paper's central idea, as a background
   serving-loop activity;
-* **quantized serving**: ``codec="sq8"|"fp16"`` makes every flush traverse
-  the compressed vector store (two-stage search: exact rerank of
+* **quantized serving**: ``codec="sq8"|"fp16"|"pq"`` makes every flush
+  traverse the compressed vector store (two-stage search: exact rerank of
   ``rerank_k`` candidates restores recall) — the paper's predictable-index-
-  size claim extended to a ~4x smaller hot store; ``memory_stats()``
-  reports the footprint.
+  size claim extended to a ~4x (sq8) or >= 8x (pq, LUT-based ADC
+  traversal) smaller hot store; ``memory_stats()`` reports the footprint.
 """
 from __future__ import annotations
 
@@ -63,10 +63,11 @@ class QueryEngine:
                  trace_sample: float = 0.0,
                  query_log: Optional[QueryLogWriter] = None):
         """``codec`` picks the vector store the beam traverses for THIS
-        engine ("float32" exact | "fp16" | "sq8"); compressed codecs run
-        the two-stage search (exact rerank of ``rerank_k`` candidates,
-        default ``4 * k``).  Engines over the same index may choose
-        different codecs — the index caches one store per codec.
+        engine ("float32" exact | "fp16" | "sq8" | "pq"); compressed
+        codecs run the two-stage search (exact rerank of ``rerank_k``
+        candidates, default ``4 * k`` — pq wants a wider stage, see
+        ``configs.deg.QUANT_PRESETS``).  Engines over the same index may
+        choose different codecs — the index caches one store per codec.
 
         ``expand_width`` / ``visited_size`` / ``hop_backend`` configure the
         multi-expansion engine for this engine's flushes (None = inherit

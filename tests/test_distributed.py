@@ -212,6 +212,33 @@ def test_sharded_deg_quantized_two_stage(mesh):
     assert (ids_d % 2 == 1).all()
 
 
+def test_sharded_deg_pq_two_stage(mesh):
+    """PQ shard-local ADC traversal + exact rerank: per-shard codebooks
+    ride the shard axis into the mapped search, and the exact-rerank
+    invariant (reported distances == float distances) still holds."""
+    rng = np.random.default_rng(13)
+    vecs = rng.normal(size=(600, 16)).astype(np.float32)
+    sd = build_sharded_deg(vecs, 2, DEGParams(degree=8, k_ext=16),
+                           wave_size=8)
+    qs = vecs[:48] + 0.01 * rng.normal(size=(48, 16)).astype(np.float32)
+    d2 = ((qs[:, None] - vecs[None]) ** 2).sum(-1)
+    gt = np.argsort(d2, axis=1)[:, :5]
+
+    ids_f, _ = sd.search(mesh, qs, k=5)
+    rec_f = np.mean([len(set(ids_f[i]) & set(gt[i])) / 5 for i in range(48)])
+
+    pq = sd.quantize("pq")
+    assert pq.codebooks is not None
+    assert pq.codebooks.shape[0] == 2          # one codebook per shard
+    ids_q, dists_q = pq.search(mesh, qs, k=5, rerank_k=40)
+    rec_q = np.mean([len(set(ids_q[i]) & set(gt[i])) / 5 for i in range(48)])
+    assert rec_q >= rec_f - 0.05
+    for i in range(48):
+        valid = ids_q[i] >= 0
+        np.testing.assert_allclose(
+            dists_q[i][valid], np.sqrt(d2[i][ids_q[i][valid]]), rtol=1e-5)
+
+
 def test_lm_sharded_train_step_runs(mesh):
     """End-to-end: reduced LM config, real data, production sharding rules,
     one jitted train step executed on the 2x2 debug mesh."""

@@ -65,10 +65,11 @@ def built():
     idx, vecs = _mk(refine=20)
     idx.store_for("sq8")
     idx.store_for("fp16")
+    idx.store_for("pq")
     return idx, vecs
 
 
-@pytest.mark.parametrize("codec", [None, "fp16", "sq8"])
+@pytest.mark.parametrize("codec", [None, "fp16", "sq8", "pq"])
 def test_roundtrip_search_identical(built, tmp_path, codec):
     idx, _ = built
     p = tmp_path / "i.npz"
@@ -135,12 +136,18 @@ def test_quant_store_restored_not_reencoded(built, tmp_path):
     p = tmp_path / "i.npz"
     idx.save(p)
     twin = DEGIndex.load(p)
-    assert set(twin._stores) == {"fp16", "sq8"}
+    assert set(twin._stores) == {"fp16", "sq8", "pq"}
     n = idx.n
     np.testing.assert_array_equal(np.asarray(idx._stores["sq8"].data[:n]),
                                   np.asarray(twin._stores["sq8"].data[:n]))
     np.testing.assert_array_equal(np.asarray(idx._stores["sq8"].scale),
                                   np.asarray(twin._stores["sq8"].scale))
+    # pq: codes AND codebooks must come back verbatim (a re-fit would
+    # re-run k-means over the restored buffer and may permute centroids)
+    np.testing.assert_array_equal(np.asarray(idx._stores["pq"].data[:n]),
+                                  np.asarray(twin._stores["pq"].data[:n]))
+    np.testing.assert_array_equal(np.asarray(idx._stores["pq"].codebooks),
+                                  np.asarray(twin._stores["pq"].codebooks))
 
 
 def test_build_counters_and_medoid_roundtrip(built, tmp_path):

@@ -11,7 +11,7 @@ from repro.core.metrics import recall_at_k
 from repro.core.search import exact_rerank
 from repro.core.graph import INVALID
 from repro.kernels.gather_dist_q import gather_dist_q, gather_dist_q_ref
-from repro.quant import (calibrate_sq8_scale, make_store, sq8_decode,
+from repro.quant import (calibrate_sq8_scale, make_store, pq, sq8_decode,
                          sq8_encode)
 from repro.quant.store import as_store
 
@@ -53,18 +53,23 @@ def test_store_float32_is_identity_view():
 def test_store_memory_bytes():
     rng = np.random.default_rng(1)
     v = rng.normal(size=(100, 32)).astype(np.float32)
-    f32 = make_store(v, "float32").memory_bytes(100)
-    f16 = make_store(v, "fp16").memory_bytes(100)
-    sq8 = make_store(v, "sq8").memory_bytes(100)
+    f32 = make_store(v, "float32", n=None).memory_bytes(100)
+    f16 = make_store(v, "fp16", n=None).memory_bytes(100)
+    sq8 = make_store(v, "sq8", n=None).memory_bytes(100)
+    pq = make_store(v, "pq", n=None).memory_bytes(100)
     assert f32 == 100 * 32 * 4
     assert f16 == f32 // 2
     assert sq8 == 100 * 32 + 32 * 4            # codes + shared scale vector
     assert f32 / sq8 >= 3.5
+    # pq: one byte per 8-dim subspace + the shared 256-centroid codebooks
+    assert pq == 100 * 4 + 256 * 32 * 4
+    # the >=8x tier needs enough rows to amortize the codebook
+    assert 4000 * 32 * 4 / (4000 * 4 + 256 * 32 * 4) >= 8.0
 
 
 def test_make_store_rejects_unknown_codec():
     with pytest.raises(ValueError, match="unknown codec"):
-        make_store(np.zeros((4, 2), np.float32), "pq4")
+        make_store(np.zeros((4, 2), np.float32), "pq4", n=None)
 
 
 # ------------------------------------------------------- gather_dist_q ------
@@ -79,7 +84,7 @@ def test_gather_dist_q_jnp_path_matches_ref(N, m, B, d):
     v = rng.normal(size=(N, m)).astype(np.float32)
     q = jnp.asarray(rng.normal(size=(B, m)).astype(np.float32))
     ids = jnp.asarray(rng.integers(0, N, size=(B, d)), jnp.int32)
-    store = make_store(v, "sq8")
+    store = make_store(v, "sq8", n=None)
     got = store.neighbor_distances(q, ids, "l2", backend="jnp")
     ref = gather_dist_q_ref(store.data, store.scale, ids, q)
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-5,
@@ -100,7 +105,7 @@ def test_gather_dist_q_pallas_matches_jnp_exactly(N, m, B, d):
     v = rng.normal(size=(N, m)).astype(np.float32)
     q = jnp.asarray(rng.normal(size=(B, m)).astype(np.float32))
     ids = jnp.asarray(rng.integers(0, N, size=(B, d)), jnp.int32)
-    store = make_store(v, "sq8")
+    store = make_store(v, "sq8", n=None)
     pall = gather_dist_q(store.data, store.scale, ids, q, interpret=True)
     pad = (-m) % 128                       # the ops-layer padding, verbatim
     oracle = gather_dist_q_ref(
@@ -112,7 +117,8 @@ def test_gather_dist_q_pallas_matches_jnp_exactly(N, m, B, d):
 
 def test_gather_dist_q_clamps_invalid():
     rng = np.random.default_rng(5)
-    store = make_store(rng.normal(size=(32, 16)).astype(np.float32), "sq8")
+    store = make_store(rng.normal(size=(32, 16)).astype(np.float32), "sq8",
+                       n=None)
     q = jnp.asarray(rng.normal(size=(2, 16)).astype(np.float32))
     ids = jnp.asarray(np.array([[0, -1, 5], [31, -1, -1]]), jnp.int32)
     out = np.asarray(gather_dist_q(store.data, store.scale, ids, q,
@@ -122,7 +128,8 @@ def test_gather_dist_q_clamps_invalid():
 
 def test_gather_dist_q_squared_mode():
     rng = np.random.default_rng(6)
-    store = make_store(rng.normal(size=(64, 24)).astype(np.float32), "sq8")
+    store = make_store(rng.normal(size=(64, 24)).astype(np.float32), "sq8",
+                       n=None)
     q = jnp.asarray(rng.normal(size=(3, 24)).astype(np.float32))
     ids = jnp.asarray(rng.integers(0, 64, size=(3, 8)), jnp.int32)
     d2 = gather_dist_q(store.data, store.scale, ids, q, squared=True,
@@ -223,3 +230,189 @@ def test_engine_rejects_unknown_codec(small_index):
 
     with pytest.raises(ValueError, match="unknown codec"):
         QueryEngine(idx, codec="pq4")
+
+
+# ------------------------------------------------------------------ pq ------
+def test_make_store_requires_live_count():
+    """n is a required kwarg: silent calibration over capacity padding was
+    the bug this API shape prevents."""
+    with pytest.raises(TypeError):
+        make_store(np.zeros((4, 2), np.float32), "sq8")
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 200), dim=st.sampled_from([4, 8, 16, 24]),
+       seed=st.integers(0, 99), spread=st.floats(0.1, 50.0))
+def test_pq_reconstruction_exact_when_rows_fit_codebook(n, dim, seed, spread):
+    """The pq analogue of the sq8 scale/2 bound: with <= 256 training rows
+    every row seeds (and keeps) its own centroid, so decode(encode(x))
+    round-trips exactly up to float noise."""
+    rng = np.random.default_rng(seed)
+    x = (spread * rng.normal(size=(n, dim))).astype(np.float32)
+    books = pq.fit(x, None, seed=seed)
+    back = np.asarray(pq.decode(pq.encode(x, books), books))
+    np.testing.assert_allclose(back, x, atol=1e-4 * spread, rtol=1e-5)
+
+
+def test_pq_fit_respects_n():
+    """Rows past n (capacity padding) must not pull centroids: a store
+    calibrated on 2 live rows reconstructs them exactly even when the
+    padding rows scream."""
+    x = np.ones((4, 8), np.float32)
+    x[0] = 2.0
+    x[2:] = 1000.0                     # garbage rows beyond the live set
+    books = pq.fit(x, 2, seed=0)
+    back = np.asarray(pq.decode(pq.encode(x[:2], books), books))
+    np.testing.assert_allclose(back, x[:2], atol=1e-5)
+
+
+def test_pq_adc_lut_identity():
+    """ADC is exact for l2: summing the per-subspace LUT entries of a code
+    row equals the squared distance to the decoded vector."""
+    rng = np.random.default_rng(11)
+    x = rng.normal(size=(300, 16)).astype(np.float32)
+    q = rng.normal(size=(5, 16)).astype(np.float32)
+    books = pq.fit(x, None, seed=1)
+    codes = pq.encode(x, books)
+    lut = np.asarray(pq.adc_lut(jnp.asarray(q), books))     # (B, m_sub, 256)
+    dec = np.asarray(pq.decode(codes, books))               # (n, 16)
+    c = np.asarray(codes).astype(int)
+    for b in range(5):
+        adc = lut[b, np.arange(c.shape[1])[None, :], c].sum(axis=1)
+        exact = ((dec - q[b][None, :]) ** 2).sum(axis=1)
+        np.testing.assert_allclose(adc, exact, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("N,dim,B,d", [
+    (256, 32, 4, 16),
+    (100, 24, 2, 7),       # dsub=8, m_sub=3
+    (512, 8, 8, 30),       # single subspace
+])
+def test_pq_adc_pallas_matches_jnp_exactly(N, dim, B, d):
+    """Kernel (interpret mode) vs the jnp oracle over the SAME padded
+    operands (ops.padded_operands): bitwise identical floats — the house
+    bar every fused kernel meets."""
+    from repro.kernels.pq_adc import padded_operands, pq_adc, pq_adc_ref
+
+    rng = np.random.default_rng(5 * N + dim)
+    v = rng.normal(size=(N, dim)).astype(np.float32)
+    q = jnp.asarray(rng.normal(size=(B, dim)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, N, size=(B, d)), jnp.int32)
+    store = make_store(v, "pq", n=None)
+    pall = pq_adc(store.data, store.codebooks, ids, q, interpret=True)
+    c, cb2, sel, qp = padded_operands(store.data, store.codebooks, q)
+    oracle = pq_adc_ref(c, cb2, sel, ids, qp)
+    np.testing.assert_array_equal(np.asarray(pall), np.asarray(oracle))
+
+
+def test_pq_adc_matches_decoded_exact_l2():
+    """ADC distances == exact l2 against the decoded rows (the identity the
+    two-stage search relies on), through the store's pallas route."""
+    rng = np.random.default_rng(13)
+    v = rng.normal(size=(200, 32)).astype(np.float32)
+    q = jnp.asarray(rng.normal(size=(4, 32)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, 200, size=(4, 12)), jnp.int32)
+    store = make_store(v, "pq", n=None)
+    got = np.asarray(store.neighbor_distances(q, ids, "l2",
+                                              backend="pallas"))
+    dec = np.asarray(store.decode(ids))
+    exact = np.sqrt(((dec - np.asarray(q)[:, None, :]) ** 2).sum(-1))
+    np.testing.assert_allclose(got, exact, rtol=1e-4, atol=1e-4)
+    # and the jnp route agrees with the pallas route
+    jnp_route = np.asarray(store.neighbor_distances(q, ids, "l2",
+                                                    backend="jnp"))
+    np.testing.assert_allclose(got, jnp_route, rtol=1e-4, atol=1e-4)
+
+
+def test_pq_adc_clamps_invalid():
+    rng = np.random.default_rng(14)
+    store = make_store(rng.normal(size=(32, 16)).astype(np.float32), "pq",
+                       n=None)
+    q = jnp.asarray(rng.normal(size=(2, 16)).astype(np.float32))
+    from repro.kernels.pq_adc import pq_adc
+
+    ids = jnp.asarray(np.array([[0, -1, 5], [31, -1, -1]]), jnp.int32)
+    out = np.asarray(pq_adc(store.data, store.codebooks, ids, q,
+                            interpret=True))
+    assert np.isfinite(out).all()
+    # clamped sentinel lanes read row 0, same as explicit id 0
+    ref = np.asarray(pq_adc(store.data, store.codebooks,
+                            jnp.zeros_like(ids), q, interpret=True))
+    np.testing.assert_array_equal(out[:, 1], ref[:, 1])
+
+
+def test_pq_adc_squared_mode():
+    rng = np.random.default_rng(15)
+    store = make_store(rng.normal(size=(64, 24)).astype(np.float32), "pq",
+                       n=None)
+    q = jnp.asarray(rng.normal(size=(3, 24)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, 64, size=(3, 8)), jnp.int32)
+    from repro.kernels.pq_adc import pq_adc
+
+    d2 = pq_adc(store.data, store.codebooks, ids, q, squared=True,
+                interpret=True)
+    d = pq_adc(store.data, store.codebooks, ids, q, interpret=True)
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(d) ** 2,
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_two_stage_pq_recall(small_index):
+    """PQ two-stage on the small index: wider exact rerank buys the recall
+    back to within 3% of the exact single-stage path."""
+    idx, qs, gt = small_index
+    base = recall_at_k(np.asarray(idx.search_batch(qs, k=10).ids), gt)
+    pq_rec = recall_at_k(
+        np.asarray(idx.search_batch(qs, k=10, quantized="pq",
+                                    rerank_k=60).ids), gt)
+    assert pq_rec >= base - 0.03
+
+
+# ------------------------------------------------- decode sentinel bug ------
+@pytest.mark.parametrize("codec", ["float32", "fp16", "sq8", "pq"])
+def test_decode_clamps_sentinel_ids(codec):
+    """Regression: an INVALID (-1) id used to wrap to the LAST row and feed
+    a junk vector into the jnp distance path and exact rerank; decode now
+    clamps like gather_dist's safe_ids, so sentinel lanes read row 0."""
+    rng = np.random.default_rng(21)
+    v = rng.normal(size=(50, 16)).astype(np.float32)
+    v[-1] = 1e6                        # poison the wraparound target
+    store = make_store(v, codec, n=None)
+    ids = jnp.asarray([[-1, 3, -1]], jnp.int32)
+    got = np.asarray(store.decode(ids))
+    want = np.asarray(store.decode(jnp.asarray([[0, 3, 0]], jnp.int32)))
+    np.testing.assert_array_equal(got, want)
+    assert np.abs(got).max() < 1e5     # the poisoned last row never leaks
+
+
+def test_sentinel_lanes_do_not_change_jnp_distances():
+    """neighbor_distances on the jnp route: valid lanes are identical
+    whether or not the batch contains -1 sentinel lanes."""
+    rng = np.random.default_rng(22)
+    v = rng.normal(size=(40, 8)).astype(np.float32)
+    q = jnp.asarray(rng.normal(size=(2, 8)).astype(np.float32))
+    store = make_store(v, "sq8", n=None)
+    with_sentinels = jnp.asarray([[5, -1, 7], [1, 2, -1]], jnp.int32)
+    clean = jnp.asarray([[5, 0, 7], [1, 2, 0]], jnp.int32)
+    a = np.asarray(store.neighbor_distances(q, with_sentinels, "l2"))
+    b = np.asarray(store.neighbor_distances(q, clean, "l2"))
+    np.testing.assert_array_equal(a, b)
+
+
+# ------------------------------------------------- fp16 gather width --------
+def test_gather_dist_fp16_halfwidth_parity():
+    """Regression: the fp16 pallas route used to upcast the WHOLE store to
+    f32 every hop.  It now gathers at half width and upcasts per-tile —
+    and because f16 -> f32 is exact, the output is bit-identical to the
+    old upcast-everything program."""
+    from repro.kernels.gather_dist import ops as gd_ops
+
+    rng = np.random.default_rng(23)
+    v16 = jnp.asarray(rng.normal(size=(100, 33)).astype(np.float32),
+                      jnp.float16)
+    q = jnp.asarray(rng.normal(size=(4, 33)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, 100, size=(4, 9)), jnp.int32)
+    new = gd_ops.gather_dist(v16, ids, q, interpret=True)
+    # the old program: upcast the store first, take the float32 route
+    old = gd_ops.gather_dist(v16.astype(jnp.float32), ids, q,
+                             interpret=True)
+    np.testing.assert_array_equal(np.asarray(new), np.asarray(old))
